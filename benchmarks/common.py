@@ -1,0 +1,71 @@
+"""Shared benchmark machinery: trace + simulation cache, CSV emit."""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.params import SchedulerParams
+from repro.fabric.engine import SimResult, simulate
+from repro.traces import fb_like_trace
+
+# default benchmark fabric: FB-like (paper: 526 coflows / 150 ports);
+# --quick shrinks it so the full suite stays minutes on one CPU core.
+FULL = dict(num_coflows=526, num_ports=150, seed=0)
+QUICK = dict(num_coflows=240, num_ports=100, seed=0)
+
+
+@dataclasses.dataclass
+class Bench:
+    quick: bool = True
+    _sims: Dict[Tuple, SimResult] = dataclasses.field(default_factory=dict)
+    _trace_kw: dict = None
+
+    def __post_init__(self):
+        self._trace_kw = QUICK if self.quick else FULL
+
+    def trace(self, **overrides):
+        kw = dict(self._trace_kw)
+        kw.update(overrides)
+        return fb_like_trace(**kw)
+
+    def sim(self, policy: str, params: SchedulerParams | None = None,
+            policy_kwargs: dict | None = None, **trace_overrides
+            ) -> SimResult:
+        params = params or SchedulerParams()
+        key = (policy, params, tuple(sorted((policy_kwargs or {}).items())),
+               tuple(sorted(trace_overrides.items())))
+        if key not in self._sims:
+            t0 = time.perf_counter()
+            self._sims[key] = simulate(self.trace(**trace_overrides),
+                                       policy, params,
+                                       policy_kwargs=policy_kwargs)
+            print(f"#   simulated {policy} "
+                  f"{dict(policy_kwargs or {})} in "
+                  f"{time.perf_counter() - t0:.1f}s", file=sys.stderr)
+        return self._sims[key]
+
+
+def emit(name: str, rows):
+    """CSV rows: list of dicts with consistent keys."""
+    if not rows:
+        print(f"{name},EMPTY")
+        return
+    keys = list(rows[0])
+    print(f"# {name}")
+    print(",".join(["bench"] + keys))
+    for r in rows:
+        print(",".join([name] + [_fmt(r[k]) for k in keys]))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def pctl(x, q):
+    return float(np.nanpercentile(np.asarray(x, float), q))

@@ -1,0 +1,29 @@
+"""Fig. 10: design-component breakdown — A/N, A/N+P/F, full Saath
+(LCoF), each vs Aalo. Paper (FB): 1.13x -> 1.3x -> 1.53x median."""
+from __future__ import annotations
+
+from benchmarks.common import Bench, emit
+from repro.fabric.metrics import percentile_speedup
+
+VARIANTS = [
+    ("A/N", dict(lcof=False, per_flow_threshold=False)),
+    ("A/N+PF", dict(lcof=False, per_flow_threshold=True)),
+    ("SAATH", dict(lcof=True, per_flow_threshold=True)),
+]
+
+
+def run(bench: Bench):
+    base = bench.sim("aalo").table.cct
+    rows = []
+    for name, kw in VARIANTS:
+        cct = bench.sim("saath", policy_kwargs=kw).table.cct
+        s = percentile_speedup(base, cct)
+        rows.append({"variant": name, **s})
+    emit("fig10_breakdown", rows)
+    assert rows[-1]["p50"] >= rows[0]["p50"] * 0.95, (
+        "full SAATH should not lose to A/N-only at p50")
+    return rows
+
+
+if __name__ == "__main__":
+    run(Bench())

@@ -1,0 +1,25 @@
+"""Fig. 11/12: Saath speedup over Aalo per Table-1 bin
+(size <=/> 100MB x width <=/> 10)."""
+from __future__ import annotations
+
+from benchmarks.common import Bench, emit
+from repro.fabric.metrics import bin_speedups
+
+
+def run(bench: Bench):
+    aalo = bench.sim("aalo").table
+    saath = bench.sim("saath").table
+    bins = bin_speedups(aalo, saath, qs=(50, 90))
+    rows = []
+    for b, d in bins.items():
+        row = {"bin": b, "frac": d.get("frac", 0.0),
+               "p50": d.get("p50", float("nan")),
+               "p90": d.get("p90", float("nan")),
+               "n": d.get("n", 0)}
+        rows.append(row)
+    emit("fig11_bins", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(Bench())

@@ -1,0 +1,36 @@
+"""Fig. 13: FCT deviation (out-of-sync) collapses under Saath vs Aalo."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench, emit, pctl
+from repro.fabric.metrics import fct_normalized_std
+
+
+def run(bench: Bench):
+    rows = []
+    devs = {}
+    for pol in ("aalo", "saath"):
+        dev = fct_normalized_std(bench.sim(pol).table)
+        devs[pol] = dev
+        for kind in ("equal", "unequal"):
+            d = dev[kind]
+            if d.size == 0:
+                continue
+            rows.append({
+                "policy": pol, "kind": kind,
+                "frac_zero": float((d < 1e-6).mean()),
+                "frac_under_10pct": float((d < 0.10).mean()),
+                "p50": pctl(d, 50),
+            })
+    emit("fig13_fct_deviation", rows)
+    a = devs["aalo"]["equal"]
+    s = devs["saath"]["equal"]
+    if a.size and s.size:
+        assert (s < 0.10).mean() >= (a < 0.10).mean(), (
+            "Saath should reduce FCT deviation for equal-length coflows")
+    return rows
+
+
+if __name__ == "__main__":
+    run(Bench())

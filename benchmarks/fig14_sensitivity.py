@@ -1,0 +1,57 @@
+"""Fig. 14: sensitivity to S (start threshold), E (growth), delta
+(sync interval), A (arrival speedup), d (deadline factor).
+
+Key paper claims: Saath insensitive to S (LCoF fixes FIFO's HoL);
+both degrade as delta grows; Saath's edge grows with contention (A).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Bench, emit
+from repro.core.params import MB, SchedulerParams
+from repro.fabric.metrics import percentile_speedup
+
+
+def _speedup(bench, params, **trace_kw):
+    a = bench.sim("aalo", params, **trace_kw).table.cct
+    s = bench.sim("saath", params, **trace_kw).table.cct
+    return percentile_speedup(a, s)
+
+
+def run(bench: Bench):
+    rows = []
+    base = SchedulerParams()
+
+    for S in (1 * MB, 10 * MB, 100 * MB):
+        p = dataclasses.replace(base, start_threshold=S)
+        rows.append({"knob": "S", "value": S / MB,
+                     **_speedup(bench, p)})
+    for E in (2.0, 10.0, 32.0):
+        p = dataclasses.replace(base, growth=E)
+        rows.append({"knob": "E", "value": E, **_speedup(bench, p)})
+    for delta in (8e-3, 64e-3, 256e-3):
+        p = dataclasses.replace(base, delta=delta)
+        rows.append({"knob": "delta_ms", "value": delta * 1e3,
+                     **_speedup(bench, p)})
+    for A in (0.5, 1.0, 2.0):
+        rows.append({"knob": "A", "value": A,
+                     **_speedup(bench, base, arrival_speedup=A)})
+    for d in (1.0, 2.0, 8.0):
+        p = dataclasses.replace(base, deadline_factor=d)
+        a = bench.sim("aalo", base).table.cct
+        s = bench.sim("saath", p).table.cct
+        rows.append({"knob": "d", "value": d,
+                     **percentile_speedup(a, s)})
+    emit("fig14_sensitivity", rows)
+
+    # contention claim: speedup at A=2 >= speedup at A=0.5 (more
+    # contention -> LCoF pays off more)
+    a_lo = next(r for r in rows if r["knob"] == "A" and r["value"] == 0.5)
+    a_hi = next(r for r in rows if r["knob"] == "A" and r["value"] == 2.0)
+    assert a_hi["p50"] >= a_lo["p50"] * 0.8
+    return rows
+
+
+if __name__ == "__main__":
+    run(Bench())

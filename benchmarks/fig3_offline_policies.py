@@ -1,0 +1,27 @@
+"""Fig. 3: offline SCF vs SRTF vs LWTF speedups over Aalo (sizes known).
+
+LWTF (t*k: duration x contention) should beat SCF/SRTF — the paper's
+evidence that contention matters.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Bench, emit
+from repro.fabric.metrics import percentile_speedup
+
+
+def run(bench: Bench):
+    base = bench.sim("aalo").table.cct
+    rows = []
+    for pol in ("scf", "srtf", "lwtf"):
+        s = percentile_speedup(base, bench.sim(pol).table.cct)
+        rows.append({"policy": pol, **{k: v for k, v in s.items()}})
+    emit("fig3_offline", rows)
+    lwtf = next(r for r in rows if r["policy"] == "lwtf")
+    scf = next(r for r in rows if r["policy"] == "scf")
+    assert lwtf["overall"] >= scf["overall"] * 0.95, (
+        "LWTF should be competitive with SCF overall")
+    return rows
+
+
+if __name__ == "__main__":
+    run(Bench())

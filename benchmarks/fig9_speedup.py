@@ -1,0 +1,27 @@
+"""Fig. 9: CCT speedup of Saath over Aalo / Varys-SEBF / UC-TCP.
+
+Paper (FB trace): Saath vs Aalo p50 = 1.53x, p90 = 4.5x; ~Varys-SEBF
+parity; >>100x vs UC-TCP.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Bench, emit
+from repro.fabric.metrics import percentile_speedup
+
+
+def run(bench: Bench):
+    saath = bench.sim("saath").table.cct
+    rows = []
+    for pol in ("aalo", "varys-sebf", "uc-tcp", "fifo", "saath-jax"):
+        other = bench.sim(pol).table.cct
+        s = percentile_speedup(other, saath)  # CCT_other / CCT_saath
+        rows.append({"vs": pol, **s})
+    emit("fig9_speedup", rows)
+    aalo = next(r for r in rows if r["vs"] == "aalo")
+    assert aalo["p50"] > 1.1, f"Saath should beat Aalo at p50: {aalo}"
+    assert aalo["p90"] > 2.0, f"...and strongly at p90: {aalo}"
+    return rows
+
+
+if __name__ == "__main__":
+    run(Bench())

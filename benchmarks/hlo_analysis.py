@@ -1,0 +1,376 @@
+"""Trip-count-aware HLO cost extraction for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE —
+useless for scan-over-layers programs (a 94-layer model reports ~1
+layer of FLOPs). This module re-derives per-device costs from the
+optimized HLO text:
+
+* FLOPs: every ``dot`` op costs 2 * prod(result_dims) * prod(lhs
+  contracting dims); multiplied by the product of enclosing while-loop
+  ``known_trip_count``s (scan lowers to while with that attribute).
+* HBM bytes: per top-level op, result + operand bytes (fusion internals
+  excluded — fused intermediates never touch HBM), same multipliers.
+* Collective link bytes (per device), ring estimates:
+    all-gather / all-to-all : result * (g-1)/g
+    all-reduce              : 2 * result * (g-1)/g
+    reduce-scatter          : result * (g-1)   [operand = g * result]
+    collective-permute      : result
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List
+
+_TYPE_RE = re.compile(
+    r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|f8e4m3fn|"
+    r"f8e5m2|c64|c128)\[([0-9,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+          "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+          "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_OPC_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],\{\} ]+?)?)\s*([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body)=(%[\w\.\-]+)")
+_OPER_RE = re.compile(r"\((%[\w\.\-]+(?:,\s*%[\w\.\-]+)*)?\)")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[m.group(1)]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+_HDR_RE = re.compile(r"^(ENTRY\s+)?(%[\w\.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        if not line.startswith(" "):
+            m = _HDR_RE.match(s)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):  # ENTRY
+                    comps["__entry__"] = comps[cur]
+            elif s == "}":
+                cur = None
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(s)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        om = _OPC_RE.match(rhs)
+        opcode = om.group(2) if om else rhs.split("(")[0].split()[-1]
+        type_str = om.group(1) if om else rhs
+        comps[cur].append(Op(name, type_str, opcode, s))
+    return comps
+
+
+def _operands(line: str) -> List[str]:
+    # operand list = first (...) after the opcode
+    m = re.search(r"[\w\-]+\((.*?)\)(?:,|$)", line)
+    if not m:
+        return []
+    return re.findall(r"%[\w\.\-]+", m.group(1))
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.type_str):
+        out_elems *= d
+    ops_ = _operands(op.line)
+    if not ops_:
+        return 0.0
+    lhs_t = symtab.get(ops_[0], "")
+    lhs_dims = _shape_dims(lhs_t)
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    k = 1
+    if cm and lhs_dims:
+        for d in cm.group(1).split(","):
+            if d:
+                k *= lhs_dims[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,\s]+?)\}[,}]", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"source_target_pairs=\{(.+?)\}\}", line)
+    if m:
+        return default
+    return default
+
+
+def _collective_bytes(op: Op, kind: str, ndev: int) -> float:
+    rb = _shape_bytes(op.type_str)
+    # XLA:CPU promotes bf16 dot outputs to f32, so row-parallel partial
+    # sums get all-reduced in f32 (reduction computation is named
+    # '*_promoted'). On TPU the payload stays bf16 — halve it.
+    if "promoted" in op.line and "f32[" in op.type_str:
+        rb *= 0.5
+    g = _group_size(op.line, ndev)
+    if kind == "all-gather":
+        return rb * (g - 1) / max(g, 1)
+    if kind == "all-reduce":
+        return 2.0 * rb * (g - 1) / max(g, 1)
+    if kind == "reduce-scatter":
+        return rb * (g - 1)
+    if kind == "all-to-all":
+        return rb * (g - 1) / max(g, 1)
+    return float(rb)  # collective-permute
+
+
+# einsum signatures that identify the flash-attention / SSD chunk scan
+# loops: under the Pallas kernels (kernels/flash_attention.py,
+# kernels/ssd_scan.py) everything inside those loops lives in VMEM, so
+# their HBM traffic exists only on the pure-jnp fallback path. The
+# 'kernelized' byte count zeroes those loop bodies (FLOPs and
+# collectives are still charged). NOTE: this assumes flash/SSD *backward*
+# kernels too (FlashAttention-2-style) — see DESIGN.md §6.
+KERNEL_INTERNAL_RE = re.compile(
+    r"(->bhgst|bhgst,|->btuh|btuh,|bshgd,bthd|bthn,bhdn)")
+
+
+def _op_meta(line: str) -> str:
+    m = re.search(r'op_name="([^"]*)"', line)
+    return m.group(1) if m else ""
+
+
+def _kernel_bodies(comps) -> set:
+    """Computations holding the flash/SSD einsum DOTs (the scan bodies).
+
+    Only dots qualify: einsum-lowered transposes outside the scan carry
+    the same op_name path and must not tag their (layer-level) caller.
+    """
+    out = set()
+    for cname, ops in comps.items():
+        for o in ops:
+            if o.opcode == "dot" and KERNEL_INTERNAL_RE.search(
+                    _op_meta(o.line)):
+                out.add(cname)
+                break
+    return out
+
+
+def analyze(hlo: str, num_devices: int) -> dict:
+    comps = parse_computations(hlo)
+    kbodies = _kernel_bodies(comps)
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def comp_cost(cname: str) -> tuple:
+        """(flops, hbm_bytes, coll_bytes_by_kind tuple) for one execution
+        of computation `cname`, including nested loops."""
+        ops = comps.get(cname, [])
+        symtab = {o.name: o.type_str for o in ops}
+        flops = 0.0
+        bytes_ = 0.0
+        kbytes = 0.0   # bytes attributable to kernel-internal traffic
+        coll = {k: 0.0 for k in COLLECTIVE_KINDS}
+        for o in ops:
+            if o.opcode == "parameter":
+                continue
+            kind = next((k for k in COLLECTIVE_KINDS
+                         if o.opcode.startswith(k)), None)
+            if kind and not o.opcode.endswith("-done"):
+                coll[kind] += _collective_bytes(o, kind, num_devices)
+            if o.opcode in ("dot", "convolution"):
+                flops += _dot_flops(o, symtab)
+            # HBM bytes: result + operands of every top-level op.
+            # Control ops are containers (their traffic is the ops inside);
+            # slice-like ops only touch the sliced region (mirrors XLA's
+            # HloCostAnalysis), incl. fusions XLA names after them.
+            if o.opcode not in ("tuple", "get-tuple-element", "parameter",
+                                "constant", "iota", "bitcast", "while",
+                                "conditional", "call", "opt-barrier",
+                                "after-all", "partition-id", "replica-id"):
+                rb = _shape_bytes(o.type_str)
+                slicey = (o.opcode in ("dynamic-slice", "gather", "slice")
+                          or "dynamic-slice" in o.name)
+                updatey = (o.opcode in ("dynamic-update-slice", "scatter")
+                           or "dynamic-update-slice" in o.name)
+                b = 0.0
+                if slicey:
+                    b = 2.0 * rb
+                elif updatey:
+                    ods = _operands(o.line)
+                    cands = [_shape_bytes(symtab.get(od, ""))
+                             for od in ods]
+                    cands = [c2 for c2 in cands if 0 < c2 < rb]
+                    ub = max(cands) if cands else rb
+                    b = 2.0 * ub
+                else:
+                    b = rb
+                    for od in _operands(o.line):
+                        b += _shape_bytes(symtab.get(od, ""))
+                bytes_ += b
+                if cname in kbodies:
+                    kbytes += b
+            # descend
+            if o.opcode == "while":
+                bm = re.search(r"body=(%[\w\.\-]+)", o.line)
+                tm = _TRIP_RE.search(o.line)
+                trip = int(tm.group(1)) if tm else 1
+                if bm:
+                    f2, b2, k2, c2 = comp_cost(bm.group(1))
+                    flops += trip * f2
+                    bytes_ += trip * b2
+                    kbytes += trip * k2
+                    for k in COLLECTIVE_KINDS:
+                        coll[k] += trip * c2[COLLECTIVE_KINDS.index(k)]
+            elif o.opcode == "fusion":
+                cm = re.search(r"calls=(%[\w\.\-]+)", o.line)
+                if cm:
+                    f2, _, _, c2 = comp_cost(cm.group(1))
+                    flops += f2   # dots inside fusions still compute
+                    for k in COLLECTIVE_KINDS:
+                        coll[k] += c2[COLLECTIVE_KINDS.index(k)]
+            elif o.opcode in ("call", "async-start", "custom-call",
+                              "conditional"):
+                cm = _CALLS_RE.search(o.line)
+                if cm and cm.group(1) in comps:
+                    f2, b2, k2, c2 = comp_cost(cm.group(1))
+                    flops += f2
+                    bytes_ += b2
+                    kbytes += k2
+                    for k in COLLECTIVE_KINDS:
+                        coll[k] += c2[COLLECTIVE_KINDS.index(k)]
+        return flops, bytes_, kbytes, tuple(
+            coll[k] for k in COLLECTIVE_KINDS)
+
+    f, b, kb, c = comp_cost("__entry__")
+    coll = dict(zip(COLLECTIVE_KINDS, c))
+    coll["total"] = sum(c)
+    return {"flops": f, "hbm_bytes": b,
+            # memory traffic with Pallas-kernel-internal tensors kept in
+            # VMEM (flash scores / SSD chunk matrices) — the TPU path
+            "hbm_bytes_kernelized": b - kb,
+            "collective_bytes": coll}
+
+
+# ------------------------------------------------------------- roofline
+HW = {
+    "peak_flops": 197e12,     # bf16 / chip (TPU v5e)
+    "hbm_bw": 819e9,          # B/s / chip
+    "ici_bw": 50e9,           # B/s / link (per-chip injection, ~3 links)
+}
+
+
+def roofline_terms(per_device: dict, hw=HW, kernelized: bool = True) -> dict:
+    t_c = per_device["flops"] / hw["peak_flops"]
+    mem = per_device.get("hbm_bytes_kernelized"
+                         if kernelized else "hbm_bytes",
+                         per_device["hbm_bytes"])
+    t_m = mem / hw["hbm_bw"]
+    t_n = per_device["collective_bytes"]["total"] / hw["ici_bw"]
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+              key=lambda kv: kv[1])[0]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "bottleneck": dom}
+
+
+def model_flops(cfg, shape, src_len: int = 4096) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D (+ attention quadratic term).
+    Train counts fwd+bwd (6ND); prefill 2ND; decode 2N per token."""
+    n = cfg.active_param_count() - cfg.vocab_size * cfg.d_model * (
+        1 if cfg.tie_embeddings else 2)
+    n_head = cfg.vocab_size * cfg.d_model  # output head matmul
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        base = 6.0 * (n + n_head) * tokens
+        attn = 6.0 * _attn_matmul_flops(cfg, S, causal=True) * B
+    elif shape.kind == "prefill":
+        tokens = B * S
+        base = 2.0 * (n + n_head) * tokens
+        attn = 2.0 * _attn_matmul_flops(cfg, S, causal=True) * B
+    else:  # decode: one token, full-context attention reads
+        tokens = B * 1
+        base = 2.0 * (n + n_head) * tokens
+        attn = 2.0 * B * _attn_layers(cfg) * 2 * 2 * \
+            cfg.num_heads * cfg.head_dim * S  # qK^T + pV per layer
+    if cfg.enc_dec:
+        base *= 1.0  # encoder counted via params already (rough)
+    return base + attn
+
+
+def model_min_bytes(cfg, shape) -> float:
+    """Information-theoretic floor on per-step HBM reads (global):
+    decode must read the active weights (bf16) plus the whole KV/state
+    cache once; train/prefill read weights + write/read activations
+    (weights term only — a loose floor). Used for the decode
+    bandwidth-utilization metric."""
+    w = cfg.active_param_count() * 2.0
+    if shape.kind != "decode":
+        return w
+    B, S = shape.global_batch, shape.seq_len
+    L_attn = _attn_layers(cfg)
+    if cfg.mla:
+        cache = L_attn * B * S * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2
+    else:
+        cache = L_attn * B * S * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    if cfg.ssm_inner:
+        n_mamba = cfg.num_layers - L_attn
+        cache += n_mamba * B * cfg.ssm_heads * cfg.ssm_head_dim * \
+            cfg.ssm_state * 4
+    if cfg.enc_dec:
+        cache += cfg.num_layers * B * 4096 * 2 * cfg.num_kv_heads * \
+            cfg.head_dim * 2  # cross-attention KV at src_len=4096
+    return w + cache
+
+
+def _attn_layers(cfg) -> int:
+    if cfg.ssm_inner and cfg.attn_period == 0:
+        return 0
+    if cfg.attn_period:
+        return cfg.num_layers // cfg.attn_period
+    return cfg.num_layers
+
+
+def _attn_matmul_flops(cfg, S: int, causal: bool) -> float:
+    """Per-sequence qK^T + pV flops (causal halves it)."""
+    L = _attn_layers(cfg)
+    if L == 0:
+        return 0.0
+    per = 2.0 * 2.0 * cfg.num_heads * cfg.head_dim * S * S
+    if causal:
+        per *= 0.5
+    return per * L

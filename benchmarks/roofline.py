@@ -1,0 +1,114 @@
+import repro.launch.dryrun as dr  # noqa: F401  (sets XLA_FLAGS first)
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import os           # noqa: E402
+import time         # noqa: E402
+
+from benchmarks import hlo_analysis as ha          # noqa: E402
+from repro.configs import (ARCH_IDS, SHAPES,       # noqa: E402
+                           cell_is_runnable, get_config)
+
+"""§Roofline driver: per (arch x shape) on the single-pod mesh, lower +
+compile the cell, then derive the three roofline terms from the HLO with
+trip-count-aware counting (hlo_analysis.py):
+
+    compute    = HLO_FLOPs / peak ;  memory = HLO_bytes / HBM_bw ;
+    collective = link_bytes / ICI_bw      (all per device, seconds)
+
+plus MODEL_FLOPS = 6·N_active·D and the useful-compute ratio.
+Results: experiments/roofline/<cell>.json + a markdown table on stdout.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline --all
+"""
+
+NDEV = 256  # single-pod
+
+
+def roofline_cell(arch: str, shape_name: str) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        return rec
+    lowered, info = dr.lower_cell(arch, shape_name, multi_pod=False)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    res = ha.analyze(hlo, NDEV)
+    rec.update({k: res[k] for k in ("flops", "hbm_bytes",
+                                    "hbm_bytes_kernelized")})
+    rec["collective_bytes"] = res["collective_bytes"]
+    rec["terms"] = ha.roofline_terms(res)
+    rec["terms_raw_mem"] = ha.roofline_terms(res, kernelized=False)
+    mf = ha.model_flops(cfg, shape)
+    rec["model_flops_global"] = mf
+    rec["model_flops_per_dev"] = mf / NDEV
+    rec["useful_ratio"] = (mf / NDEV) / max(res["flops"], 1.0)
+    # roofline fraction. Train/prefill (compute-shaped work): useful-
+    # flops time over the achievable step time (the dominant term sets
+    # the clock). Decode (bandwidth-shaped): required bytes (weights +
+    # cache, read once) over the bytes actually moved.
+    if shape.kind == "decode":
+        need = ha.model_min_bytes(cfg, shape) / NDEV
+        rec["min_bytes_per_dev"] = need
+        rec["roofline_fraction"] = need / max(
+            res["hbm_bytes_kernelized"], 1.0)
+    else:
+        t_use = (mf / NDEV) / ha.HW["peak_flops"]
+        t_step = max(rec["terms"]["compute_s"], rec["terms"]["memory_s"],
+                     rec["terms"]["collective_s"])
+        rec["roofline_fraction"] = t_use / max(t_step, 1e-12)
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        rec["temp_bytes"] = int(getattr(mem, "temp_size_in_bytes", -1))
+        rec["arg_bytes"] = int(getattr(mem, "argument_size_in_bytes", -1))
+    rec["seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
+def fmt_row(rec) -> str:
+    if "skipped" in rec:
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | — | — | "
+                f"skip |")
+    t = rec["terms"]
+    return ("| {arch} | {shape} | {c:.3f} | {m:.3f} | {n:.3f} | {b} | "
+            "{u:.2f} | {rf:.1%} |".format(
+                arch=rec["arch"], shape=rec["shape"], c=t["compute_s"],
+                m=t["memory_s"], n=t["collective_s"], b=t["bottleneck"],
+                u=rec["useful_ratio"], rf=rec["roofline_fraction"]))
+
+
+HEADER = ("| arch | shape | compute_s | memory_s | collective_s | "
+          "bottleneck | useful | roofline |\n"
+          "|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+    cells = ([(a, s) for a in ARCH_IDS for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    os.makedirs(args.out, exist_ok=True)
+    print(HEADER)
+    for arch, shape in cells:
+        try:
+            rec = roofline_cell(arch, shape)
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "error": str(e)[:500]}
+        tag = f"{ARCH_IDS.get(arch, arch)}.{shape}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as fh:
+            json.dump(rec, fh, indent=1)
+        print(fmt_row(rec) if "error" not in rec else
+              f"| {arch} | {shape} | ERROR {rec['error'][:60]} |",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Multi-tenant fabric scheduling: the paper's scheduler arbitrating a
+pod's concurrent collective traffic.
+
+Tenants: (a) a training job's per-step gradient buckets (reverse-layer
+arrival order), (b) a MoE job's all-to-all waves, (c) a checkpoint
+upload over DCN, (d) a serving fleet's KV-cache migration, (e) an
+elastic-rescale parameter resharding burst.
+
+The Saath coordinator orders them with all-or-none + LCoF and
+starvation deadlines; compare against naive FIFO issue.
+
+    PYTHONPATH=src python examples/multi_tenant_fabric.py
+"""
+import numpy as np
+
+from repro.core.coflow import Coflow, Flow, Trace
+from repro.core.params import SchedulerParams
+from repro.fabric.engine import simulate
+from repro.fabric.metrics import percentile_speedup
+from repro.runtime.coflow_bridge import CollectiveCoflow, plan_waves
+
+# ---- wave planning view ---------------------------------------------------
+coflows = []
+for b in range(6):  # gradient buckets, deepest layer ready first
+    coflows.append(CollectiveCoflow(f"grad/{b}", (48 - 4 * b) << 20,
+                                    ("ici:data",), b))
+for l in (0, 1, 2):  # MoE a2a per MoE layer
+    coflows.append(CollectiveCoflow(f"moe_a2a/{l}", 160 << 20,
+                                    ("ici:model",), 10 + l))
+coflows += [
+    CollectiveCoflow("ckpt/upload", 4 << 30, ("dcn", "host"), 20),
+    CollectiveCoflow("kv/migrate", 512 << 20, ("dcn",), 21),
+    CollectiveCoflow("reshard/params", 1 << 30,
+                     ("ici:data", "ici:model"), 22),
+]
+waves = plan_waves(coflows, num_chips=16)
+print("== Saath wave plan (all-or-none + LCoF) ==")
+for i, w in enumerate(waves):
+    print(f"wave {i}: {w}")
+
+# ---- full fabric simulation: Saath vs FIFO issue --------------------------
+# Model each chip's ICI as a port; tenants contend for overlapping chip
+# sets; replicate the steady state over 40 steps with Poisson jitter.
+rng = np.random.default_rng(0)
+P = 64
+cfs = []
+fid = 0
+t = 0.0
+for step in range(40):
+    t += float(rng.exponential(0.05))
+    for b in range(4):
+        chips = range(0, 32)
+        flows = [Flow(fid + i, c, c, float((32 - 6 * b) << 19))
+                 for i, c in enumerate(chips)]
+        fid += len(flows)
+        cfs.append(Coflow(len(cfs), t + 0.001 * b, flows))
+    if step % 4 == 0:  # periodic checkpoint upload on other chips
+        flows = [Flow(fid + i, 32 + i, 32 + i, float(1 << 26))
+                 for i in range(16)]
+        fid += 16
+        cfs.append(Coflow(len(cfs), t, flows))
+trace = Trace(num_ports=P, coflows=cfs)
+params = SchedulerParams(port_bw=50e9 / 8, delta=1e-3,
+                         start_threshold=8 << 20)
+fifo = simulate(trace, "fifo", params)
+saath = simulate(trace, "saath", params)
+s = percentile_speedup(fifo.table.cct, saath.table.cct)
+print("\n== steady-state fabric: Saath vs FIFO issue order ==")
+print(f"collective-coflow completion speedup: p50={s['p50']:.2f}x "
+      f"p90={s['p90']:.2f}x overall={s['overall']:.2f}x")

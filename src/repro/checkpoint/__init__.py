@@ -1,0 +1,5 @@
+from repro.checkpoint.ckpt import (CheckpointManager, latest_step,
+                                   read_metadata, restore, save)
+
+__all__ = ["save", "restore", "latest_step", "read_metadata",
+           "CheckpointManager"]

@@ -1,0 +1,6 @@
+from repro.configs.base import (ARCH_IDS, ARCHS, SHAPES, ModelConfig,
+                                ShapeConfig, cell_is_runnable, get_config,
+                                get_smoke_config)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "ARCH_IDS",
+           "get_config", "get_smoke_config", "cell_is_runnable"]

@@ -1,0 +1,74 @@
+"""Coflow/flow model.
+
+Object form (`Coflow`, `Flow`) is used for traces; the simulator flattens
+everything into struct-of-arrays (`fabric.state.FlowTable`) for speed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Flow:
+    fid: int            # global flow id
+    src: int            # sender port
+    dst: int            # receiver port
+    size: float         # bytes
+
+
+@dataclasses.dataclass
+class Coflow:
+    cid: int
+    arrival: float      # seconds
+    flows: List[Flow]
+    stage_deps: Optional[List[int]] = None  # DAG: cids this stage waits on
+
+    @property
+    def width(self) -> int:
+        return len(self.flows)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(f.size for f in self.flows))
+
+    @property
+    def sender_ports(self) -> np.ndarray:
+        return np.unique([f.src for f in self.flows])
+
+    @property
+    def receiver_ports(self) -> np.ndarray:
+        return np.unique([f.dst for f in self.flows])
+
+    def bottleneck_bytes(self, num_ports: int) -> float:
+        """Max per-port load (bytes) over senders and receivers (SEBF Γ)."""
+        s = np.zeros(num_ports)
+        r = np.zeros(num_ports)
+        for f in self.flows:
+            s[f.src] += f.size
+            r[f.dst] += f.size
+        return float(max(s.max(), r.max()))
+
+
+@dataclasses.dataclass
+class Trace:
+    num_ports: int
+    coflows: List[Coflow]
+
+    @property
+    def num_flows(self) -> int:
+        return sum(c.width for c in self.coflows)
+
+    def validate(self) -> None:
+        seen = set()
+        for c in self.coflows:
+            assert c.cid not in seen, f"duplicate cid {c.cid}"
+            seen.add(c.cid)
+            assert c.arrival >= 0
+            assert c.width >= 1
+            for f in c.flows:
+                assert 0 <= f.src < self.num_ports
+                assert 0 <= f.dst < self.num_ports
+                assert f.size > 0

@@ -1,0 +1,24 @@
+"""Coflow contention k_c (numpy reference; the Pallas kernel in
+repro.kernels.contention is the TPU fast path and is tested against this).
+
+k_c = number of OTHER active coflows that share at least one (sender or
+receiver) port with coflow c — i.e. how many coflows scheduling c would
+block (§2.4, §3 idea 3).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def contention(A_send: np.ndarray, A_recv: np.ndarray,
+               active: np.ndarray) -> np.ndarray:
+    """A_send/A_recv: (C, P) bool incidence. active: (C,) bool.
+
+    Returns (C,) int32; inactive coflows get 0.
+    """
+    A_s = (A_send & active[:, None]).astype(np.float32)
+    A_r = (A_recv & active[:, None]).astype(np.float32)
+    share = A_s @ A_s.T + A_r @ A_r.T  # BLAS sgemm
+    blocks = share > 0.5
+    k = blocks.sum(axis=1) - blocks.diagonal()
+    return np.where(active, k, 0).astype(np.int32)

@@ -1,0 +1,169 @@
+"""Jitted Saath coordinator — the in-framework scheduler.
+
+The numpy Saath in ``core.policies.saath`` is the trace-replay reference;
+this module is the same Fig. 7 algorithm vectorized over fixed-size padded
+arrays so one coordinator tick is a single XLA computation (with the LCoF
+contention as the ``kernels.contention`` Pallas kernel on TPU). It is used
+
+* by the framework plane: between train steps the coordinator re-plans
+  the issue order of collective coflows (gradient buckets, MoE a2a waves,
+  checkpoint uploads, KV migrations) — ``runtime.coflow_bridge``;
+* by ``benchmarks/table2_coordinator_latency.py`` to reproduce the
+  paper's coordinator-cost table at 512-port x 4k-coflow scale.
+
+Granularity: one row per COFLOW with per-port live-flow counts
+(cnt_s/cnt_r), i.e. the all-or-none admission and the coflow-level work
+conservation are exact; per-flow work conservation (rescuing a strict
+subset of a missed coflow's flows) is the numpy reference's finer
+behaviour — for collective coflows a partial issue is meaningless, so
+the coflow granularity is the faithful TPU mapping (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+BIG = jnp.float32(1e30)
+
+
+class CoordParams(NamedTuple):
+    """Static coordinator parameters (see core.params.SchedulerParams)."""
+    thresholds: tuple          # (K,) Q_q^hi, last = +inf
+    deadline_factor: float = 2.0
+    min_rate_frac: float = 1e-3
+    bw_ref: float = 1.0        # reference port bandwidth for t_min
+
+    @staticmethod
+    def from_params(p) -> "CoordParams":
+        return CoordParams(tuple(p.thresholds()), p.deadline_factor,
+                           p.min_rate_frac, p.port_bw)
+
+
+class CoordState(NamedTuple):
+    queue: jax.Array     # (C,) int32, -1 = unseen
+    deadline: jax.Array  # (C,) f32
+    running: jax.Array   # (C,) bool — admitted in previous tick
+
+
+def init_state(C: int) -> CoordState:
+    return CoordState(jnp.full((C,), -1, jnp.int32),
+                      jnp.full((C,), jnp.inf, jnp.float32),
+                      jnp.zeros((C,), bool))
+
+
+class CoflowBatch(NamedTuple):
+    """One coordinator tick's view of the fabric (padded to C, P)."""
+    active: jax.Array    # (C,) bool
+    arrival: jax.Array   # (C,) int32 arrival RANK (host-computed, exact
+    #                      FIFO order — float arrivals may collide in f32)
+    m: jax.Array         # (C,) f32  max bytes sent by any flow (Eq. 1)
+    width: jax.Array     # (C,) int32 flow count N_c
+    cnt_s: jax.Array     # (C,P) f32 live-flow counts at sender ports
+    cnt_r: jax.Array     # (C,P) f32 live-flow counts at receiver ports
+    bw_s: jax.Array      # (P,) f32
+    bw_r: jax.Array      # (P,) f32
+
+
+def _queue_of(value: jax.Array, th: jax.Array) -> jax.Array:
+    """Smallest q with value < Q_q^hi (th sorted, th[-1] = +inf)."""
+    return jnp.searchsorted(th, value, side="right").astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cp", "kernel"))
+def schedule_tick(state: CoordState, batch: CoflowBatch, now: jax.Array,
+                  *, cp: CoordParams,
+                  kernel: str | None = None):
+    """One Fig. 7 coordinator tick. Returns (new_state, out) where out has
+    per-coflow equal rates (MADD), admission mask, queue, contention."""
+    th = jnp.asarray(cp.thresholds, jnp.float32)
+    C, P = batch.cnt_s.shape
+    act = batch.active
+
+    # D3: per-flow thresholds (Eq. 1) — compare m_c * N_c against Q_q^hi
+    q = _queue_of(batch.m * batch.width.astype(jnp.float32), th)
+    q = jnp.where(act, q, jnp.maximum(state.queue, 0))
+
+    # D5: FIFO-derived deadlines, refreshed on queue entry. Spans are
+    # static python (cp.thresholds is a static tuple); the last queue is
+    # unbounded so its span uses one growth step beyond its lower bound
+    # (matches core.queues.min_queue_residence).
+    entered = act & (q != state.queue)
+    K = len(cp.thresholds)
+    cq = jnp.zeros((K,), jnp.float32).at[q].add(act.astype(jnp.float32))
+    los = (0.0,) + cp.thresholds[:-1]
+    growth = (cp.thresholds[1] / cp.thresholds[0]) if K > 1 else 2.0
+    spans = [h - l for h, l in zip(cp.thresholds, los)]
+    spans[K - 1] = (los[K - 1] * growth - los[K - 1]) if K > 1 \
+        else cp.thresholds[0]
+    span = jnp.asarray(spans, jnp.float32)
+    t_min = span[q] / (jnp.maximum(batch.width, 1) * cp.bw_ref)
+    deadline = jnp.where(
+        entered, now + cp.deadline_factor * jnp.maximum(cq[q], 1.0) * t_min,
+        state.deadline)
+    expired = act & (now >= deadline)
+
+    # LCoF contention (Pallas kernel on TPU)
+    k = ops.contention((batch.cnt_s > 0).astype(jnp.float32),
+                       (batch.cnt_r > 0).astype(jnp.float32),
+                       act, force=kernel)
+
+    # order: expired first (by deadline), then (queue, k, stability,
+    # arrival); inactive last. jnp.lexsort: last key is primary.
+    arr_rank = batch.arrival
+    not_running = (~state.running).astype(jnp.int32)
+    primary = jnp.where(~act, 2, jnp.where(expired, 0, 1))
+    key_q = jnp.where(expired, 0, q)
+    key_k = jnp.where(expired, 0, k)
+    key_st = jnp.where(expired, 0, not_running)
+    key_arr = jnp.where(expired,
+                        jnp.argsort(jnp.argsort(deadline)), arr_rank)
+    perm = jnp.lexsort((jnp.arange(C), key_arr, key_st, key_k, key_q,
+                        primary))
+
+    # D1/D2: all-or-none admission with MADD equal rates, in `perm` order
+    min_rate = cp.min_rate_frac * cp.bw_ref
+
+    def admit_step(carry, c):
+        avail_s, avail_r = carry
+        cs = batch.cnt_s[c]
+        cr = batch.cnt_r[c]
+        r = jnp.minimum(
+            jnp.where(cs > 0, avail_s / jnp.maximum(cs, 1e-9), BIG).min(),
+            jnp.where(cr > 0, avail_r / jnp.maximum(cr, 1e-9), BIG).min())
+        has_ports = ((cs > 0).any() | (cr > 0).any()) & act[c]
+        ok = has_ports & (r >= min_rate) & (r < BIG)
+        r = jnp.where(ok, r, 0.0)
+        return (avail_s - r * cs, avail_r - r * cr), (r, ok)
+
+    (avail_s, avail_r), (r_perm, ok_perm) = jax.lax.scan(
+        admit_step, (batch.bw_s, batch.bw_r), perm)
+    rate = jnp.zeros((C,), jnp.float32).at[perm].set(r_perm)
+    admitted = jnp.zeros((C,), bool).at[perm].set(ok_perm)
+
+    # D4: coflow-granular work conservation over the missed list
+    def wc_step(carry, c):
+        avail_s, avail_r = carry
+        cs = batch.cnt_s[c]
+        cr = batch.cnt_r[c]
+        r = jnp.minimum(
+            jnp.where(cs > 0, avail_s / jnp.maximum(cs, 1e-9), BIG).min(),
+            jnp.where(cr > 0, avail_r / jnp.maximum(cr, 1e-9), BIG).min())
+        ok = act[c] & ~admitted[c] & (r > 0) & (r < BIG) \
+            & ((cs > 0).any() | (cr > 0).any())
+        r = jnp.where(ok, r, 0.0)
+        return (avail_s - r * cs, avail_r - r * cr), r
+
+    (_, _), wc_perm = jax.lax.scan(wc_step, (avail_s, avail_r), perm)
+    wc_rate = jnp.zeros((C,), jnp.float32).at[perm].set(wc_perm)
+
+    new_state = CoordState(queue=jnp.where(act, q, state.queue),
+                           deadline=deadline, running=admitted)
+    out = {"rate": rate, "wc_rate": wc_rate, "admitted": admitted,
+           "queue": q, "contention": k, "expired": expired,
+           "order": perm}
+    return new_state, out

@@ -1,0 +1,38 @@
+"""Scheduler parameters shared by every policy (paper §6 defaults)."""
+from __future__ import annotations
+
+import dataclasses
+
+MB = 1024.0 * 1024.0
+GBPS = 1e9 / 8.0  # bytes/sec for a 1 Gbps port (paper's testbed NIC)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerParams:
+    """Knobs from the paper (§6 'default parameters')."""
+
+    num_queues: int = 10          # K
+    start_threshold: float = 10 * MB  # S = Q_0^hi, bytes
+    growth: float = 10.0          # E, exponential threshold factor
+    delta: float = 8e-3           # δ, coordinator sync interval (seconds)
+    deadline_factor: float = 2.0  # d, starvation deadline multiplier
+    port_bw: float = GBPS         # B_p, bytes/sec per port (uniform default)
+    min_rate_frac: float = 1e-3   # all-or-none admission floor (fraction of B)
+    # §4.3 cluster-dynamics handling (SRTF re-queue from finished-flow median)
+    dynamics_requeue: bool = True
+    # Beyond-paper option: a second work-conservation round that raises the
+    # equal rate of already-admitted coflows when all their ports have slack.
+    wc_admitted_round: bool = False
+
+    def thresholds(self) -> list:
+        """[Q_0^hi .. Q_{K-1}^hi]; Q_{K-1}^hi is +inf."""
+        out = []
+        t = self.start_threshold
+        for q in range(self.num_queues):
+            out.append(float("inf") if q == self.num_queues - 1 else t)
+            t *= self.growth
+        return out
+
+    @property
+    def min_rate(self) -> float:
+        return self.port_bw * self.min_rate_frac

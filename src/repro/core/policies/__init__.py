@@ -1,0 +1,25 @@
+from repro.core.policies.aalo import Aalo, CoordinatedFifo
+from repro.core.policies.base import Policy
+from repro.core.policies.offline import LWTF, SCF, SRTF, VarysSEBF
+from repro.core.policies.saath import Saath
+from repro.core.policies.saath_jax import SaathJax
+from repro.core.policies.uctcp import UCTCP
+
+REGISTRY = {
+    "saath": Saath,
+    "saath-jax": SaathJax,
+    "aalo": Aalo,
+    "fifo": CoordinatedFifo,
+    "scf": SCF,
+    "srtf": SRTF,
+    "lwtf": LWTF,
+    "varys-sebf": VarysSEBF,
+    "uc-tcp": UCTCP,
+}
+
+
+def make_policy(name: str, params, **kw) -> Policy:
+    return REGISTRY[name](params, **kw)
+
+__all__ = ["Policy", "Saath", "SaathJax", "Aalo", "CoordinatedFifo", "SCF",
+           "SRTF", "LWTF", "VarysSEBF", "UCTCP", "REGISTRY", "make_policy"]

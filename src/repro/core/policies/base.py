@@ -1,0 +1,130 @@
+"""Policy interface + shared allocation primitives."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.params import SchedulerParams
+from repro.fabric.state import FlowTable
+
+
+class Policy:
+    """A scheduling policy: maps fabric state -> per-flow rates (bytes/s).
+
+    The simulator calls `schedule(table, now)` at every scheduling instant
+    (δ-grid aligned). Policies may keep internal per-coflow bookkeeping
+    (queues, deadlines); they must tolerate coflows finishing between calls.
+    """
+
+    name = "base"
+    clairvoyant = False  # True => allowed to read flow sizes (offline)
+
+    def __init__(self, params: SchedulerParams):
+        self.params = params
+
+    def reset(self, table: FlowTable) -> None:  # pragma: no cover - trivial
+        pass
+
+    def schedule(self, table: FlowTable, now: float) -> np.ndarray:
+        raise NotImplementedError
+
+    def progress_events(self, table: FlowTable, now: float,
+                        rates: np.ndarray) -> float:
+        """Earliest future instant at which this policy's *internal* state
+        (queue assignment, deadline expiry) would change the schedule given
+        constant `rates`. The simulator re-invokes the coordinator then.
+        inf = no internal events (completions/arrivals still trigger)."""
+        return float("inf")
+
+
+def greedy_flow_alloc(table: FlowTable, flow_order: np.ndarray,
+                      live: np.ndarray,
+                      avail_s: np.ndarray | None = None,
+                      avail_r: np.ndarray | None = None,
+                      rates: np.ndarray | None = None) -> np.ndarray:
+    """Allocate each live flow min(avail_src, avail_dst) in the given order.
+
+    This is the per-port 'strict priority + FIFO within queue' allocation
+    used by Aalo/SCF/SRTF/LWTF-style policies (no coflow coordination) and
+    by Saath's work-conservation backfill (avail_s/avail_r passed in and
+    updated in place).
+
+    Exact round-based vectorization of the sequential greedy: in each round
+    every candidate flow that is the FIRST (in priority order) to touch both
+    its sender and receiver port is allocated min(avail) — identical to the
+    one-at-a-time result because no earlier flow shares its ports. Each
+    round saturates >=1 port per allocated flow, so rounds are few.
+    """
+    F = table.size.shape[0]
+    rates = np.zeros(F) if rates is None else rates
+    avail_s = table.bw_send.copy() if avail_s is None else avail_s
+    avail_r = table.bw_recv.copy() if avail_r is None else avail_r
+    src, dst = table.src, table.dst
+    ordered = flow_order[live[flow_order]]
+    for _ in range(2 * table.num_ports + 2):
+        if ordered.size == 0:
+            break
+        cand = ordered[(avail_s[src[ordered]] > 0.0)
+                       & (avail_r[dst[ordered]] > 0.0)]
+        if cand.size == 0:
+            break
+        # first occurrence of each port, in priority order
+        _, first_s = np.unique(src[cand], return_index=True)
+        _, first_r = np.unique(dst[cand], return_index=True)
+        is_first_s = np.zeros(cand.size, bool)
+        is_first_r = np.zeros(cand.size, bool)
+        is_first_s[first_s] = True
+        is_first_r[first_r] = True
+        take = cand[is_first_s & is_first_r]
+        r = np.minimum(avail_s[src[take]], avail_r[dst[take]])
+        rates[take] = r
+        # 'take' flows have unique src and dst among themselves
+        avail_s[src[take]] -= r
+        avail_r[dst[take]] -= r
+        ordered = cand[~(is_first_s & is_first_r)]
+    return rates
+
+
+def coflow_flow_order(table: FlowTable, coflow_rank: np.ndarray) -> np.ndarray:
+    """Flow order induced by a per-coflow rank (ties by flow id)."""
+    return np.lexsort((np.arange(table.size.shape[0]),
+                       coflow_rank[table.cid]))
+
+
+def maxmin_waterfill(table: FlowTable, live: np.ndarray,
+                     max_iter: int | None = None) -> np.ndarray:
+    """Exact bipartite max-min fair rates (progressive filling).
+
+    Models the steady-state throughput of per-flow TCP fair sharing —
+    the UC-TCP baseline (§6.1).
+    """
+    F = table.size.shape[0]
+    rates = np.zeros(F)
+    frozen = ~live
+    avail_s = table.bw_send.copy()
+    avail_r = table.bw_recv.copy()
+    it = 0
+    limit = max_iter or 2 * table.num_ports + 2
+    while not frozen.all() and it < limit:
+        it += 1
+        act = ~frozen
+        cnt_s = np.bincount(table.src[act], minlength=table.num_ports)
+        cnt_r = np.bincount(table.dst[act], minlength=table.num_ports)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            lvl_s = np.where(cnt_s > 0, avail_s / np.maximum(cnt_s, 1), np.inf)
+            lvl_r = np.where(cnt_r > 0, avail_r / np.maximum(cnt_r, 1), np.inf)
+        lvl = min(lvl_s.min(), lvl_r.min())
+        if not np.isfinite(lvl):
+            break
+        # freeze flows incident to saturated ports at `lvl`
+        sat_s = (lvl_s <= lvl + 1e-12) & (cnt_s > 0)
+        sat_r = (lvl_r <= lvl + 1e-12) & (cnt_r > 0)
+        hit = act & (sat_s[table.src] | sat_r[table.dst])
+        if not hit.any():
+            break
+        rates[hit] = lvl
+        np.subtract.at(avail_s, table.src[hit], lvl)
+        np.subtract.at(avail_r, table.dst[hit], lvl)
+        avail_s = np.maximum(avail_s, 0.0)
+        avail_r = np.maximum(avail_r, 0.0)
+        frozen = frozen | hit
+    return rates

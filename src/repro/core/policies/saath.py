@@ -1,0 +1,216 @@
+"""SAATH (the paper's contribution): all-or-none + per-flow queue
+thresholds + LCoF + work conservation + starvation deadlines + §4.3
+cluster-dynamics (approximate-SRTF) re-queueing.
+
+This is the numpy reference coordinator; `repro.core.jax_coordinator`
+is the jitted in-framework version (property-tested to agree).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import queues
+from repro.core.contention import contention
+from repro.core.params import SchedulerParams
+from repro.core.policies.base import Policy, greedy_flow_alloc
+from repro.fabric.state import FlowTable
+
+
+class Saath(Policy):
+    name = "saath"
+
+    def __init__(self, params: SchedulerParams, *, all_or_none: bool = True,
+                 per_flow_threshold: bool = True, lcof: bool = True,
+                 work_conservation: bool = True):
+        super().__init__(params)
+        # ablation switches (Fig. 10: A/N, A/N+PF, full SAATH)
+        self.all_or_none = all_or_none
+        self.per_flow_threshold = per_flow_threshold
+        self.lcof = lcof
+        self.work_conservation = work_conservation
+
+    def reset(self, table: FlowTable) -> None:
+        C = table.num_coflows
+        self._queue = np.full(C, -1, np.int32)     # -1 = not yet seen
+        self._deadline = np.full(C, np.inf)
+        self._running = np.zeros(C, bool)  # admitted in the last schedule
+        self.stats_deadline_hits = 0
+        self.stats_admitted = 0
+        self.stats_wc_flows = 0
+
+    # ---- queue assignment (D3 + §4.3) -----------------------------------
+    def _assign_queues(self, table: FlowTable, now: float) -> np.ndarray:
+        p = self.params
+        if self.per_flow_threshold:
+            q_new = queues.saath_queue(table.coflow_max_flow_sent(),
+                                       table.width, p)
+        else:
+            q_new = queues.aalo_queue(table.coflow_sent_total(), p)
+
+        if p.dynamics_requeue:
+            # §4.3: once some flows finished, estimate remaining length from
+            # the median finished-flow length and re-queue by Eq. 1 — this can
+            # move a coflow back UP the queues (approximate SRTF).
+            live = table.flow_live()
+            done_f = table.done & table.active[table.cid]
+            has_done = np.bincount(table.cid[done_f],
+                                   minlength=table.num_coflows) > 0
+            has_live = np.bincount(table.cid[live],
+                                   minlength=table.num_coflows) > 0
+            mixed = has_done & has_live & table.active
+            if mixed.any():
+                for c in np.nonzero(mixed)[0]:
+                    lo, hi = table.flow_lo[c], table.flow_hi[c]
+                    fdone = table.done[lo:hi]
+                    f_e = float(np.median(table.size[lo:hi][fdone]))
+                    rem = np.maximum(f_e - table.sent[lo:hi][~fdone], 0.0)
+                    m_hat = float(rem.max()) if rem.size else 0.0
+                    q_new[c] = queues.saath_queue(
+                        np.array([m_hat]), table.width[c:c + 1], p)[0]
+        return q_new
+
+    # ---- deadlines (D5) ---------------------------------------------------
+    def _refresh_deadlines(self, table: FlowTable, q_new: np.ndarray,
+                           now: float) -> None:
+        p = self.params
+        entered = table.active & (q_new != self._queue)
+        if entered.any():
+            cq = np.bincount(q_new[table.active], minlength=p.num_queues)
+            t_min = queues.min_queue_residence(q_new, table.width, p)
+            for c in np.nonzero(entered)[0]:
+                self._deadline[c] = now + (
+                    p.deadline_factor * max(cq[q_new[c]], 1) * t_min[c])
+        self._queue = np.where(table.active, q_new, self._queue)
+
+    # ---- the Fig. 7 schedule ---------------------------------------------
+    def schedule(self, table: FlowTable, now: float) -> np.ndarray:
+        p = self.params
+        live = table.flow_live()
+        rates = np.zeros(table.size.shape[0])
+        if not live.any():
+            return rates
+
+        q_new = self._assign_queues(table, now)
+        self._refresh_deadlines(table, q_new, now)
+
+        active = table.active.copy()
+        A_s, A_r = table.incidence(live)
+        k = contention(A_s, A_r, active)
+        expired = active & (now >= self._deadline)
+        self.stats_deadline_hits += int(expired.sum())
+
+        # LCoF order: deadline-expired first (FIFO-by-deadline among them),
+        # then (queue, contention, stability, arrival). Fig.7 lines 2-4.
+        # 'stability' prefers coflows admitted in the previous schedule on
+        # exact (queue, contention) ties — local agents follow the current
+        # schedule until told otherwise (§5), so ties do not cause churn.
+        cids = np.nonzero(active)[0]
+        if self.lcof:
+            key = [(0, self._deadline[c], 0, 0, 0, c) if expired[c] else
+                   (1, q_new[c], k[c], int(~self._running[c]),
+                    table.arrival[c], c) for c in cids]
+        else:  # FIFO within queue (the A/N-only ablation)
+            key = [(0, self._deadline[c], 0, 0, 0, c) if expired[c] else
+                   (1, q_new[c], table.arrival[c], 0, 0, c) for c in cids]
+        order = cids[sorted(range(len(cids)), key=lambda i: key[i])]
+
+        cnt_s, cnt_r = table.flow_counts(live)
+        avail_s = table.bw_send.copy()
+        avail_r = table.bw_recv.copy()
+        admitted = np.zeros(table.num_coflows, bool)
+        missed = []
+        for c in order:
+            cs, cr = cnt_s[c], cnt_r[c]
+            ps, pr = cs > 0, cr > 0
+            if not ps.any() and not pr.any():
+                continue
+            # MADD equal rate (D2): slowest-port rate for every flow
+            r = np.inf
+            if ps.any():
+                r = min(r, (avail_s[ps] / cs[ps]).min())
+            if pr.any():
+                r = min(r, (avail_r[pr] / cr[pr]).min())
+            if self.all_or_none and r < p.min_rate:
+                missed.append(c)
+                continue
+            if r <= 0.0:
+                missed.append(c)
+                continue
+            lo, hi = table.flow_lo[c], table.flow_hi[c]
+            seg = rates[lo:hi]
+            seg[live[lo:hi]] = r
+            avail_s -= r * cs
+            avail_r -= r * cr
+            admitted[c] = True
+            self.stats_admitted += 1
+
+        if self.work_conservation and missed:
+            # D4 lines 18-23: per-flow greedy fill of leftover bandwidth, in
+            # the missed-coflow order (the 'ordered list of the un-scheduled
+            # CoFlows').
+            wc_order = np.concatenate(
+                [np.arange(table.flow_lo[c], table.flow_hi[c])
+                 for c in missed])
+            before = rates > 0
+            greedy_flow_alloc(table, wc_order, live, avail_s, avail_r, rates)
+            self.stats_wc_flows += int(((rates > 0) & ~before).sum())
+
+        if p.wc_admitted_round:
+            # beyond-paper: raise the equal rate of admitted coflows when all
+            # of their ports still have slack (keeps MADD equal-rate shape).
+            for c in order:
+                cs, cr = cnt_s[c], cnt_r[c]
+                ps, pr = cs > 0, cr > 0
+                if not (ps.any() or pr.any()) or c in missed:
+                    continue
+                r = np.inf
+                if ps.any():
+                    r = min(r, (avail_s[ps] / cs[ps]).min())
+                if pr.any():
+                    r = min(r, (avail_r[pr] / cr[pr]).min())
+                if not np.isfinite(r) or r <= 0.0:
+                    continue
+                sel = live & (table.cid == c)
+                rates[sel] += r
+                avail_s -= r * cs
+                avail_r -= r * cr
+
+        self._running = admitted
+        return rates
+
+    # ---- simulator event hook ---------------------------------------------
+    def progress_events(self, table: FlowTable, now: float,
+                        rates: np.ndarray) -> float:
+        """Earliest of (a) a per-flow queue-threshold crossing, (b) a
+        starvation-deadline expiry, under constant `rates`."""
+        p = self.params
+        live = table.flow_live()
+        t = float("inf")
+        th = np.array(p.thresholds())
+        if self.per_flow_threshold:
+            # flow f of coflow c crosses when sent_f reaches Q_q^hi / N_c
+            q = self._queue[table.cid]
+            q = np.where(q < 0, 0, q)
+            lim = th[q] / np.maximum(table.width[table.cid], 1)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                dt = np.where(live & (rates > 0) & np.isfinite(lim),
+                              (lim - table.sent) / rates, np.inf)
+            dt = dt[dt > 1e-12]
+            if dt.size:
+                t = min(t, now + float(dt.min()))
+        else:
+            R = np.bincount(table.cid, weights=rates,
+                            minlength=table.num_coflows)
+            total = table.coflow_sent_total()
+            q = np.where(self._queue < 0, 0, self._queue)
+            nxt = th[q]
+            with np.errstate(divide="ignore", invalid="ignore"):
+                dt = np.where((R > 0) & np.isfinite(nxt) & table.active,
+                              (nxt - total) / R, np.inf)
+            dt = dt[dt > 1e-12]
+            if dt.size:
+                t = min(t, now + float(dt.min()))
+        dl = self._deadline[table.active & (self._deadline > now + 1e-12)]
+        if dl.size:
+            t = min(t, float(dl.min()))
+        return t

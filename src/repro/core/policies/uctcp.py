@@ -1,0 +1,18 @@
+"""UC-TCP: uncoordinated per-flow TCP fair sharing (§6.1) — every live
+flow gets its bipartite max-min fair share; no queues, no coordination."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.policies.base import Policy, maxmin_waterfill
+from repro.fabric.state import FlowTable
+
+
+class UCTCP(Policy):
+    name = "uc-tcp"
+
+    def schedule(self, table: FlowTable, now: float) -> np.ndarray:
+        live = table.flow_live()
+        if not live.any():
+            return np.zeros(table.size.shape[0])
+        return maxmin_waterfill(table, live)

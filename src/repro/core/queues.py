@@ -1,0 +1,52 @@
+"""Priority-queue threshold logic (Aalo-style exponential queues).
+
+Aalo assigns a coflow to queue q when its TOTAL bytes sent lies in
+[Q_{q-1}^hi, Q_q^hi).  Saath (Eq. 1) divides the threshold by the flow
+count N_c and compares against the MAX bytes sent by any single flow,
+which is the per-flow-threshold fast transition.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.params import SchedulerParams
+
+
+def queue_of(value: np.ndarray, params: SchedulerParams) -> np.ndarray:
+    """Queue index for a 'progress' value against exponential thresholds.
+
+    q = smallest q with value < Q_q^hi; values below Q_0^hi land in queue 0.
+    """
+    value = np.asarray(value, dtype=np.float64)
+    with np.errstate(divide="ignore"):
+        ratio = value / params.start_threshold
+    q = np.where(
+        ratio < 1.0, 0,
+        np.floor(np.log(np.maximum(ratio, 1.0)) / np.log(params.growth)) + 1)
+    return np.clip(q, 0, params.num_queues - 1).astype(np.int32)
+
+
+def aalo_queue(total_sent: np.ndarray, params: SchedulerParams) -> np.ndarray:
+    """Aalo: queue from TOTAL bytes sent by the coflow."""
+    return queue_of(total_sent, params)
+
+
+def saath_queue(max_flow_sent: np.ndarray, width: np.ndarray,
+                params: SchedulerParams) -> np.ndarray:
+    """Saath Eq. 1: per-flow thresholds — compare m_c against Q_q^hi/N_c,
+    i.e. m_c * N_c against Q_q^hi."""
+    return queue_of(np.asarray(max_flow_sent) * np.asarray(width), params)
+
+
+def min_queue_residence(queue: np.ndarray, width: np.ndarray,
+                        params: SchedulerParams) -> np.ndarray:
+    """t in the deadline formula d*C_q*t (§4.2 D5): the minimum time a
+    coflow must spend in queue q — the per-flow span of the queue sent at
+    full port rate."""
+    th = params.thresholds()
+    lo = np.array([0.0] + th[:-1])
+    hi = np.array(th)
+    # last queue is unbounded; use one growth step beyond its lower bound
+    hi[-1] = lo[-1] * params.growth if len(th) > 1 else params.start_threshold
+    span = (hi - lo)[queue]
+    return span / (np.maximum(width, 1) * params.port_bw)

@@ -1,0 +1,4 @@
+from repro.fabric.engine import SimResult, Simulator, simulate
+from repro.fabric.state import FlowTable
+
+__all__ = ["FlowTable", "Simulator", "SimResult", "simulate"]

@@ -1,0 +1,177 @@
+"""Event-driven fabric simulator (the paper's §6 simulation plane).
+
+Faithful to the paper's coordinator model: the schedule is recomputed on
+the δ grid; between recomputations ports follow the current rates.  For
+speed the simulator is *event-driven*: it jumps directly to the next
+time the schedule could change — a coflow arrival, a flow completion, a
+queue-threshold crossing, a starvation deadline — then quantizes that
+instant UP to the δ grid (a new schedule only takes effect at the next
+coordinator tick, exactly like the prototype's pipelined coordinator).
+A flow finishing mid-interval leaves its ports idle until the next tick,
+reproducing the δ-sensitivity of Fig. 14(c).
+
+Flow completion times are recorded exactly (not grid-quantized): rates
+are constant inside an interval so the completion instant is algebraic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import TYPE_CHECKING, Optional
+
+import numpy as np
+
+from repro.core.params import SchedulerParams
+from repro.fabric.state import FlowTable
+
+if TYPE_CHECKING:  # avoid circular import (policies import fabric.state)
+    from repro.core.policies.base import Policy
+
+
+@dataclasses.dataclass
+class SimResult:
+    table: FlowTable
+    steps: int            # scheduler invocations
+    wall_seconds: float   # host time spent simulating
+    sched_seconds: float  # host time spent inside policy.schedule
+    makespan: float       # last CCT
+
+    @property
+    def cct(self) -> np.ndarray:
+        return self.table.cct
+
+    @property
+    def avg_cct(self) -> float:
+        return float(np.nanmean(self.table.cct))
+
+
+def _quantize_up(t: float, delta: float) -> float:
+    k = math.ceil(t / delta - 1e-9)
+    return k * delta
+
+
+class Simulator:
+    """Replays a FlowTable under a Policy.
+
+    max_jump bounds the event horizon so policies whose priorities drift
+    continuously (e.g. SRTF remaining-bytes swaps) are re-evaluated at
+    least every `max_jump` seconds even with no discrete event.
+    """
+
+    def __init__(self, params: SchedulerParams, *,
+                 max_jump: Optional[float] = None,
+                 max_steps: int = 50_000_000):
+        self.params = params
+        self.max_jump = max_jump if max_jump is not None else 200 * params.delta
+        self.max_steps = max_steps
+
+    # ---- event horizon ---------------------------------------------------
+    def _next_event(self, table: FlowTable, policy: Policy, now: float,
+                    rates: np.ndarray, next_arrival: float) -> float:
+        live = table.flow_live()
+        t = next_arrival
+        # flow completions at current rates
+        srv = live & (rates > 0)
+        if srv.any():
+            t_fin = now + (table.size[srv] - table.sent[srv]) / rates[srv]
+            t = min(t, float(t_fin.min()))
+        # policy-internal events (queue-threshold crossings, deadlines)
+        t = min(t, policy.progress_events(table, now, rates))
+        t = min(t, now + self.max_jump)
+        return t
+
+    def _activate(self, table: FlowTable, now: float) -> None:
+        dep_ok = np.ones(table.num_coflows, bool)
+        if table.deps is not None:
+            dep_ok = table.deps_satisfied()
+        table.active[:] = ((table.arrival <= now + 1e-12) & ~table.finished
+                           & dep_ok)
+
+    def run(self, table: FlowTable, policy: Policy) -> SimResult:
+        p = self.params
+        t0 = time.perf_counter()
+        sched_s = 0.0
+        policy.reset(table)
+
+        arrivals = np.sort(np.unique(table.arrival))
+        if arrivals.size == 0:
+            return SimResult(table, 0, 0.0, 0.0, 0.0)
+        now = _quantize_up(float(arrivals[0]), p.delta)
+        steps = 0
+
+        while steps < self.max_steps:
+            self._activate(table, now)
+            if table.finished.all():
+                break
+            live = table.flow_live()
+            future = arrivals[arrivals > now + 1e-12]
+            next_arrival = float(future[0]) if future.size else math.inf
+            if not live.any():
+                if math.isinf(next_arrival):
+                    # DAG deps may unlock coflows without new arrivals
+                    if not table.finished.all():
+                        raise RuntimeError("simulator stalled: unfinished "
+                                           "coflows with no live flows")
+                    break
+                now = _quantize_up(next_arrival, p.delta)
+                continue
+
+            s0 = time.perf_counter()
+            rates = policy.schedule(table, now)
+            sched_s += time.perf_counter() - s0
+            steps += 1
+
+            served = live & (rates > 0)
+            table.first_sched[served & np.isnan(table.first_sched)] = now
+
+            t_ev = self._next_event(table, policy, now, rates, next_arrival)
+            if math.isinf(t_ev):
+                raise RuntimeError(
+                    f"simulator deadlock at t={now:.3f}: no rates, no events "
+                    f"({int(live.sum())} live flows)")
+            t_next = max(_quantize_up(t_ev, p.delta), now + p.delta)
+            dt = t_next - now
+
+            # advance flows; record exact completion instants
+            adv = rates * dt
+            rem = table.size - table.sent
+            fin = live & (adv >= rem - 1e-9) & (rates > 0)
+            if fin.any():
+                table.fct[fin] = now + rem[fin] / rates[fin]
+                table.done[fin] = True
+                table.sent[fin] = table.size[fin]
+            grow = live & ~fin
+            table.sent[grow] = np.minimum(table.size[grow],
+                                          table.sent[grow] + adv[grow])
+            table.rate[:] = rates
+
+            # coflow completions: CCT = last FCT - arrival
+            if fin.any():
+                for c in np.unique(table.cid[fin]):
+                    lo, hi = table.flow_lo[c], table.flow_hi[c]
+                    if table.done[lo:hi].all() and not table.finished[c]:
+                        table.finished[c] = True
+                        table.active[c] = False
+                        last = float(np.nanmax(table.fct[lo:hi]))
+                        table.cct[c] = last - table.arrival[c]
+            now = t_next
+        else:
+            raise RuntimeError("simulator exceeded max_steps")
+
+        makespan = float(np.nanmax(table.fct)) if np.isfinite(
+            np.nanmax(table.fct)) else 0.0
+        return SimResult(table, steps, time.perf_counter() - t0, sched_s,
+                         makespan)
+
+
+def simulate(trace, policy_name: str, params: Optional[SchedulerParams] = None,
+             *, policy_kwargs: Optional[dict] = None,
+             max_jump: Optional[float] = None) -> SimResult:
+    """One-call convenience: trace + policy name -> SimResult."""
+    from repro.core.policies import make_policy
+
+    params = params or SchedulerParams()
+    table = FlowTable.from_trace(trace, params.port_bw)
+    policy = make_policy(policy_name, params, **(policy_kwargs or {}))
+    return Simulator(params, max_jump=max_jump).run(table, policy)

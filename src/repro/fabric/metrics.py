@@ -1,0 +1,94 @@
+"""Evaluation metrics used by the paper's figures.
+
+All CCT/FCT durations are measured from the coflow's arrival (the paper's
+CCT definition: first flow arrives -> last flow completes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.fabric.state import FlowTable
+
+MB = 1024.0 * 1024.0
+
+
+def percentile_speedup(cct_base: np.ndarray, cct_new: np.ndarray,
+                       qs=(10, 50, 90)) -> dict:
+    """Per-coflow speedup = CCT_base / CCT_new (Fig. 9's metric)."""
+    ok = np.isfinite(cct_base) & np.isfinite(cct_new) & (cct_new > 0)
+    s = cct_base[ok] / cct_new[ok]
+    out = {f"p{q}": float(np.percentile(s, q)) for q in qs}
+    out["mean"] = float(s.mean())
+    out["overall"] = float(np.mean(cct_base[ok]) / np.mean(cct_new[ok]))
+    out["n"] = int(ok.sum())
+    return out
+
+
+def fct_normalized_std(table: FlowTable) -> dict:
+    """Fig. 2(c)/13: per-coflow std of flow completion *durations*
+    normalized by their mean, split by equal/unequal flow lengths.
+    Single-flow coflows are excluded (as in the paper)."""
+    eq, uneq = [], []
+    for c in range(table.num_coflows):
+        lo, hi = table.flow_lo[c], table.flow_hi[c]
+        if hi - lo < 2 or not table.finished[c]:
+            continue
+        d = table.fct[lo:hi] - table.arrival[c]
+        v = float(d.std() / max(d.mean(), 1e-12))
+        sizes = table.size[lo:hi]
+        (eq if sizes.std() <= 1e-9 * max(sizes.mean(), 1.0) else
+         uneq).append(v)
+    return {"equal": np.asarray(eq), "unequal": np.asarray(uneq)}
+
+
+def width_size_bins(table: FlowTable) -> np.ndarray:
+    """Table 1 bins: 1 = small/thin, 2 = small/wide, 3 = large/thin,
+    4 = large/wide. width<=10, size<=100MB are 'thin'/'small'."""
+    total = np.zeros(table.num_coflows)
+    np.add.at(total, table.cid, table.size)
+    thin = table.width <= 10
+    small = total <= 100 * MB
+    return np.where(small & thin, 1,
+                    np.where(small & ~thin, 2, np.where(thin, 3, 4)))
+
+
+def bin_speedups(table_base: FlowTable, table_new: FlowTable,
+                 qs=(50,)) -> dict:
+    """Fig. 11/12: median speedup per Table-1 bin + bin fractions."""
+    bins = width_size_bins(table_base)
+    out = {}
+    for b in (1, 2, 3, 4):
+        sel = bins == b
+        if sel.sum() == 0:
+            out[f"bin{b}"] = {"frac": 0.0}
+            continue
+        d = percentile_speedup(table_base.cct[sel], table_new.cct[sel], qs)
+        d["frac"] = float(sel.mean())
+        out[f"bin{b}"] = d
+    return out
+
+
+@dataclasses.dataclass
+class RunSummary:
+    policy: str
+    avg_cct: float
+    p50_cct: float
+    p90_cct: float
+    makespan: float
+    steps: int
+    sched_seconds: float
+
+    @staticmethod
+    def from_result(policy: str, res) -> "RunSummary":
+        cct = res.table.cct
+        return RunSummary(
+            policy=policy,
+            avg_cct=float(np.nanmean(cct)),
+            p50_cct=float(np.nanpercentile(cct, 50)),
+            p90_cct=float(np.nanpercentile(cct, 90)),
+            makespan=res.makespan,
+            steps=res.steps,
+            sched_seconds=res.sched_seconds,
+        )

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for coflow contention k_c (the LCoF hot spot).
+
+k_c = #other coflows sharing >=1 sender or receiver port with coflow c.
+
+Shaped as an MXU problem: S = A_s A_s^T + A_r A_r^T over the (C, P)
+{0,1} incidence matrices, then k_c = row-count of S > 0 (minus self).
+The grid tiles (C x C) into (bc x bc) blocks; each block needs two
+(bc, P) incidence strips in VMEM and accumulates a (bc,) partial count
+into the output, so VMEM = 4 * bc * P * 4B + bc * 4B. With bc = 256 and
+P = 512 padded that is ~2 MB — far under the ~16 MB v5e VMEM budget,
+and both MXU operands are 128-aligned after ops.py padding.
+
+Table 2 of the paper shows LCoF ordering is half the coordinator's
+compute; this kernel is why the in-framework coordinator stays <<1 ms at
+512 ports x 4096 coflows (benchmarks/table2_coordinator_latency.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _contention_kernel(a_s_row, a_r_row, a_s_col, a_r_col, k_ref, *, bc):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    s = jnp.dot(a_s_row[...], a_s_col[...].T,
+                preferred_element_type=jnp.float32)
+    s += jnp.dot(a_r_row[...], a_r_col[...].T,
+                 preferred_element_type=jnp.float32)
+    blocks = (s > 0.5).astype(jnp.float32)   # (bc, bc) "c blocks c'"
+    # on the diagonal block, remove self-contention
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (bc, bc), 0)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (bc, bc), 1)
+    on_diag = (i == j) & (row_ids == col_ids)
+    blocks = jnp.where(on_diag, 0.0, blocks)
+    partial = blocks.sum(axis=1)             # (bc,)
+
+    @pl.when(j == 0)
+    def _init():
+        k_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        k_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def contention_pallas(a_send: jax.Array, a_recv: jax.Array,
+                      active: jax.Array, *, bc: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """a_send/a_recv: (C, P) float32 {0,1}; active: (C,) bool.
+
+    Returns (C,) int32 contention counts (0 for inactive coflows).
+    C and P are padded to multiples of (bc, 128) here; callers pass any
+    shape.
+    """
+    C, P = a_send.shape
+    Cp = -(-C // bc) * bc
+    Pp = -(-P // 128) * 128
+    act = active.astype(a_send.dtype)[:, None]
+    a_s = jnp.zeros((Cp, Pp), a_send.dtype).at[:C, :P].set(a_send * act)
+    a_r = jnp.zeros((Cp, Pp), a_recv.dtype).at[:C, :P].set(a_recv * act)
+
+    grid = (Cp // bc, Cp // bc)
+    strip = pl.BlockSpec((bc, Pp), lambda i, j: (i, 0))
+    stripT = pl.BlockSpec((bc, Pp), lambda i, j: (j, 0))
+    out = pl.BlockSpec((bc,), lambda i, j: (i,))
+    k = pl.pallas_call(
+        functools.partial(_contention_kernel, bc=bc),
+        grid=grid,
+        in_specs=[strip, strip, stripT, stripT],
+        out_specs=out,
+        out_shape=jax.ShapeDtypeStruct((Cp,), jnp.float32),
+        interpret=interpret,
+    )(a_s, a_r, a_s, a_r)
+    return jnp.where(active, k[:C].astype(jnp.int32), 0)

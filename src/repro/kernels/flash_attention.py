@@ -1,0 +1,123 @@
+"""Pallas TPU flash attention (forward) — tiled online-softmax prefill.
+
+Used by the 32k-prefill path on TPU. Grid = (B*H, Sq/bq, Skv/bk) with the
+kv dimension innermost (sequential on TPU), carrying the running softmax
+state (m, l, acc) in VMEM scratch across kv iterations — the classic
+FlashAttention-2 schedule adapted to the MXU: bq x bk = 256 x 512 blocks
+keep both matmuls (s = q k^T and p v) 128-aligned, and the working set
+(q, k, v blocks + acc) is ~1.5 MB of VMEM.
+
+GQA is handled without materializing repeated KV heads: the kv BlockSpec
+index map divides the query-head grid index by the group size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq, bk, scale, causal, q_offset, kv_len):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip blocks that are entirely masked under causality
+    q_hi = q_offset + i * bq + bq - 1   # largest absolute q position
+    k_lo = j * bk
+    run = (not causal) or (k_lo <= q_hi)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        q_ids = q_offset + i * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        k_ids = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_ids < kv_len
+        if causal:
+            mask &= k_ids <= q_ids
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = s.max(axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_prev + p.sum(axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "q_offset", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = 256, bk: int = 512,
+                           q_offset: int = 0,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, D); k, v: (B, Hkv, T, D) with H % Hkv == 0.
+
+    q_offset: absolute position of q[0] (chunked prefill against a longer
+    KV). Returns (B, H, S, D) in q.dtype.
+    """
+    B, H, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    G = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    bq = min(bq, max(S, 8))
+    bk = min(bk, max(T, 128))
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    qq = jnp.zeros((B * H, Sp, D), q.dtype).at[:, :S].set(
+        q.reshape(B * H, S, D))
+    kk = jnp.zeros((B * Hkv, Tp, D), k.dtype).at[:, :T].set(
+        k.reshape(B * Hkv, T, D))
+    vv = jnp.zeros((B * Hkv, Tp, D), v.dtype).at[:, :T].set(
+        v.reshape(B * Hkv, T, D))
+
+    grid = (B * H, Sp // bq, Tp // bk)
+    from jax.experimental.pallas import tpu as pltpu
+
+    o = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
+                          causal=causal, q_offset=q_offset, kv_len=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, i, j, G=G: (bh // G, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, i, j, G=G: (bh // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qq, kk, vv)
+    return o[:, :S].reshape(B, H, S, D)

@@ -1,0 +1,75 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Each op dispatches: TPU -> compiled Pallas kernel; everywhere else ->
+the pure-jnp oracle in ref.py (identical semantics, lowerable on any
+backend — this is what the CPU dry-run and the smoke tests compile).
+Set ``force='pallas'`` / ``force='ref'`` / ``force='interpret'`` to pin
+a path (tests use 'interpret' to execute the kernel body on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.contention import contention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.maxmin import maxmin_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+# maxmin kernel VMEM budget (see maxmin.py)
+_MAXMIN_MAX_P = 256
+_MAXMIN_MAX_F = 4096
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+def _path(force: str | None) -> str:
+    if force is not None:
+        return force
+    return "pallas" if _on_tpu() else "ref"
+
+
+def contention(a_send, a_recv, active, *, force: str | None = None):
+    p = _path(force)
+    if p == "ref":
+        return ref.contention_ref(a_send, a_recv, active)
+    return contention_pallas(a_send, a_recv, active,
+                             interpret=(p == "interpret"))
+
+
+def maxmin_rates(src_onehot, dst_onehot, live, bw_send, bw_recv, *,
+                 force: str | None = None):
+    p = _path(force)
+    P, F = src_onehot.shape
+    if p == "ref" or P > _MAXMIN_MAX_P or F > _MAXMIN_MAX_F:
+        return ref.maxmin_ref(src_onehot, dst_onehot, live, bw_send, bw_recv)
+    return maxmin_pallas(src_onehot, dst_onehot, live, bw_send, bw_recv,
+                         interpret=(p == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    force: str | None = None, **kw):
+    p = _path(force)
+    if p == "ref":
+        assert q_offset == 0, "ref path is offset-free (full prefill)"
+        return ref.attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(q, k, v, causal=causal, q_offset=q_offset,
+                                  interpret=(p == "interpret"), **kw)
+
+
+def ssd_scan(x, dt, a, b, c, *, init_state=None, force: str | None = None,
+             **kw):
+    p = _path(force)
+    if p == "ref":
+        return ref.ssd_ref(x, dt, a, b, c, init_state=init_state)
+    return ssd_scan_pallas(x, dt, a, b, c, init_state=init_state,
+                           interpret=(p == "interpret"), **kw)
+
+
+__all__ = ["contention", "maxmin_rates", "flash_attention", "ssd_scan"]

@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel (CPU-runnable ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def contention_ref(a_send: jax.Array, a_recv: jax.Array,
+                   active: jax.Array) -> jax.Array:
+    """(C,P) incidence + (C,) active -> (C,) int32 contention counts."""
+    act = active.astype(a_send.dtype)[:, None]
+    a_s = a_send * act
+    a_r = a_recv * act
+    share = a_s @ a_s.T + a_r @ a_r.T
+    blocks = share > 0.5
+    k = blocks.sum(axis=1) - jnp.diagonal(blocks)
+    return jnp.where(active, k.astype(jnp.int32), 0)
+
+
+def maxmin_ref(src_onehot: jax.Array, dst_onehot: jax.Array,
+               live: jax.Array, bw_send: jax.Array, bw_recv: jax.Array,
+               num_rounds: int | None = None) -> jax.Array:
+    """Bipartite max-min fair rates by progressive filling.
+
+    src_onehot/dst_onehot: (P, F) {0,1}; live: (F,) bool; bw: (P,).
+    Returns (F,) rates. Matches core.policies.base.maxmin_waterfill.
+    """
+    P, F = src_onehot.shape
+    rounds = num_rounds or 2 * P + 2
+    big = jnp.float32(1e30)
+
+    def body(state, _):
+        rates, frozen, avail_s, avail_r = state
+        act = (~frozen) & live
+        actf = act.astype(jnp.float32)
+        cnt_s = src_onehot @ actf
+        cnt_r = dst_onehot @ actf
+        lvl_s = jnp.where(cnt_s > 0, avail_s / jnp.maximum(cnt_s, 1.0), big)
+        lvl_r = jnp.where(cnt_r > 0, avail_r / jnp.maximum(cnt_r, 1.0), big)
+        lvl = jnp.minimum(lvl_s.min(), lvl_r.min())
+        any_act = act.any()
+        sat_s = (lvl_s <= lvl + 1e-12) & (cnt_s > 0)
+        sat_r = (lvl_r <= lvl + 1e-12) & (cnt_r > 0)
+        hit = act & ((sat_s @ src_onehot) + (sat_r @ dst_onehot) > 0.5)
+        hit = hit & any_act
+        rates = jnp.where(hit, lvl, rates)
+        hitf = hit.astype(jnp.float32)
+        avail_s = jnp.maximum(avail_s - lvl * (src_onehot @ hitf), 0.0)
+        avail_r = jnp.maximum(avail_r - lvl * (dst_onehot @ hitf), 0.0)
+        return (rates, frozen | hit, avail_s, avail_r), None
+
+    init = (jnp.zeros(F, jnp.float32), ~live,
+            bw_send.astype(jnp.float32), bw_recv.astype(jnp.float32))
+    (rates, _, _, _), _ = jax.lax.scan(body, init, None, length=rounds)
+    return rates
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: float | None = None,
+                  logit_dtype=jnp.float32) -> jax.Array:
+    """(B, H, S, D) x (B, Hkv, T, D) GQA attention, materialized softmax."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, G, S, D)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qg.astype(logit_dtype),
+                        k.astype(logit_dtype)) * scale
+    if causal:
+        T = k.shape[2]
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(logit_dtype))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array, *, init_state: jax.Array | None = None):
+    """Mamba-2 SSD (state-space dual) sequential reference.
+
+    x: (B, L, H, Dh) inputs; dt: (B, L, H) step sizes (post-softplus);
+    a: (H,) negative state decay rates (A = -exp(a_log));
+    b, c: (B, L, G, N) input/output projections (G state groups, heads
+    grouped H//G per group). Returns (y, final_state) with y shaped like
+    x and state (B, H, Dh, N).
+
+    Recurrence per head h (group g = h // (H//G)):
+      S_t = exp(dt_t * a_h) * S_{t-1} + dt_t * x_t b_t^T
+      y_t = S_t c_t
+    """
+    B, L, H, Dh = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=2)  # (B, L, H, N)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, Dh, N), jnp.float32))
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp     # (B,H,Dh), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * a)[..., None, None]           # (B,H,1,1)
+        s = decay * s + (dtt[..., None, None]
+                         * xt[..., None] * bt[:, :, None, :])
+        yt = jnp.einsum("bhdn,bhn->bhd", s, ct)
+        return s, yt
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bh, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(ch, 1, 0).astype(jnp.float32))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B, L, H, Dh)
+    return y, s_fin

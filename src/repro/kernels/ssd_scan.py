@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan (arXiv:2405.21060).
+
+State-space duality: within a chunk of length Lc the recurrence
+
+    S_t = exp(dt_t a) S_{t-1} + dt_t x_t b_t^T ,   y_t = S_t c_t
+
+is computed as a (masked, decay-weighted) attention-like matmul, and the
+state is carried *across* chunks in VMEM scratch through the sequential
+chunk grid dimension — the TPU-native replacement for the paper's
+(GPU) warp-level scan:
+
+    y_intra = [ (c_c b_c^T) ⊙ decay(t,u) ⊙ dt_u, lower-tri ] @ x_c
+    y_inter = exp(cum_t) * (c_c @ S_prev^T)
+    S_new   = exp(cum_L) S_prev + (x ⊙ dt exp(cum_L - cum))^T @ b_c
+
+Grid = (B*H, L/Lc), chunk innermost. Per-step VMEM: x, b, c chunks +
+(Lc, Lc) decay matrix + (Dh, N) state ≈ 0.6 MB at Lc=128, Dh=64, N=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, dta_ref, b_ref, c_ref, s0_ref,
+                y_ref, sfin_ref, state_ref, *, lc):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)        # (Lc, Dh)
+    dt = dt_ref[0].astype(jnp.float32)      # (Lc, 1)
+    dta = dta_ref[0].astype(jnp.float32)    # (Lc, 1)  = dt * a_h
+    b = b_ref[0].astype(jnp.float32)        # (Lc, N)
+    c = c_ref[0].astype(jnp.float32)        # (Lc, N)
+
+    cum = jnp.cumsum(dta, axis=0)           # (Lc, 1) inclusive
+    # decay(t, u) = exp(cum_t - cum_u) for u <= t
+    diff = cum - cum.reshape(1, lc)         # (Lc, Lc) cum_t - cum_u
+    rows = jax.lax.broadcasted_iota(jnp.int32, (lc, lc), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (lc, lc), 1)
+    tri = rows >= cols
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+
+    g = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (Lc, Lc)
+    m = g * decay * dt.reshape(1, lc)
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32)    # intra
+
+    s_prev = state_ref[...]                 # (Dh, N)
+    y += jnp.exp(cum) * jnp.dot(c, s_prev.T,
+                                preferred_element_type=jnp.float32)
+
+    cl = cum[lc - 1]                        # (1,) total chunk decay
+    w = jnp.exp(cl - cum) * dt              # (Lc, 1)
+    s_new = jnp.exp(cl) * s_prev + jnp.dot(
+        (x * w).T, b, preferred_element_type=jnp.float32)
+    state_ref[...] = s_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(j == nj - 1)
+    def _fin():
+        sfin_ref[0] = s_new.astype(sfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lc", "interpret"))
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, a: jax.Array,
+                    b: jax.Array, c: jax.Array, *,
+                    init_state: jax.Array | None = None,
+                    lc: int = 128, interpret: bool = False):
+    """x: (B, L, H, Dh); dt: (B, L, H); a: (H,); b, c: (B, L, G, N).
+
+    L must be a multiple of lc. Returns (y (B, L, H, Dh),
+    final_state (B, H, Dh, N)); matches ref.ssd_ref.
+    """
+    B, L, H, Dh = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    assert L % lc == 0, "pad L to a multiple of the chunk length"
+
+    # layout: fold heads into the leading grid axis
+    xx = jnp.moveaxis(x, 2, 1).reshape(B * H, L, Dh)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(B * H, L, 1)
+    dta = dtt * jnp.tile(a, B)[:, None, None]   # per-head a, bh = b*H + h
+    bb = jnp.moveaxis(b, 2, 1).reshape(B * G, L, N)
+    cc = jnp.moveaxis(c, 2, 1).reshape(B * G, L, N)
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, Dh, N), jnp.float32)).reshape(B * H, Dh, N)
+
+    grid = (B * H, L // lc)
+    from jax.experimental.pallas import tpu as pltpu
+
+    y, sfin = pl.pallas_call(
+        functools.partial(_ssd_kernel, lc=lc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, lc, Dh), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, lc, 1), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, lc, 1), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, lc, N),
+                         lambda bh, j, rep=rep: (bh // rep, j, 0)),
+            pl.BlockSpec((1, lc, N),
+                         lambda bh, j, rep=rep: (bh // rep, j, 0)),
+            pl.BlockSpec((1, Dh, N), lambda bh, j: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, lc, Dh), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, Dh, N), lambda bh, j: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, L, Dh), x.dtype),
+            jax.ShapeDtypeStruct((B * H, Dh, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dh, N), jnp.float32)],
+        interpret=interpret,
+    )(xx, dtt, dta, bb, cc, s0)
+    y = jnp.moveaxis(y.reshape(B, H, L, Dh), 1, 2)
+    return y, sfin.reshape(B, H, Dh, N)

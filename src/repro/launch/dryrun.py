@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import: jax locks the device count at first
+# initialization. The dry-run (and only the dry-run) builds the 512-chip
+# production mesh out of host placeholder devices.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, cell_is_runnable,  # noqa: E402
+                           get_config)
+from repro.launch import steps as ST                            # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.optim import make_optimizer                          # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this prints/records:
+  * compiled.memory_analysis()  — proves the cell fits per-chip HBM;
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline;
+  * the collective mix parsed from the compiled HLO (bytes per device
+    per collective kind) — the §Roofline collective term.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out experiments/dryrun
+"""
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_TYPE_RE = re.compile(r"(bf16|f32|f16|f64|s32|s8|u8|u32|s64|pred|f8\w*)"
+                      r"\[([0-9,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "s64": 8, "pred": 1}
+
+
+def _result_bytes(line: str) -> int:
+    """Sum result-tuple array bytes on an HLO op line (lhs of '=')."""
+    lhs = line.split("=")[0] if "=" in line else line
+    total = 0
+    for m in _TYPE_RE.finditer(lhs):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES.get(dt, 2)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [ngroups,group_size]
+        return int(m.group(2))
+    return default
+
+
+def collective_bytes(hlo: str, num_devices: int) -> dict:
+    """Per-device link-bytes estimate by collective kind.
+
+    Ring estimates: AG/A2A move result*(g-1)/g; AR moves 2x that
+    (reduce-scatter + all-gather phases); RS moves operand*(g-1)/g =
+    result*(g-1); permute moves the full result.
+    """
+    out = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.search(r"= .*? ([a-z\-]+)\(", ls)
+        kind = None
+        for k in COLLECTIVES:
+            if m and m.group(1) == k or f" {k}(" in ls:
+                kind = k
+                break
+        if kind is None or ls.startswith("ROOT tuple"):
+            continue
+        if "-start(" in ls or "-done(" in ls:
+            # async pairs: count only the -start
+            if "-done(" in ls:
+                continue
+        rb = _result_bytes(ls)
+        g = _group_size(ls, num_devices)
+        if kind == "all-gather":
+            b = rb * (g - 1) / max(g, 1)
+        elif kind == "all-reduce":
+            b = 2.0 * rb * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            b = rb * (g - 1)
+        elif kind == "all-to-all":
+            b = rb * (g - 1) / max(g, 1)
+        else:
+            b = float(rb)
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False):
+    """Build + lower one cell. Returns (lowered, info dict)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    par = ST.build_parallelism(mesh)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return None, {"skipped": True, "reason": why}
+
+    with mesh:
+        params_sds, axes, meta, specs = ST.abstract_model(cfg, par)
+        if shape.kind == "train":
+            opt = make_optimizer(cfg)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            ospecs = ST.opt_state_specs(cfg, opt_sds, specs, par)
+            if ospecs is not None:
+                opt_sds = ST.shard_sds(opt_sds, ospecs, par)
+            step_fn = ST.jit_train_step(cfg, meta, par, opt, specs)
+            batch = ST.input_specs(cfg, shape, par)
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = step_fn.lower(params_sds, opt_sds, step_sds, batch)
+        elif shape.kind == "prefill":
+            cache_sds, cspecs = ST.abstract_cache(cfg, meta, shape, par)
+            fn = jax.jit(ST.make_prefill_step(cfg, meta, par),
+                         donate_argnums=(2,))
+            batch = ST.input_specs(cfg, shape, par)
+            lowered = fn.lower(params_sds, batch, cache_sds)
+        else:
+            cache_sds, cspecs = ST.abstract_cache(cfg, meta, shape, par)
+            fn = jax.jit(ST.make_decode_step(cfg, meta, par),
+                         donate_argnums=(2,))
+            batch = ST.input_specs(cfg, shape, par)
+            kv_len = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = fn.lower(params_sds, batch["tokens"], cache_sds,
+                               kv_len)
+    return lowered, {"mesh": list(mesh.devices.shape),
+                     "axes": list(mesh.axis_names)}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save_hlo: str | None = None) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name,
+           "multi_pod": multi_pod}
+    try:
+        lowered, info = lower_cell(arch, shape_name, multi_pod=multi_pod)
+        rec.update(info)
+        if lowered is None:
+            return rec
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, f, None)
+                if v is not None:
+                    rec[f] = int(v)
+        print("memory_analysis:", mem)
+        cost = compiled.cost_analysis()
+        if cost:
+            rec["flops"] = float(cost.get("flops", -1))
+            rec["bytes_accessed"] = float(cost.get("bytes accessed", -1))
+            rec["transcendentals"] = float(cost.get("transcendentals", 0))
+        print("cost_analysis: flops=%.4g bytes=%.4g" % (
+            rec.get("flops", -1), rec.get("bytes_accessed", -1)))
+        ndev = 512 if multi_pod else 256
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo, ndev)
+        rec["hlo_lines"] = hlo.count("\n")
+        print("collectives:", json.dumps(rec["collectives"]))
+        if save_hlo:
+            with open(save_hlo, "w") as fh:
+                fh.write(hlo)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id, e.g. starcoder2-3b (see configs)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in cells:
+        tag = f"{ARCH_IDS.get(arch, arch)}.{shape}" + (
+            ".multipod" if args.multi_pod else ".pod")
+        print(f"=== dryrun {tag} ===", flush=True)
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       save_hlo=args.save_hlo)
+        path = os.path.join(args.out, tag + ".json")
+        with open(path, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        status = ("SKIP" if rec.get("skipped")
+                  else "OK" if rec.get("ok") else "FAIL")
+        print(f"=== {tag}: {status} ({rec.get('total_s', 0)}s) ===",
+              flush=True)
+        if status == "FAIL":
+            print(rec.get("error"))
+            print(rec.get("traceback", "")[-2000:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Jittable train / prefill / decode steps with production shardings.
+
+Everything here works on either real arrays or ShapeDtypeStructs — the
+dry-run lowers the very same step functions the trainer executes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.models.common import Parallelism, logical_to_spec, param_specs
+
+
+# ------------------------------------------------------------- parallelism
+def build_parallelism(mesh) -> Parallelism:
+    if mesh is None:
+        return Parallelism(None)
+    names = mesh.axis_names
+    data_axes = tuple(n for n in names if n in ("pod", "data"))
+    model_axis = "model" if "model" in names else None
+    return Parallelism(mesh=mesh, data_axes=data_axes,
+                       model_axis=model_axis)
+
+
+# --------------------------------------------------------- abstract state
+def abstract_model(cfg: ModelConfig, par: Parallelism):
+    """(params_sds_with_shardings, axes, meta, specs) without allocating."""
+    holder = {}
+
+    def _init(key):
+        params, axes, meta = lm.init_model(cfg, key)
+        holder["axes"] = axes
+        holder["meta"] = meta
+        return params
+
+    params_sds = jax.eval_shape(_init, jax.random.key(0))
+    axes, meta = holder["axes"], holder["meta"]
+    specs = param_specs(params_sds, axes, par)
+    if par.mesh is not None:
+        params_sds = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=NamedSharding(par.mesh, sp)),
+            params_sds, specs)
+    return params_sds, axes, meta, specs
+
+
+def materialize_model(cfg: ModelConfig, par: Parallelism, seed: int = 0):
+    """Really init params (smoke/examples scale), sharded if on a mesh."""
+    holder = {}
+
+    def _init(key):
+        params, axes, meta = lm.init_model(cfg, key)
+        holder["axes"] = axes
+        holder["meta"] = meta
+        return params
+
+    if par.mesh is None:
+        params = _init(jax.random.key(seed))
+        return params, holder["axes"], holder["meta"], None
+    sds = jax.eval_shape(_init, jax.random.key(seed))
+    specs = param_specs(sds, holder["axes"], par)
+    shardings = jax.tree.map(
+        lambda sp: NamedSharding(par.mesh, sp), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    params = jax.jit(_init, out_shardings=shardings)(jax.random.key(seed))
+    return params, holder["axes"], holder["meta"], specs
+
+
+# ------------------------------------------------------------ input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, par: Parallelism,
+                *, src_len: int = 4096):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+
+    def sds(shp, dtype, axes):
+        if par.mesh is None:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        spec = logical_to_spec(axes, shp, par)
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=NamedSharding(par.mesh, spec))
+
+    out = {}
+    if shape.kind == "train":
+        out["tokens"] = sds((B, S), jnp.int32, ("batch", None))
+        out["labels"] = sds((B, S), jnp.int32, ("batch", None))
+        if cfg.enc_dec:
+            out["src_embeds"] = sds((B, src_len, cfg.d_model), jnp.bfloat16,
+                                    ("batch", None, None))
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((B, S), jnp.int32, ("batch", None))
+        if cfg.enc_dec:
+            out["src_embeds"] = sds((B, src_len, cfg.d_model), jnp.bfloat16,
+                                    ("batch", None, None))
+    else:  # decode: one new token against a seq_len KV cache
+        out["tokens"] = sds((B, 1), jnp.int32, ("batch", None))
+    return out
+
+
+# ------------------------------------------------------------- cache specs
+_CACHE_SPEC_BY_KEY = {
+    # key -> logical axes AFTER the leading (groups,) dim. Decode shards
+    # the cache on the SEQUENCE dim (flash-decoding style): heads stay
+    # replicated, every chip scans its slice of the context.
+    "k": (None, "batch", "kv_seq", None, None),
+    "v": (None, "batch", "kv_seq", None, None),
+    "ckv": (None, "batch", "kv_seq", None),
+    "krope": (None, "batch", "kv_seq", None),
+    "conv": (None, "batch", None, "ssm_heads"),
+    "ssd": (None, "batch", "ssm_heads", None, None),
+    "cross_k": (None, "batch", None, "kv_heads", None),
+    "cross_v": (None, "batch", None, "kv_heads", None),
+}
+
+
+def cache_specs(cache_sds, par: Parallelism):
+    """PartitionSpecs for an init_cache()-shaped pytree."""
+    def spec_for(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        axes = _CACHE_SPEC_BY_KEY.get(key)
+        if axes is None:
+            return P()
+        ndim = leaf.ndim
+        ax = axes[-ndim:] if len(axes) >= ndim else \
+            (None,) * (ndim - len(axes)) + axes
+        return logical_to_spec(ax, leaf.shape, par)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_sds)
+    specs = [spec_for(kp, leaf) for kp, leaf in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def abstract_cache(cfg, meta, shape: ShapeConfig, par: Parallelism,
+                   *, src_len: int = 4096, max_extra: int = 0):
+    """Cache sized exactly seq_len (keeps the sequence dim divisible by
+    the model axis); decode writes position kv_len = seq_len - 1."""
+    B = shape.global_batch
+    max_len = shape.seq_len + max_extra
+
+    def _mk():
+        return lm.init_cache(cfg, meta, B, max_len, par,
+                             src_len=src_len if cfg.enc_dec else 0)
+
+    sds = jax.eval_shape(_mk)
+    specs = cache_specs(sds, par)
+    if par.mesh is not None:
+        sds = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(par.mesh, sp)),
+            sds, specs)
+    return sds, specs
+
+
+# -------------------------------------------------------------- train step
+def opt_state_specs(cfg: ModelConfig, opt_sds, params_specs, par):
+    """PartitionSpecs for the optimizer state: AdamW moments inherit the
+    param specs; Adafactor's factored stats are left to the compiler
+    (None = auto) — they are O(n+m) small."""
+    if cfg.optimizer == "adafactor":
+        return None
+    return {"m": params_specs, "v": params_specs}
+
+
+def shard_sds(sds_tree, specs, par):
+    if par.mesh is None:
+        return sds_tree
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(par.mesh, sp)),
+        sds_tree, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def make_train_step(cfg: ModelConfig, meta, par: Parallelism, optimizer):
+    """fwd/bwd (+ optional microbatched gradient accumulation: divides
+    the activation working set by `cfg.train_microbatches` — the
+    standard memory lever for the >30B train cells) + optimizer update."""
+    k = max(cfg.train_microbatches, 1)
+
+    def train_step(params, opt_state, step, batch):
+        def loss_fn(p, mb):
+            return lm.forward_train_loss(cfg, p, meta, mb, par)
+
+        if k == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda t: t.reshape((k, t.shape[0] // k) + t.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                c_loss, c_grads = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (c_loss + l,
+                        jax.tree.map(jnp.add, c_grads, g)), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(body, (0.0, zeros), mbs)
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+
+        params2, opt_state2, info = optimizer.update(grads, opt_state,
+                                                     params, step)
+        metrics = {"loss": loss, "grad_norm": info["grad_norm"],
+                   "step": step + 1}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg, meta, par, optimizer, specs):
+    step_fn = make_train_step(cfg, meta, par, optimizer)
+    if par.mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0, 1))
+    shardings = jax.tree.map(lambda sp: NamedSharding(par.mesh, sp), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(step_fn, donate_argnums=(0, 1),
+                   in_shardings=(shardings, None, None, None))
+
+
+# ------------------------------------------------------------- serve steps
+def make_prefill_step(cfg, meta, par):
+    def prefill_step(params, batch, cache):
+        return lm.forward_prefill(cfg, params, meta, batch, cache, par)
+    return prefill_step
+
+
+def make_decode_step(cfg, meta, par):
+    def decode_step(params, tokens, cache, kv_len):
+        return lm.forward_decode(cfg, params, meta, tokens, cache, kv_len,
+                                 par)
+    return decode_step

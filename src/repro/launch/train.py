@@ -1,0 +1,170 @@
+"""Training driver: data pipeline -> jitted train step -> checkpoints.
+
+Fault tolerance (designed for 1000+ nodes, exercised at CPU scale):
+  * periodic + async checkpoints, atomic commit (checkpoint/ckpt.py);
+  * resume from the latest step on restart — the data pipeline is
+    stateless in `step`, so a killed-and-restarted run reproduces the
+    uninterrupted loss trajectory bit-for-bit (tests/test_train_loop.py);
+  * SIGTERM/SIGINT (preemption) triggers a final save before exit;
+  * straggler watchdog: step times > k x running median are logged and
+    exported — on a real pod the Saath coordinator additionally
+    re-queues the straggler's coflows per §4.3 (runtime.coflow_bridge);
+  * elastic restart: checkpoints restore under a different mesh via
+    `restore(..., mesh=, specs=)` (global shapes; reshard = device_put).
+
+Usage (CPU smoke scale):
+  python -m repro.launch.train --arch starcoder2-3b --steps 50 \
+      --smoke --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, latest_step, restore
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.data import SyntheticLMData
+from repro.launch import steps as ST
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.optim import make_optimizer
+
+
+class StragglerWatchdog:
+    """Flags steps slower than `factor` x the running median (§4.3)."""
+
+    def __init__(self, factor: float = 3.0, window: int = 32):
+        self.factor = factor
+        self.times = []
+        self.window = window
+        self.events = []
+
+    def observe(self, step: int, dt: float):
+        med = float(np.median(self.times[-self.window:])) \
+            if self.times else dt
+        self.times.append(dt)
+        if len(self.times) > 8 and dt > self.factor * med:
+            self.events.append({"step": step, "dt": dt, "median": med})
+            return True
+        return False
+
+
+def train(arch: str, *, steps: int = 50, smoke: bool = True,
+          ckpt_dir: str | None = None, ckpt_every: int = 20,
+          batch: int = 8, seq: int = 64, seed: int = 0,
+          mesh=None, log_every: int = 10, coflow_plan: bool = True):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    par = ST.build_parallelism(mesh)
+    params, axes, meta, specs = ST.materialize_model(cfg, par, seed=seed)
+    opt = make_optimizer(cfg, total_steps=steps)
+    opt_state = opt.init(params)
+    step_fn = (jax.jit(ST.make_train_step(cfg, meta, par, opt),
+                       donate_argnums=(0, 1)))
+
+    data = SyntheticLMData(cfg.vocab_size, seq, batch, seed=seed, par=par,
+                           src_len=32 if cfg.enc_dec else 0,
+                           d_model=cfg.d_model)
+
+    # the Saath plan for this step's collective coflows (gradient buckets
+    # + any registered background tenants) — static per step shape
+    plan = None
+    if coflow_plan:
+        from repro.runtime.buckets import bucketize
+        from repro.runtime.coflow_bridge import (grad_bucket_coflows,
+                                                 plan_waves)
+        bks = bucketize(params, bucket_bytes=8 * 1024 * 1024)
+        plan = plan_waves(grad_bucket_coflows(bks), num_chips=8)
+
+    start = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, every=ckpt_every, keep=3)
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            state = restore(ckpt_dir, last,
+                            {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = last
+            print(f"[train] resumed from step {start}")
+
+    stop = {"now": False}
+
+    def _sig(_s, _f):
+        stop["now"] = True
+
+    old = []
+    for s in (signal.SIGTERM, signal.SIGINT):
+        old.append(signal.signal(s, _sig))
+
+    dog = StragglerWatchdog()
+    losses = []
+    try:
+        for step in range(start, steps):
+            t0 = time.perf_counter()
+            b = data.batch(step)
+            b = {"tokens": b["tokens"][:, :-1],
+                 "labels": b["tokens"][:, 1:],
+                 **({"src_embeds": b["src_embeds"]}
+                    if "src_embeds" in b else {})}
+            params, opt_state, m = step_fn(params, opt_state,
+                                           jnp.int32(step), b)
+            loss = float(m["loss"])
+            losses.append(loss)
+            dt = time.perf_counter() - t0
+            dog.observe(step, dt)
+            if step % log_every == 0 or step == steps - 1:
+                print(f"[train] step={step} loss={loss:.4f} "
+                      f"gnorm={float(m['grad_norm']):.3f} dt={dt * 1e3:.0f}ms")
+            if mgr:
+                mgr.maybe_save(step + 1,
+                               {"params": params, "opt": opt_state},
+                               metadata={"arch": arch, "loss": loss})
+            if stop["now"]:
+                print("[train] preemption signal — saving and exiting")
+                if mgr:
+                    mgr.maybe_save(step + 1,
+                                   {"params": params, "opt": opt_state},
+                                   metadata={"arch": arch, "loss": loss,
+                                             "preempted": True},
+                                   force=True)
+                break
+    finally:
+        if mgr:
+            mgr.wait()
+        for s, h in zip((signal.SIGTERM, signal.SIGINT), old):
+            signal.signal(s, h)
+
+    return {"losses": losses, "straggler_events": dog.events,
+            "plan": plan, "final_step": start + len(losses)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mesh", action="store_true",
+                    help="use a host-device mesh")
+    args = ap.parse_args()
+    mesh = make_host_mesh() if args.mesh else None
+    out = train(args.arch, steps=args.steps, smoke=args.smoke,
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                batch=args.batch, seq=args.seq, mesh=mesh)
+    print(json.dumps({"final_loss": out["losses"][-1],
+                      "steps": out["final_step"],
+                      "stragglers": len(out["straggler_events"])}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models import lm
+from repro.models.common import Parallelism
+
+__all__ = ["lm", "Parallelism"]

@@ -1,0 +1,270 @@
+"""Attention mixers: GQA (+RoPE, qk-norm) and DeepSeek-V2 MLA.
+
+Layout convention: activations (B, S, d); q/k/v (B, S, H, Dh).
+
+The prefill path is a chunked online-softmax (pure jnp lax.scan — the
+oracle of kernels/flash_attention.py; on TPU the Pallas kernel is the
+fast path via kernels.ops). Chunking bounds the score materialization to
+(B, H, S, block) so 32k prefill fits per-device memory.
+
+Decode (S=1) attends the full cache directly; MLA decode uses the
+absorbed/latent form so the cache stays compressed (kv_lora + rope dims
+per token, the paper's ~8x KV saving).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Parallelism, rms_norm, rope, shard
+
+NEG_INF = -1e30
+
+
+def _gqa_scores_einsum(q, k):  # q: (B,Sq,Hkv,G,D), k: (B,bk,Hkv,D)
+    return jnp.einsum("bshgd,bthd->bhgst", q, k)
+
+
+def jnp_flash(q, k, v, *, causal: bool, q_offset, block: int = 1024,
+              par: Parallelism = Parallelism(None)):
+    """q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D). q_offset: absolute position of
+    q[0] (int or traced scalar). Returns (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]            # may differ from D (MLA prefill)
+    G = H // Hkv
+    scale = D ** -0.5
+    qg = (q * scale).reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    blocks = -(-Skv // block)
+    pad = blocks * block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, blocks, block, Hkv, k.shape[-1]).transpose(
+        1, 0, 2, 3, 4)
+    vb = v.reshape(B, blocks, block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, k_c, v_c = inp
+        s = _gqa_scores_einsum(qg, k_c.astype(jnp.float32))
+        k_pos = idx * block + jnp.arange(block)
+        mask = (k_pos < Skv)[None, None, None, None, :]
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])[
+                None, None, None, :, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = alpha * l + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bthd->bshgd", p, v_c.astype(jnp.float32)
+        ).transpose(0, 2, 3, 1, 4)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(blocks), kb, vb))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv)
+    return o.astype(q.dtype)
+
+
+def decode_attend(q, k_cache, v_cache, kv_len=None):
+    """q: (B,1,H,D); caches: (B,Smax,Hkv,D). kv_len: valid prefix length
+    (static or traced). Full-cache single-step attention."""
+    B, _, H, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5
+    qg = (q * scale).reshape(B, Hkv, G, D)
+    # Multiply-reduce instead of dot: a dot would force XLA to
+    # materialize a transposed (and on CPU, f32) copy of the ENTIRE
+    # cache per layer (measured: 2x cache bytes of pure copy traffic —
+    # §Perf decode iteration). The reductions run over the contiguous
+    # trailing dims, stream the cache once, and are VPU work on TPU
+    # (decode attention is bandwidth-bound; flash-decoding style).
+    kf = k_cache[:, :, :, None, :].astype(jnp.float32)   # (B,T,Hkv,1,D)
+    s = (kf * qg[:, None, :, :, :].astype(jnp.float32)).sum(-1)
+    s = s.transpose(0, 2, 3, 1)                           # (B,Hkv,G,T)
+    if kv_len is not None:
+        valid = jnp.arange(Smax) < kv_len
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    pt = p.transpose(0, 3, 1, 2)[..., None]               # (B,T,Hkv,G,1)
+    vf = v_cache[:, :, :, None, :].astype(jnp.float32)    # (B,T,Hkv,1,D)
+    o = (pt * vf).sum(1)                                  # (B,Hkv,G,D)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- GQA block
+def gqa_init(pf, cfg, prefix: str, layers: int):
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": pf.dense(f"{prefix}.wq", (layers, d, H, Dh),
+                       (None, "embed", "heads", None), fan_in=d),
+        "wk": pf.dense(f"{prefix}.wk", (layers, d, Hkv, Dh),
+                       (None, "embed", "kv_heads", None), fan_in=d),
+        "wv": pf.dense(f"{prefix}.wv", (layers, d, Hkv, Dh),
+                       (None, "embed", "kv_heads", None), fan_in=d),
+        "wo": pf.dense(f"{prefix}.wo", (layers, H, Dh, d),
+                       (None, "heads", None, "embed"), fan_in=H * Dh),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = pf.zeros(f"{prefix}.qnorm", (layers, Dh), (None, None))
+        p["knorm"] = pf.zeros(f"{prefix}.knorm", (layers, Dh), (None, None))
+    return p
+
+
+def gqa_apply(cfg, w, x, *, positions, cache=None, causal=True,
+              kv_len=None, par=Parallelism(None), cross_kv=None):
+    """One attention layer. cache: dict(k,v (B,Smax,Hkv,Dh)) for decode
+    (x is (B,1,d)); cross_kv: precomputed (k,v) for cross-attention.
+    Returns (out, new_cache)."""
+    B, S, d = x.shape
+    # TP layout: shard heads when divisible by the model axis; otherwise
+    # fall back to context parallelism (shard the query sequence) so GSPMD
+    # never pads/all-gathers the padded head dim.
+    H = cfg.num_heads
+    head_div = par.model_size <= 1 or H % par.model_size == 0
+    q_axes = (("batch", None, "heads", None) if head_div
+              else ("batch", "seq_tp", None, None))
+    q = jnp.einsum("bsd,dhk->bshk", x, w["wq"])
+    q = shard(q, q_axes, par)
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, w["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, w["wv"])
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = rms_norm(q, w["qnorm"])
+        if cross_kv is None:
+            k = rms_norm(k, w["knorm"])
+    if cfg.rope_theta and cross_kv is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cache is not None and cross_kv is None:
+        # insert new kv at position kv_len (decode) / 0 (prefill)
+        at = kv_len if S == 1 else 0
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(
+            cache["k"].dtype), (0, at, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(
+            cache["v"].dtype), (0, at, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        if S == 1:
+            o = decode_attend(q, kc, vc,
+                              kv_len=None if kv_len is None else kv_len + 1)
+            return jnp.einsum("bshk,hkd->bsd", o, w["wo"]), new_cache
+        k, v = kc[:, :S], vc[:, :S]
+
+    # GQA under head-sharded TP: when the kv heads themselves cannot carry
+    # the model axis (Hkv % tp != 0) GSPMD would have to reshuffle the
+    # grouped (Hkv, G) reshape; instead broadcast kv to the full H heads
+    # (free: kv is replicated in exactly this case) and run flash with
+    # G = 1, keeping the head dim cleanly sharded end-to-end.
+    Hkv = k.shape[2]
+    if (par.model_size > 1 and head_div and Hkv != H
+            and Hkv % par.model_size != 0):
+        rep = H // Hkv
+        k = shard(jnp.repeat(k, rep, axis=2),
+                  ("batch", None, "heads", None), par)
+        v = shard(jnp.repeat(v, rep, axis=2),
+                  ("batch", None, "heads", None), par)
+
+    o = jnp_flash(q, k, v, causal=causal,
+                  q_offset=0 if S > 1 else (kv_len or 0), par=par)
+    o = shard(o, q_axes, par)
+    return jnp.einsum("bshk,hkd->bsd", o, w["wo"]), new_cache
+
+
+# ----------------------------------------------------------------- MLA block
+def mla_init(pf, cfg, prefix: str, layers: int):
+    d, H = cfg.d_model, cfg.num_heads
+    dn, dr = cfg.head_dim, cfg.rope_head_dim       # nope / rope dims
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    return {
+        "wq_a": pf.dense(f"{prefix}.wq_a", (layers, d, r_q),
+                         (None, "embed", None), fan_in=d),
+        "wq_b": pf.dense(f"{prefix}.wq_b", (layers, r_q, H, dn + dr),
+                         (None, None, "heads", None), fan_in=r_q),
+        "wkv_a": pf.dense(f"{prefix}.wkv_a", (layers, d, r_kv + dr),
+                          (None, "embed", None), fan_in=d),
+        "wk_b": pf.dense(f"{prefix}.wk_b", (layers, r_kv, H, dn),
+                         (None, None, "heads", None), fan_in=r_kv),
+        "wv_b": pf.dense(f"{prefix}.wv_b", (layers, r_kv, H, dn),
+                         (None, None, "heads", None), fan_in=r_kv),
+        "wo": pf.dense(f"{prefix}.wo", (layers, H, dn, d),
+                       (None, "heads", None, "embed"), fan_in=H * dn),
+        "kv_norm": pf.zeros(f"{prefix}.kv_norm", (layers, r_kv),
+                            (None, None)),
+    }
+
+
+def mla_apply(cfg, w, x, *, positions, cache=None, kv_len=None,
+              par=Parallelism(None)):
+    """MLA attention. cache: dict(ckv (B,Smax,r_kv), krope (B,Smax,dr)).
+    Prefill decompresses K/V (flash over chunks); decode uses the
+    absorbed form against the compressed cache."""
+    B, S, d = x.shape
+    H, dn, dr = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    r_kv = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+
+    q = jnp.einsum("bsd,dr->bsr", x, w["wq_a"])
+    q = jnp.einsum("bsr,rhk->bshk", q, w["wq_b"])
+    q = shard(q, ("batch", None, "heads", None), par)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, w["wkv_a"])
+    ckv, k_rope = kv_a[..., :r_kv], kv_a[..., r_kv:]
+    ckv = rms_norm(ckv, w["kv_norm"])
+    k_rope = rope(k_rope[:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        at = kv_len if S == 1 else 0
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, at, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, at, 0))
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+    else:
+        new_cache = None
+
+    if S == 1 and cache is not None:
+        # absorbed decode: q_abs = q_nope @ W_kb  -> (B,1,H,r_kv)
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w["wk_b"])
+        s = jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32),
+                       ckv_c.astype(jnp.float32))
+        s += jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                        kr_c.astype(jnp.float32))
+        Smax = ckv_c.shape[1]
+        valid = jnp.arange(Smax) < (kv_len + 1)
+        s = jnp.where(valid[None, None, None, :], s * scale, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", p,
+                           ckv_c.astype(jnp.float32))    # (B,1,H,r_kv)
+        o = jnp.einsum("bshr,rhk->bshk", o_lat, w["wv_b"].astype(
+            jnp.float32)).astype(x.dtype)
+    else:
+        # prefill/train: decompress K/V then flash
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, w["wk_b"])
+        v = jnp.einsum("bsr,rhk->bshk", ckv, w["wv_b"])
+        v = shard(v, ("batch", None, "heads", None), par)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, dr))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # fold the joint scale into q (jnp_flash rescales by D^-0.5)
+        qf = qf * (scale / ((dn + dr) ** -0.5))
+        o = jnp_flash(qf, k, v, causal=True, q_offset=0, par=par)
+    o = shard(o, ("batch", None, "heads", None), par)
+    return jnp.einsum("bshk,hkd->bsd", o, w["wo"]), new_cache

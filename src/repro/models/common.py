@@ -1,0 +1,235 @@
+"""Shared model machinery: named-axis params, norms, RoPE, sharding rules.
+
+Params are plain pytrees of jnp arrays; every array is created through
+``param(...)`` with LOGICAL axis names, and ``logical_to_spec`` maps
+logical names to mesh axes (the single place the parallelism layout is
+decided — see DESIGN.md §5):
+
+    embed   -> FSDP over 'data'      (weights gathered per-layer by XLA)
+    heads   -> TP over 'model'       (uneven allowed; GSPMD pads)
+    kv_heads-> TP over 'model' only when divisible (GQA kv is small)
+    ff / vocab / experts / ssm_heads -> TP over 'model'
+    batch   -> DP over ('pod','data')
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------- parallelism
+@dataclasses.dataclass(frozen=True)
+class Parallelism:
+    """Mesh context threaded through model code. mesh=None => single host
+    (smoke tests): every spec collapses to fully-replicated."""
+    mesh: Optional[object] = None        # jax.sharding.Mesh
+    data_axes: tuple = ("data",)         # batch / fsdp axes
+    model_axis: Optional[str] = "model"  # tensor/expert axis
+    fsdp: bool = True
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def batch_spec(self):
+        return tuple(self.data_axes) if self.mesh is not None else None
+
+
+LOGICAL_RULES = {
+    "batch": "DATA",       # resolved to parallelism.data_axes
+    "embed": "FSDP",       # 'data' when fsdp else None
+    "heads": "MODEL_IF_DIV",   # replicate when H % tp != 0 (starcoder 24H,
+    #                            deepseek-coder 56H) — attention then runs
+    #                            sequence-parallel instead (see attention.py)
+    "kv_heads": "MODEL_IF_DIV",
+    "seq_tp": "MODEL_IF_DIV",  # context parallelism fallback
+    "ff": "MODEL",
+    "vocab": "MODEL",
+    "experts": "MODEL",
+    "ssm_heads": "MODEL",
+    "kv_seq": "MODEL",     # decode KV cache sequence dim
+    None: None,
+}
+
+
+def logical_to_spec(axes: tuple, shape: tuple, par: Parallelism) -> P:
+    """Map logical axis names -> PartitionSpec under `par`.
+
+    Every rule is divisibility-checked: jit in_shardings (unlike
+    with_sharding_constraint) reject uneven partitions, and padded
+    shards waste memory/compute anyway — an indivisible dim falls back
+    to replicated (e.g. mamba2's 50280 vocab on a 16-wide model axis).
+    """
+    if par.mesh is None:
+        return P()
+
+    def _fits(dim, ax_names) -> bool:
+        n = 1
+        for a in (ax_names if isinstance(ax_names, tuple) else (ax_names,)):
+            n *= par.mesh.shape[a]
+        return dim % n == 0
+
+    out = []
+    for name, dim in zip(axes, shape):
+        rule = LOGICAL_RULES.get(name)
+        if rule == "DATA":
+            ax = tuple(par.data_axes)
+            out.append(ax if _fits(dim, ax) else None)
+        elif rule == "FSDP":
+            fsdp_ax = par.data_axes[-1]  # intra-pod axis only
+            ok = par.fsdp and _fits(dim, fsdp_ax)
+            out.append(fsdp_ax if ok else None)
+        elif rule in ("MODEL", "MODEL_IF_DIV"):
+            ok = par.model_axis is not None and _fits(dim, par.model_axis)
+            out.append(par.model_axis if ok else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard(x: jax.Array, axes: tuple, par: Parallelism) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op off-mesh).
+
+    Activations never carry the FSDP ('embed') sharding — that axis is
+    already used by 'batch'; weights are gathered per-layer instead."""
+    if par.mesh is None:
+        return x
+    axes = tuple(None if a == "embed" else a for a in axes)
+    spec = logical_to_spec(axes, x.shape, par)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(par.mesh, spec))
+
+
+# ------------------------------------------------------------------- params
+class ParamFactory:
+    """Collects params + their logical axes; init is fan-in scaled."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+        self.axes = {}   # path -> logical axes tuple
+
+    def split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, path: str, shape: tuple, axes: tuple,
+              fan_in: Optional[int] = None, scale: float = 1.0):
+        assert len(shape) == len(axes), (path, shape, axes)
+        fi = fan_in if fan_in is not None else shape[0]
+        std = scale / np.sqrt(max(fi, 1))
+        self.axes[path] = axes
+        return jax.random.normal(self.split(), shape, self.dtype) * std
+
+    def embed(self, path: str, shape: tuple, axes: tuple,
+              scale: float = 1.0):
+        self.axes[path] = axes
+        return jax.random.normal(self.split(), shape, self.dtype) * scale
+
+    def zeros(self, path: str, shape: tuple, axes: tuple):
+        self.axes[path] = axes
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, path: str, shape: tuple, axes: tuple):
+        self.axes[path] = axes
+        return jnp.ones(shape, self.dtype)
+
+    def const(self, path: str, value: np.ndarray, axes: tuple):
+        self.axes[path] = axes
+        return jnp.asarray(value, self.dtype)
+
+
+def param_specs(params, axes_by_path: dict, par: Parallelism):
+    """Pytree of PartitionSpec matching `params`.
+
+    ParamFactory paths are creation-site names ('dec.off0.attn.wq');
+    pytree paths are placement names (['decoder']['offsets'][0]['attn']
+    ['wq']). The two agree on the trailing (module, param) components,
+    which is also the granularity at which the logical axes are decided —
+    so specs are resolved by suffix. Conflicting suffixes would be a
+    modelling bug and raise at build time."""
+    suffix_map = {}
+    for path, axes in axes_by_path.items():
+        comps = tuple(path.split("."))
+        key = comps[-2:] if len(comps) >= 2 else comps[-1:]
+        prev = suffix_map.get(key)
+        if prev is not None and prev != axes:
+            raise ValueError(f"ambiguous param suffix {key}: "
+                             f"{prev} vs {axes}")
+        suffix_map[key] = axes
+
+    def spec_for(kp, leaf):
+        comps = tuple(p.key for p in kp if hasattr(p, "key"))
+        axes = suffix_map.get(comps[-2:]) or suffix_map.get(comps[-1:])
+        if axes is None:
+            axes = (None,) * leaf.ndim
+        return logical_to_spec(axes, leaf.shape, par)
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    specs = [spec_for(kp, leaf) for kp, leaf in flat]
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------------------- layers
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(dt)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(
+        jax.nn.gelu, approximate=True), "relu": jax.nn.relu}[name]
+
+
+def glu_ffn(x, wi_gate, wi_up, wo, act: str, par: Parallelism):
+    """SwiGLU / GeGLU: act(x W_g) * (x W_u) W_o. Column-parallel in,
+    row-parallel out; the output constraint makes GSPMD lower the
+    partial-sum as reduce-scatter to the seq-sharded residual."""
+    h = activation(act)(x @ wi_gate) * (x @ wi_up)
+    h = shard(h, ("batch", None, "ff"), par)
+    return shard(h @ wo, ("batch", "seq_tp", None), par)
+
+
+def mlp_ffn(x, wi, wo, act: str, par: Parallelism):
+    """Plain 2-matrix FFN: act(x W_i) W_o (starcoder2 / seamless)."""
+    h = activation(act)(x @ wi)
+    h = shard(h, ("batch", None, "ff"), par)
+    return shard(h @ wo, ("batch", "seq_tp", None), par)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def remat(fn, policy: str = "none"):
+    if policy == "none":
+        return fn
+    pol = {
+        "full": None,  # save nothing
+        "dots": jax.checkpoint_policies.checkpoint_dots,
+        "dots_no_batch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[policy]
+    return jax.checkpoint(fn, policy=pol)

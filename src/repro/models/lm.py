@@ -1,0 +1,546 @@
+"""Top-level language model: embedding, layer stack (scan over groups),
+head; forward for train / prefill / decode; enc-dec variant.
+
+Layer stacking: the layer pattern repeats with period p (p = 1 for pure
+stacks; Jamba p = 8: 7 mamba + 1 attention, MoE every other layer).
+Parameters are stacked per *offset within the period* with a leading
+(num_groups,) dim and the stack runs as one ``lax.scan`` over groups —
+constant-size HLO regardless of depth (compile-time control at 94-layer
+MoE scale), with remat around the scan body.
+
+Caches ride the same scan as xs/ys: per-offset pytrees with a leading
+(num_groups, ...) dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models.common import (Parallelism, ParamFactory, glu_ffn,
+                                 mlp_ffn, param_specs, rms_norm, shard)
+
+
+# ------------------------------------------------------------- layer plan
+def layer_plan(cfg: ModelConfig, L: int, decoder: bool):
+    """[(mixer, ffn, cross)] per layer. mixer: attn|mla|mamba;
+    ffn: dense|moe|none."""
+    sigs = []
+    for l in range(L):
+        if cfg.ssm_inner and not cfg.is_attn_layer(l):
+            mixer = "mamba"
+        else:
+            mixer = "mla" if cfg.mla else "attn"
+        if cfg.is_moe_layer(l):
+            ffn = "moe"
+        elif cfg.d_ff:
+            ffn = "dense"
+        else:
+            ffn = "none"
+        cross = cfg.enc_dec and decoder
+        sigs.append((mixer, ffn, cross))
+    return sigs
+
+
+def _period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.attn_period:
+        p = cfg.attn_period
+    if cfg.num_experts and cfg.moe_period > 1:
+        p = int(np.lcm(p, cfg.moe_period))
+    return p
+
+
+# ------------------------------------------------------------------- init
+def _init_layer(pf: ParamFactory, cfg: ModelConfig, sig, prefix: str,
+                groups: int):
+    mixer, ffn, cross = sig
+    d = cfg.d_model
+    w: Dict[str, Any] = {
+        "ln1": pf.zeros(f"{prefix}.ln1", (groups, d), (None, None)),
+    }
+    if mixer == "attn":
+        w["attn"] = attn.gqa_init(pf, cfg, f"{prefix}.attn", groups)
+    elif mixer == "mla":
+        w["attn"] = attn.mla_init(pf, cfg, f"{prefix}.attn", groups)
+    else:
+        w["mamba"] = mb.mamba_init(pf, cfg, f"{prefix}.mamba", groups)
+    if cross:
+        w["ln_cross"] = pf.zeros(f"{prefix}.ln_cross", (groups, d),
+                                 (None, None))
+        w["cross"] = attn.gqa_init(pf, cfg, f"{prefix}.cross", groups)
+    if ffn == "dense":
+        w["ln2"] = pf.zeros(f"{prefix}.ln2", (groups, d), (None, None))
+        if cfg.activation in ("swiglu", "geglu"):
+            w["ffn"] = {
+                "wi_gate": pf.dense(f"{prefix}.ffn.wi_gate",
+                                    (groups, d, cfg.d_ff),
+                                    (None, "embed", "ff"), fan_in=d),
+                "wi_up": pf.dense(f"{prefix}.ffn.wi_up",
+                                  (groups, d, cfg.d_ff),
+                                  (None, "embed", "ff"), fan_in=d),
+                "wo": pf.dense(f"{prefix}.ffn.wo", (groups, cfg.d_ff, d),
+                               (None, "ff", "embed"), fan_in=cfg.d_ff),
+            }
+        else:  # plain MLP (starcoder2, seamless)
+            w["ffn"] = {
+                "wi": pf.dense(f"{prefix}.ffn.wi", (groups, d, cfg.d_ff),
+                               (None, "embed", "ff"), fan_in=d),
+                "wo": pf.dense(f"{prefix}.ffn.wo", (groups, cfg.d_ff, d),
+                               (None, "ff", "embed"), fan_in=cfg.d_ff),
+            }
+    elif ffn == "moe":
+        w["ln2"] = pf.zeros(f"{prefix}.ln2", (groups, d), (None, None))
+        w["moe"] = moe_mod.moe_init(pf, cfg, f"{prefix}.moe", groups)
+    return w
+
+
+def init_model(cfg: ModelConfig, key: jax.Array, dtype=None):
+    """Returns (params, axes_by_path). Layer params are stacked by
+    period-offset; see module docstring."""
+    dtype = dtype or jnp.float32
+    pf = ParamFactory(key, dtype)
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": pf.embed("embed", (cfg.vocab_size, d), ("vocab", "embed"),
+                          scale=1.0),
+        "ln_f": pf.zeros("ln_f", (d,), (None,)),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = pf.dense("head", (d, cfg.vocab_size),
+                                  ("embed", "vocab"), fan_in=d)
+
+    def build_stack(L, decoder, name):
+        sigs = layer_plan(cfg, L, decoder)
+        p = _period(cfg) if not (cfg.enc_dec and not decoder) else 1
+        pre_n = cfg.first_dense_layers
+        periodic = L - pre_n
+        assert periodic % p == 0, (L, p)
+        groups = periodic // p
+        stack = {"prefix": [], "offsets": [], "sigs": sigs, "period": p,
+                 "groups": groups, "pre_n": pre_n}
+        for l in range(pre_n):
+            stack["prefix"].append(
+                _init_layer(pf, cfg, sigs[l], f"{name}.pre{l}", 1))
+        for o in range(p):
+            stack["offsets"].append(
+                _init_layer(pf, cfg, sigs[pre_n + o], f"{name}.off{o}",
+                            groups))
+        return stack
+
+    if cfg.enc_dec:
+        params["encoder"] = build_stack(cfg.enc_layers, False, "enc")
+        params["decoder"] = build_stack(cfg.num_layers, True, "dec")
+        params["ln_enc"] = pf.zeros("ln_enc", (d,), (None,))
+    else:
+        params["decoder"] = build_stack(cfg.num_layers, False, "dec")
+    # meta entries (period/groups/sigs) are not arrays; strip them into a
+    # static side table
+    meta = {}
+    for nm in ("encoder", "decoder"):
+        if nm in params:
+            st = params[nm]
+            meta[nm] = {k: st.pop(k) for k in
+                        ("sigs", "period", "groups", "pre_n")}
+    return params, pf.axes, meta
+
+
+# ------------------------------------------------------------------ apply
+def _apply_layer(cfg, sig, w, x, *, positions, cache, kv_len, par,
+                 enc_out=None, causal=True):
+    mixer, ffn, cross = sig
+    new_cache = dict(cache) if isinstance(cache, dict) else {}
+    # norms run in the seq-sharded (SP) region; pinning their bf16 output
+    # here makes the Megatron all-gather move bf16, not the f32 internals
+    h = shard(rms_norm(x, w["ln1"]), ("batch", "seq_tp", None), par)
+    if mixer in ("attn", "mla"):
+        sub = None if cache is None else {
+            k: cache[k] for k in ("k", "v", "ckv", "krope") if k in cache}
+        sub = sub if sub else None
+        if mixer == "attn":
+            o, upd = attn.gqa_apply(cfg, w["attn"], h, positions=positions,
+                                    cache=sub, causal=causal, kv_len=kv_len,
+                                    par=par)
+        else:
+            o, upd = attn.mla_apply(cfg, w["attn"], h, positions=positions,
+                                    cache=sub, kv_len=kv_len, par=par)
+        if upd:
+            new_cache.update(upd)
+    else:
+        sub = None if cache is None else {
+            k: cache[k] for k in ("conv", "ssd") if k in cache}
+        sub = sub if sub else None
+        o, upd = mb.mamba_apply(cfg, w["mamba"], h, cache=sub, par=par)
+        if upd:
+            new_cache.update(upd)
+    # Megatron-SP residual stream: constraining each block's OUTPUT to the
+    # sequence-sharded layout makes GSPMD lower the row-parallel matmul's
+    # partial-sum as a reduce-scatter instead of a full all-reduce
+    # (halves the per-layer collective bytes; §Perf iteration 1).
+    x = x + shard(o, ("batch", "seq_tp", None), par)
+    if cross:
+        h = shard(rms_norm(x, w["ln_cross"]), ("batch", "seq_tp", None),
+                  par)
+        ck, cv = cache["cross_k"], cache["cross_v"]
+        o, _ = attn.gqa_apply(cfg, w["cross"], h, positions=positions,
+                              cache=None, causal=False, kv_len=None,
+                              par=par, cross_kv=(ck, cv))
+        x = x + shard(o, ("batch", "seq_tp", None), par)
+    if ffn == "dense":
+        h = shard(rms_norm(x, w["ln2"]), ("batch", "seq_tp", None), par)
+        f = w["ffn"]
+        if cfg.activation in ("swiglu", "geglu"):
+            act = "silu" if cfg.activation == "swiglu" else "gelu"
+            o = glu_ffn(h, f["wi_gate"], f["wi_up"], f["wo"], act, par)
+        else:
+            o = mlp_ffn(h, f["wi"], f["wo"], cfg.activation, par)
+        x = x + shard(o, ("batch", "seq_tp", None), par)
+    elif ffn == "moe":
+        h = shard(rms_norm(x, w["ln2"]), ("batch", "seq_tp", None), par)
+        o = moe_mod.moe_apply(cfg, w["moe"], h, par=par)
+        x = x + shard(o, ("batch", "seq_tp", None), par)
+    return x, (new_cache if cache is not None else None)
+
+
+def _apply_stack(cfg, stack, meta, x, *, positions, caches, kv_len, par,
+                 enc_out=None, remat_policy="dots_no_batch", causal=True):
+    sigs, p = meta["sigs"], meta["period"]
+    pre_n, groups = meta["pre_n"], meta["groups"]
+    new_caches = {"prefix": [], "scan": None}
+
+    for l in range(pre_n):
+        w = jax.tree.map(lambda t: t[0], stack["prefix"][l])
+        c = None if caches is None else caches["prefix"][l]
+        x, nc = _apply_layer(cfg, sigs[l], w, x, positions=positions,
+                             cache=c, kv_len=kv_len, par=par,
+                             enc_out=enc_out, causal=causal)
+        new_caches["prefix"].append(nc)
+
+    offs = stack["offsets"]
+    cs_in = None if caches is None else caches["scan"]
+
+    # Decode (S == 1): unroll the group loop in Python. Under lax.scan
+    # XLA copies the full stacked KV cache carry every iteration (~2x
+    # cache bytes per LAYER of pure copy traffic, measured — §Perf
+    # decode iteration); unrolled, each group's cache is updated in
+    # place and aliased through donation.
+    if caches is not None and x.shape[1] == 1 and groups > 0:
+        cs_out = [dict(c) for c in cs_in]
+        for g in range(groups):
+            for o in range(p):
+                w_o = jax.tree.map(lambda t: t[g], offs[o])
+                c_o = jax.tree.map(lambda t: t[g], cs_in[o])
+                x, nc = _apply_layer(cfg, sigs[pre_n + o], w_o, x,
+                                     positions=positions, cache=c_o,
+                                     kv_len=kv_len, par=par,
+                                     enc_out=enc_out, causal=causal)
+                cs_out[o] = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new.astype(full.dtype), g, 0),
+                    cs_out[o], nc)
+        new_caches["scan"] = cs_out
+        return x, new_caches
+
+    def body(carry, xs):
+        # caches ride the CARRY (updated in place per group via
+        # dynamic_update_index_in_dim) so the while loop aliases one
+        # buffer — scanning them as xs/ys would double the KV memory.
+        h, cs_all = carry
+        ws, g = xs
+        ncs = []
+        for o in range(p):
+            w_o = ws[o]
+            c_o = None
+            if cs_all is not None:
+                c_o = jax.tree.map(
+                    lambda t: jax.lax.dynamic_index_in_dim(
+                        t, g, 0, keepdims=False), cs_all[o])
+            h, nc = _apply_layer(cfg, sigs[pre_n + o], w_o, h,
+                                 positions=positions, cache=c_o,
+                                 kv_len=kv_len, par=par, enc_out=enc_out,
+                                 causal=causal)
+            ncs.append(nc)
+        if cs_all is not None:
+            cs_all = [jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), g, 0),
+                cs_all[o2], ncs[o2]) for o2 in range(p)]
+        # sequence-parallel layer boundary: remat-saved per-layer residuals
+        # shard over the model axis (Megatron-SP style), which divides the
+        # dominant activation-memory term by the TP degree.
+        h = shard(h, ("batch", "seq_tp", None), par)
+        return (h, cs_all), None
+
+    if remat_policy != "none":
+        pol = {"full": None,
+               "dots": jax.checkpoint_policies.checkpoint_dots,
+               "dots_no_batch":
+               jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+               }[remat_policy]
+        body = jax.checkpoint(body, policy=pol)
+
+    groups = meta["groups"]
+    (x, cs_out), _ = jax.lax.scan(
+        body, (x, cs_in), (offs, jnp.arange(groups)))
+    new_caches["scan"] = cs_out
+    return x, (new_caches if caches is not None else None)
+
+
+# ------------------------------------------------------------- entry points
+def embed_tokens(cfg, params, tokens, par):
+    e = params["embed"].astype(_adtype(cfg))
+    x = e[tokens]  # gather; vocab-sharded -> XLA collective
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return shard(x, ("batch", "seq_tp", None), par)
+
+
+def _adtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def cast_params(cfg, params):
+    """fp32 master params -> compute dtype (mixed-precision forward)."""
+    dt = _adtype(cfg)
+
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dt)
+        return x
+
+    return jax.tree.map(cast, params)
+
+
+def lm_logits(cfg, params, x, par):
+    x = rms_norm(x, params["ln_f"])
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["head"].astype(x.dtype))
+    return shard(logits, ("batch", None, "vocab"), par)
+
+
+def encode(cfg, params, meta, src_embeds, par):
+    """Encoder forward (audio frontend stub supplies src_embeds)."""
+    x = shard(src_embeds.astype(_adtype(cfg)), ("batch", None, "embed"),
+              par)
+    pos = jnp.arange(x.shape[1])[None, :]
+    x, _ = _apply_stack(cfg, params["encoder"], meta["encoder"], x,
+                        positions=pos, caches=None, kv_len=None, par=par,
+                        remat_policy=cfg.remat, causal=False)
+    return rms_norm(x, params["ln_enc"])
+
+
+def forward_train(cfg, params, meta, batch, par: Parallelism):
+    """batch: {'tokens' (B,S)} (+ 'src_embeds' for enc-dec/frontend).
+    Returns logits (B,S,V)."""
+    params = cast_params(cfg, params)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = jnp.arange(S)[None, :]
+    x = embed_tokens(cfg, params, tokens, par)
+    enc_out = None
+    caches = None
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, meta, batch["src_embeds"], par)
+        caches = _make_cross_caches(cfg, params, meta, enc_out, par)
+    x, _ = _apply_stack(cfg, params["decoder"], meta["decoder"], x,
+                        positions=pos, caches=caches, kv_len=None, par=par,
+                        enc_out=enc_out, remat_policy=cfg.remat)
+    return lm_logits(cfg, params, x, par)
+
+
+def _make_cross_caches(cfg, params, meta, enc_out, par):
+    """Precompute cross-attention K/V per decoder layer (cached once)."""
+    md = meta["decoder"]
+    pre, p, groups = md["pre_n"], md["period"], md["groups"]
+
+    def kv_for(w_cross):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, w_cross["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, w_cross["wv"])
+        return k, v
+
+    caches = {"prefix": [], "scan": None}
+    for l in range(pre):
+        w = jax.tree.map(lambda t: t[0], params["decoder"]["prefix"][l])
+        k, v = kv_for(w["cross"])
+        caches["prefix"].append({"cross_k": k, "cross_v": v})
+    scan_caches = []
+    for o in range(p):
+        w = params["decoder"]["offsets"][o]["cross"]
+        k = jnp.einsum("bsd,gdhk->gbshk", enc_out, w["wk"])
+        v = jnp.einsum("bsd,gdhk->gbshk", enc_out, w["wv"])
+        scan_caches.append({"cross_k": k, "cross_v": v})
+    caches["scan"] = scan_caches
+    return caches
+
+
+def init_cache(cfg, meta, B, max_len, par, src_len: int = 0):
+    """Decode cache pytree (zeros), matching _apply_stack's layout."""
+    md = meta["decoder"]
+    dt = _adtype(cfg)
+
+    def layer_cache(sig, lead):
+        mixer, ffn, cross = sig
+        c = {}
+        shp = (lead + (B, max_len, cfg.num_kv_heads, cfg.head_dim))
+        if mixer == "attn":
+            c["k"] = jnp.zeros(shp, dt)
+            c["v"] = jnp.zeros(shp, dt)
+        elif mixer == "mla":
+            c["ckv"] = jnp.zeros(lead + (B, max_len, cfg.kv_lora_rank), dt)
+            c["krope"] = jnp.zeros(lead + (B, max_len, cfg.rope_head_dim),
+                                   dt)
+        else:
+            c["conv"] = jnp.zeros(
+                lead + (B, cfg.ssm_conv - 1,
+                        cfg.ssm_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+                dt)
+            c["ssd"] = jnp.zeros(
+                lead + (B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32)
+        if cross:
+            c["cross_k"] = jnp.zeros(
+                lead + (B, src_len, cfg.num_kv_heads, cfg.head_dim), dt)
+            c["cross_v"] = jnp.zeros(
+                lead + (B, src_len, cfg.num_kv_heads, cfg.head_dim), dt)
+        return c
+
+    sigs = md["sigs"]
+    caches = {"prefix": [layer_cache(sigs[l], ())
+                         for l in range(md["pre_n"])],
+              "scan": [layer_cache(sigs[md["pre_n"] + o],
+                                   (md["groups"],))
+                       for o in range(md["period"])]}
+    return caches
+
+
+def forward_prefill(cfg, params, meta, batch, cache, par):
+    """Fills `cache` with the prompt; returns (last-token logits, cache)."""
+    params = cast_params(cfg, params)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = jnp.arange(S)[None, :]
+    x = embed_tokens(cfg, params, tokens, par)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, meta, batch["src_embeds"], par)
+        cache = _fill_cross(cfg, params, meta, enc_out, cache)
+    x, cache = _apply_stack(cfg, params["decoder"], meta["decoder"], x,
+                            positions=pos, caches=cache, kv_len=None,
+                            par=par, enc_out=enc_out,
+                            remat_policy=cfg.remat)
+    logits = lm_logits(cfg, params, x[:, -1:], par)
+    return logits, cache
+
+
+def _fill_cross(cfg, params, meta, enc_out, cache):
+    md = meta["decoder"]
+    for l in range(md["pre_n"]):
+        w = jax.tree.map(lambda t: t[0],
+                         params["decoder"]["prefix"][l])["cross"]
+        cache["prefix"][l]["cross_k"] = jnp.einsum(
+            "bsd,dhk->bshk", enc_out, w["wk"]).astype(_adtype(cfg))
+        cache["prefix"][l]["cross_v"] = jnp.einsum(
+            "bsd,dhk->bshk", enc_out, w["wv"]).astype(_adtype(cfg))
+    for o in range(md["period"]):
+        w = params["decoder"]["offsets"][o]["cross"]
+        cache["scan"][o]["cross_k"] = jnp.einsum(
+            "bsd,gdhk->gbshk", enc_out, w["wk"]).astype(_adtype(cfg))
+        cache["scan"][o]["cross_v"] = jnp.einsum(
+            "bsd,gdhk->gbshk", enc_out, w["wv"]).astype(_adtype(cfg))
+    return cache
+
+
+def forward_decode(cfg, params, meta, tokens, cache, kv_len, par):
+    """One decode step. tokens: (B,1); kv_len: scalar current length.
+    Returns (logits (B,1,V), cache)."""
+    params = cast_params(cfg, params)
+    pos = jnp.full((tokens.shape[0], 1), kv_len, jnp.int32)
+    x = embed_tokens(cfg, params, tokens, par)
+    x, cache = _apply_stack(cfg, params["decoder"], meta["decoder"], x,
+                            positions=pos, caches=cache, kv_len=kv_len,
+                            par=par, remat_policy="none")
+    return lm_logits(cfg, params, x, par)[:, -1:], cache
+
+
+# --------------------------------------------------------------------- loss
+def forward_train_loss(cfg, params, meta, batch, par: Parallelism,
+                       chunk: int = 512):
+    """Fused stack -> chunked head+CE. Never materializes the full (B,S,V)
+    f32 logits: the head matmul + softmax-CE run per sequence chunk under
+    jax.checkpoint (recomputed in backward). This is what the production
+    train step uses; forward_train (full logits) remains for serving and
+    tests."""
+    params = cast_params(cfg, params)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = jnp.arange(S)[None, :]
+    x = embed_tokens(cfg, params, tokens, par)
+    enc_out = None
+    caches = None
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, meta, batch["src_embeds"], par)
+        caches = _make_cross_caches(cfg, params, meta, enc_out, par)
+    x, _ = _apply_stack(cfg, params["decoder"], meta["decoder"], x,
+                        positions=pos, caches=caches, kv_len=None, par=par,
+                        enc_out=enc_out, remat_policy=cfg.remat)
+    x = rms_norm(x, params["ln_f"])
+    labels = batch["labels"]
+
+    head = (params["embed"].astype(x.dtype).T if cfg.tie_embeddings
+            else params["head"].astype(x.dtype))
+
+    # adaptive chunk: cap the per-device f32 logits buffer at ~256 MB
+    # (gemma/seamless have 256k vocabularies)
+    dp = tp = 1
+    if par.mesh is not None:
+        dp = int(np.prod([par.mesh.shape[a] for a in par.data_axes]))
+        tp = max(par.model_size, 1)
+    per_tok = (B / max(dp, 1)) * (cfg.vocab_size / max(tp, 1)) * 4
+    chunk = max(16, min(chunk, int(256e6 // max(per_tok, 1))))
+    nchunk = max(1, S // chunk)
+    while S % nchunk:
+        nchunk += 1
+    chunk = S // nchunk
+    xc = x.reshape(B, nchunk, chunk, -1).transpose(1, 0, 2, 3)
+    yc = labels.reshape(B, nchunk, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        xm, ym = inp
+        xm = shard(xm, ("batch", None, None), par)
+        logits = jnp.einsum("bsd,dv->bsv", xm, head)
+        logits = shard(logits, ("batch", None, "vocab"), par)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ym[..., None], axis=-1)[..., 0]
+        nll = (logz - gold).sum()
+        zl = (logz ** 2).sum()
+        return (carry[0] + nll, carry[1] + zl), None
+
+    (nll, zl), _ = jax.lax.scan(jax.checkpoint(body), (0.0, 0.0), (xc, yc))
+    n = B * S
+    return nll / n + 1e-4 * zl / n
+
+
+def lm_loss(cfg, logits, targets, mask=None):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    zloss = 1e-4 * ((logz * mask) ** 2).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + zloss

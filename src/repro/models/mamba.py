@@ -1,0 +1,173 @@
+"""Mamba-2 (SSD) mixer block — attention-free sequence mixing.
+
+Prefill/train use the chunked SSD algorithm (pure-jnp mirror of
+kernels/ssd_scan.py, which is the TPU Pallas fast path); decode is the
+O(1) single-step recurrence against a carried (H, Dh, N) state plus a
+(k-1)-deep causal-conv window.
+
+Cache layout: {"conv": (B, k-1, C_conv), "ssd": (B, H, Dh, N)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Parallelism, rms_norm, shard
+
+
+def ssd_chunked_jnp(x, dt, a, b, c, *, init_state=None, lc: int = 128):
+    """Chunked SSD, same contract as kernels.ref.ssd_ref (but O(L/lc)
+    sequential steps). x: (B,L,H,Dh); dt: (B,L,H); a: (H,);
+    b,c: (B,L,G,N)."""
+    B, L, H, Dh = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    pad = (-L) % lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // lc
+
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    def chunks(t, shape):  # (B, Lp, ...) -> (nc, B, lc, ...)
+        return t.reshape((B, nc, lc) + shape).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(shape))))
+
+    xs = (chunks(x.astype(jnp.float32), (H, Dh)),
+          chunks(dt.astype(jnp.float32), (H,)),
+          chunks(bh.astype(jnp.float32), (H, N)),
+          chunks(ch.astype(jnp.float32), (H, N)))
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((B, H, Dh, N), jnp.float32))
+
+    tri = jnp.tril(jnp.ones((lc, lc), bool))
+
+    def step(s, inp):
+        xc, dtc, bc, cc = inp          # (B,lc,H,*)
+        dta = dtc * a                   # (B,lc,H)
+        cum = jnp.cumsum(dta, axis=1)   # inclusive
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # (B,lc,lc,H)
+        decay = jnp.where(tri[None, :, :, None],
+                          jnp.exp(jnp.where(tri[None, :, :, None], diff,
+                                            0.0)), 0.0)
+        g = jnp.einsum("bthn,buhn->btuh", cc, bc)
+        m = g * decay * dtc[:, None, :, :]
+        y = jnp.einsum("btuh,buhd->bthd", m, xc)
+        y += jnp.exp(cum)[..., None] * jnp.einsum(
+            "bthn,bhdn->bthd", cc, s)
+        cl = cum[:, -1]                 # (B,H)
+        wgt = jnp.exp(cl[:, None] - cum) * dtc              # (B,lc,H)
+        s_new = jnp.exp(cl)[..., None, None] * s + jnp.einsum(
+            "bthd,bthn->bhdn", xc * wgt[..., None], bc)
+        return s_new, y
+
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Lp, H, Dh)[:, :L]
+    return y.astype(x.dtype), s_fin
+
+
+def ssd_decode_step(x, dt, a, b, c, state):
+    """One-token recurrence. x: (B,H,Dh); dt: (B,H); b,c: (B,G,N);
+    state: (B,H,Dh,N). Returns (y (B,H,Dh), state')."""
+    H = x.shape[1]
+    rep = H // b.shape[1]
+    bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a)[..., None, None]
+    state = decay * state + dtf[..., None, None] * (
+        xf[..., None] * bh[:, :, None, :])
+    y = jnp.einsum("bhdn,bhn->bhd", state, ch)
+    return y.astype(x.dtype), state
+
+
+def mamba_init(pf, cfg, prefix: str, layers: int):
+    d = cfg.d_model
+    di = cfg.ssm_inner            # usually 2*d
+    H, Dh = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    kconv = cfg.ssm_conv
+    c_conv = di + 2 * G * N
+    proj_out = 2 * di + 2 * G * N + H
+    return {
+        "in_proj": pf.dense(f"{prefix}.in_proj", (layers, d, proj_out),
+                            (None, "embed", "ssm_heads"), fan_in=d),
+        "conv_w": pf.dense(f"{prefix}.conv_w", (layers, kconv, c_conv),
+                           (None, None, "ssm_heads"), fan_in=kconv),
+        "conv_b": pf.zeros(f"{prefix}.conv_b", (layers, c_conv),
+                           (None, "ssm_heads")),
+        "a_log": pf.zeros(f"{prefix}.a_log", (layers, H), (None,
+                                                           "ssm_heads")),
+        "dt_bias": pf.zeros(f"{prefix}.dt_bias", (layers, H),
+                            (None, "ssm_heads")),
+        "d_skip": pf.zeros(f"{prefix}.d_skip", (layers, H),
+                           (None, "ssm_heads")),
+        "norm": pf.zeros(f"{prefix}.norm", (layers, di),
+                         (None, "ssm_heads")),
+        "out_proj": pf.dense(f"{prefix}.out_proj", (layers, di, d),
+                             (None, "ssm_heads", "embed"), fan_in=di),
+    }
+
+
+def mamba_apply(cfg, w, x, *, cache=None, par=Parallelism(None),
+                lc: int = 128):
+    """x: (B,S,d). cache (decode, S=1): {"conv","ssd"}; prefill with
+    cache=dict(...) template fills it. Returns (out, new_cache)."""
+    B, S, d = x.shape
+    di, H, Dh = cfg.ssm_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    kconv = cfg.ssm_conv
+    c_conv = di + 2 * G * N
+
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, w["in_proj"])
+    zxbcdt = shard(zxbcdt, ("batch", None, "ssm_heads"), par)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + c_conv]
+    dt_raw = zxbcdt[..., di + c_conv:]
+    a = -jnp.exp(w["a_log"].astype(jnp.float32))
+
+    if S == 1 and cache is not None and "ssd" in cache:
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,k,C)
+        xbc_c = (window * w["conv_w"][None]).sum(1) + w["conv_b"]
+        xbc_c = jax.nn.silu(xbc_c)[:, None, :]
+        new_conv = window[:, 1:]
+        xs = xbc_c[..., :di].reshape(B, H, Dh)
+        bs = xbc_c[..., di:di + G * N].reshape(B, G, N)
+        cs = xbc_c[..., di + G * N:].reshape(B, G, N)
+        dt = jax.nn.softplus(dt_raw[:, 0] + w["dt_bias"])      # (B,H)
+        y, s_new = ssd_decode_step(xs, dt, a, bs, cs, cache["ssd"])
+        y = y + w["d_skip"][:, None] * xs
+        y = y.reshape(B, 1, di)
+        y = rms_norm(y, w["norm"]) * jax.nn.silu(z)
+        out = jnp.einsum("bsp,pd->bsd", y, w["out_proj"])
+        return out, {"conv": new_conv, "ssd": s_new}
+
+    # train / prefill: causal depthwise conv via padded window sum
+    pads = jnp.zeros((B, kconv - 1, c_conv), xbc.dtype)
+    xp = jnp.concatenate([pads, xbc], axis=1)
+    conv = sum(xp[:, i:i + S] * w["conv_w"][i] for i in range(kconv))
+    conv = jax.nn.silu(conv + w["conv_b"])
+    xs = conv[..., :di].reshape(B, S, H, Dh)
+    bs = conv[..., di:di + G * N].reshape(B, S, G, N)
+    cs = conv[..., di + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw + w["dt_bias"])                # (B,S,H)
+
+    y, s_fin = ssd_chunked_jnp(xs, dt, a, bs, cs, lc=lc)
+    y = y + w["d_skip"][None, None, :, None] * xs
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, w["norm"]) * jax.nn.silu(z)
+    y = shard(y, ("batch", None, "ssm_heads"), par)
+    out = jnp.einsum("bsp,pd->bsd", y, w["out_proj"])
+
+    new_cache = None
+    if cache is not None:
+        # last (kconv-1) raw xbc values feed the next decode step's window
+        new_cache = {"conv": xp[:, -(kconv - 1):], "ssd": s_fin}
+    return out, new_cache

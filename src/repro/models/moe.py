@@ -1,0 +1,191 @@
+"""Mixture-of-Experts FFN with expert parallelism (GShard/DeepSeek-style).
+
+Top-k routing -> static-capacity pack -> all_to_all over the 'model'
+(expert) axis -> per-expert GLU FFN -> reverse all_to_all -> weighted
+combine. The a2a pair is the archetypal *wide coflow* the Saath planner
+schedules (DESIGN.md §4): runtime.coflow_bridge registers one coflow per
+MoE layer wave.
+
+The pack is a sort-free scatter: for every (token, choice) pair the
+destination slot is (expert, rank-within-expert) where rank comes from a
+cumulative one-hot count; pairs beyond the static capacity are dropped
+(standard capacity-factor semantics; shared experts and the residual
+keep dropped tokens finite).
+
+Single-device (smoke tests): the same code runs under a 1-chip mesh —
+all_to_all over an axis of size 1 is the identity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import Parallelism, activation, shard
+
+
+def moe_init(pf, cfg, prefix: str, layers: int):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p = {
+        "router": pf.dense(f"{prefix}.router", (layers, d, E),
+                           (None, "embed", None), fan_in=d),
+        "wi_gate": pf.dense(f"{prefix}.wi_gate", (layers, E, d, f),
+                            (None, "experts", "embed", None), fan_in=d),
+        "wi_up": pf.dense(f"{prefix}.wi_up", (layers, E, d, f),
+                          (None, "experts", "embed", None), fan_in=d),
+        "wo": pf.dense(f"{prefix}.wo", (layers, E, f, d),
+                       (None, "experts", None, "embed"), fan_in=f),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        p["shared_gate"] = pf.dense(f"{prefix}.shared_gate",
+                                    (layers, d, fs), (None, "embed", "ff"),
+                                    fan_in=d)
+        p["shared_up"] = pf.dense(f"{prefix}.shared_up", (layers, d, fs),
+                                  (None, "embed", "ff"), fan_in=d)
+        p["shared_down"] = pf.dense(f"{prefix}.shared_down", (layers, fs, d),
+                                    (None, "ff", "embed"), fan_in=fs)
+    return p
+
+
+def _pack(pair_expert, pair_weight, pair_tok, E: int, cap: int):
+    """(T*k,) expert ids -> slot index into an (E*cap) buffer; drops
+    overflow. Returns (slot (T*k,), keep (T*k,))."""
+    onehot = jax.nn.one_hot(pair_expert, E, dtype=jnp.int32)  # (TK, E)
+    rank = jnp.cumsum(onehot, axis=0) - 1                      # 0-based
+    my_rank = jnp.take_along_axis(rank, pair_expert[:, None], 1)[:, 0]
+    keep = my_rank < cap
+    slot = pair_expert * cap + jnp.minimum(my_rank, cap - 1)
+    return slot, keep
+
+
+def moe_apply(cfg, w, x, *, par: Parallelism,
+              capacity_factor: float | None = None):
+    """x: (B, S, d) -> (B, S, d). w holds one layer's weights."""
+    capacity_factor = (capacity_factor if capacity_factor is not None
+                       else cfg.moe_capacity_factor)
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    f = cfg.moe_d_ff
+    act = activation("silu" if cfg.activation in ("swiglu",) else "gelu")
+
+    logits = jnp.einsum("bsd,de->bse", x, w["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                 # (B,S,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    top_w = top_w.astype(x.dtype)
+
+    tp = par.model_size
+    E_loc = max(E // tp, 1)
+
+    def local_moe(xt, te, tw, wg, wu, wo):
+        """Runs per (data, model)-shard: xt (Tl, d) local tokens; expert
+        weights sharded over the model axis (wg: (E_loc, d, f))."""
+        Tl = xt.shape[0]
+        cap = int(max(4, np.ceil(Tl * k * capacity_factor / E)))
+        pe = te.reshape(-1)                                # (Tl*k,)
+        pw = tw.reshape(-1)
+        ptok = jnp.repeat(jnp.arange(Tl), k)
+        slot, keep = _pack(pe, pw, ptok, E, cap)
+        buf = jnp.zeros((E * cap, d), xt.dtype)
+        buf = buf.at[slot].add(jnp.where(keep[:, None], xt[ptok], 0))
+        # ship expert shards to their owners: (tp, E_loc*cap, d)
+        buf = buf.reshape(tp, E_loc * cap, d)
+        if tp > 1:
+            recv = jax.lax.all_to_all(buf, par.model_axis, split_axis=0,
+                                      concat_axis=0, tiled=False)
+        else:
+            recv = buf
+        # recv: (tp, E_loc*cap, d) = each source's slice for MY experts
+        h = recv.reshape(tp, E_loc, cap, d).transpose(1, 0, 2, 3) \
+            .reshape(E_loc, tp * cap, d)
+        g = jnp.einsum("ecd,edf->ecf", h, wg)
+        u = jnp.einsum("ecd,edf->ecf", h, wu)
+        o = jnp.einsum("ecf,efd->ecd", act(g) * u, wo)
+        o = o.reshape(E_loc, tp, cap, d).transpose(1, 0, 2, 3) \
+            .reshape(tp, E_loc * cap, d)
+        if tp > 1:
+            back = jax.lax.all_to_all(o, par.model_axis, split_axis=0,
+                                      concat_axis=0, tiled=False)
+        else:
+            back = o
+        back = back.reshape(E * cap, d)
+        contrib = back[slot] * jnp.where(keep, pw, 0)[:, None]
+        out = jnp.zeros_like(xt).at[ptok].add(contrib)
+        return out
+
+    if par.mesh is None:
+        out = local_moe(x.reshape(B * S, d), top_e.reshape(B * S, k),
+                        top_w.reshape(B * S, k), w["wi_gate"], w["wi_up"],
+                        w["wo"])
+        out = out.reshape(B, S, d)
+    else:
+        mesh = par.mesh
+        # token sharding: batch over the data axes when divisible,
+        # sequence over the model axis when divisible (decode keeps S=1
+        # replicated across the model axis — the a2a roundtrip still
+        # returns identical results on every shard).
+        dp = int(np.prod([mesh.shape[a] for a in par.data_axes]))
+        bspec = tuple(par.data_axes) if B % dp == 0 else None
+        sspec = par.model_axis if S % max(tp, 1) == 0 and S > 1 else None
+        tok_spec = P(bspec, sspec, None)
+        sm = jax.shard_map(
+            functools.partial(_sharded_moe_body, E=E, k=k, d=d, f=f,
+                              tp=tp, E_loc=E_loc,
+                              capacity_factor=capacity_factor,
+                              act=act, model_axis=par.model_axis),
+            mesh=mesh,
+            in_specs=(tok_spec, tok_spec, tok_spec,
+                      P(None, par.model_axis, None, None),
+                      P(None, par.model_axis, None, None),
+                      P(None, par.model_axis, None, None)),
+            out_specs=tok_spec,
+            check_vma=False)
+        out = sm(x, top_e, top_w, w["wi_gate"][None], w["wi_up"][None],
+                 w["wo"][None])
+
+    if cfg.num_shared_experts:
+        h = act(x @ w["shared_gate"]) * (x @ w["shared_up"])
+        h = shard(h, ("batch", None, "ff"), par)
+        out = out + h @ w["shared_down"]
+    return out
+
+
+def _sharded_moe_body(x, te, tw, wg, wu, wo, *, E, k, d, f, tp, E_loc,
+                      capacity_factor, act, model_axis):
+    """shard_map body: x (Bl, Sl, d); te/tw (Bl, Sl, k); w* (1, E_loc,...)."""
+    Bl, Sl, _ = x.shape
+    xt = x.reshape(Bl * Sl, d)
+    pe = te.reshape(-1)
+    pw = tw.reshape(-1)
+    Tl = Bl * Sl
+    cap = int(max(4, np.ceil(Tl * k * capacity_factor / E)))
+    ptok = jnp.repeat(jnp.arange(Tl), k)
+    slot, keep = _pack(pe, pw, ptok, E, cap)
+    buf = jnp.zeros((E * cap, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xt[ptok], 0))
+    buf = buf.reshape(tp, E_loc * cap, d)
+    if tp > 1:
+        recv = jax.lax.all_to_all(buf, model_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+    else:
+        recv = buf
+    h = recv.reshape(tp, E_loc, cap, d).transpose(1, 0, 2, 3) \
+        .reshape(E_loc, tp * cap, d)
+    g = jnp.einsum("ecd,edf->ecf", h, wg[0])
+    u = jnp.einsum("ecd,edf->ecf", h, wu[0])
+    o = jnp.einsum("ecf,efd->ecd", act(g) * u, wo[0])
+    o = o.reshape(E_loc, tp, cap, d).transpose(1, 0, 2, 3) \
+        .reshape(tp, E_loc * cap, d)
+    if tp > 1:
+        back = jax.lax.all_to_all(o, model_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+    else:
+        back = o
+    back = back.reshape(E * cap, d)
+    contrib = back[slot] * jnp.where(keep, pw, 0)[:, None]
+    out = jnp.zeros_like(xt).at[ptok].add(contrib)
+    return out.reshape(Bl, Sl, d)

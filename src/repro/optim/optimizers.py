@@ -1,0 +1,143 @@
+"""Functional optimizers (AdamW, Adafactor) + schedules + clipping.
+
+State dtype is configurable: >100B configs default to bf16 first/second
+moments so the optimizer state fits the per-chip HBM budget (see
+DESIGN.md §5 and the dry-run memory analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * (step + 1.0) / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params, step) -> (params, state)
+
+
+def adamw(lr_fn: Callable, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+          state_dtype=jnp.float32, clip=1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)  # noqa: E731
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(step)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            step_ = lr * ((m_new / bc1) /
+                          (jnp.sqrt(v_new / bc2) + eps) + wd *
+                          p.astype(jnp.float32))
+            return ((p.astype(jnp.float32) - step_).astype(p.dtype),
+                    m_new.astype(state_dtype), v_new.astype(state_dtype))
+
+        flat_p, td = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(td, [o[0] for o in out])
+        new_m = jax.tree.unflatten(td, [o[1] for o in out])
+        new_v = jax.tree.unflatten(td, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn: Callable, eps=1e-30, clip=1.0,
+              state_dtype=jnp.float32) -> Optimizer:
+    """Factored second moments for >=2D params (memory ~O(n+m) not O(nm))."""
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], state_dtype),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        state_dtype)}
+            return {"v": jnp.zeros(p.shape, state_dtype)}
+        return {"f": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** -0.8
+        lr = lr_fn(step)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"].astype(jnp.float32) + \
+                    (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"].astype(jnp.float32) + \
+                    (1 - beta) * g2.mean(-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                  eps))
+                new_s = {"vr": vr.astype(state_dtype),
+                         "vc": vc.astype(state_dtype)}
+            else:
+                v = beta * s["v"].astype(jnp.float32) + (1 - beta) * g2
+                denom = jnp.sqrt(v)
+                new_s = {"v": v.astype(state_dtype)}
+            stp = lr * gf / jnp.maximum(denom, 1e-12)
+            return (p.astype(jnp.float32) - stp).astype(p.dtype), new_s
+
+        leaves_p, td = jax.tree.flatten(params)
+        leaves_g = jax.tree.leaves(grads)
+        leaves_s = jax.tree.flatten(
+            state["f"], is_leaf=lambda x: isinstance(x, dict) and (
+                "vr" in x or "v" in x))[0]
+        out = [upd(g, s, p) for g, s, p in zip(leaves_g, leaves_s,
+                                               leaves_p)]
+        new_p = jax.tree.unflatten(td, [o[0] for o in out])
+        new_s = jax.tree.unflatten(td, [o[1] for o in out])
+        return new_p, {"f": new_s}, {"grad_norm": gnorm}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg, total_steps: int = 10000,
+                   base_lr: float = 3e-4) -> Optimizer:
+    lr = cosine_schedule(base_lr, warmup=min(500, total_steps // 10),
+                         total=total_steps)
+    sdt = jnp.bfloat16 if cfg.opt_state_dtype == "bfloat16" else jnp.float32
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr, state_dtype=sdt)
+    return adamw(lr, state_dtype=sdt)

@@ -1,0 +1,3 @@
+from repro.runtime import buckets, coflow_bridge, overlap
+
+__all__ = ["buckets", "coflow_bridge", "overlap"]

@@ -1,0 +1,50 @@
+"""Gradient bucketizer: pytree leaves -> size-bounded buckets (= coflows).
+
+The backward pass produces gradients in reverse-layer order; buckets
+preserve that order (bucket 0 = deepest layers = ready first), which
+becomes the coflow 'arrival rank' fed to the Saath coordinator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    bid: int
+    paths: tuple          # leaf key-paths (jax.tree_util keystr)
+    leaf_idx: tuple       # flat leaf indices
+    bytes: int
+
+
+def bucketize(tree: Any, bucket_bytes: int = 64 * 1024 * 1024,
+              reverse: bool = True) -> List[Bucket]:
+    """Greedy fill in (reversed) leaf order; a leaf larger than
+    bucket_bytes gets its own bucket."""
+    leaves_kp = jax.tree_util.tree_leaves_with_path(tree)
+    items = []
+    for idx, (kp, leaf) in enumerate(leaves_kp):
+        sz = int(np.prod(leaf.shape)) * leaf.dtype.itemsize \
+            if hasattr(leaf, "shape") else 8
+        items.append((jax.tree_util.keystr(kp), idx, sz))
+    if reverse:
+        items = items[::-1]
+
+    buckets: List[Bucket] = []
+    cur_p, cur_i, cur_b = [], [], 0
+    for path, idx, sz in items:
+        if cur_b > 0 and cur_b + sz > bucket_bytes:
+            buckets.append(Bucket(len(buckets), tuple(cur_p), tuple(cur_i),
+                                  cur_b))
+            cur_p, cur_i, cur_b = [], [], 0
+        cur_p.append(path)
+        cur_i.append(idx)
+        cur_b += sz
+    if cur_b:
+        buckets.append(Bucket(len(buckets), tuple(cur_p), tuple(cur_i),
+                              cur_b))
+    return buckets

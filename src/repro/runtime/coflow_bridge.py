@@ -1,0 +1,125 @@
+"""Coflow bridge: collective traffic sources -> Saath schedule -> waves.
+
+This is the paper's technique acting as the framework's collective
+scheduler (DESIGN.md §2). Each pending collective is one COFLOW:
+
+* a gradient bucket's reduce-scatter / all-reduce over the ``data`` (and
+  ``pod``) axis — arrival rank = backward generation order;
+* a MoE all-to-all wave over the expert axis;
+* background tenants: checkpoint uploads (host/DCN links), KV-cache
+  migrations between serving replicas.
+
+Port model (TPU v5e): every chip has independent ICI links per torus
+axis, so two collectives contend iff they use the same (axis, chip-
+group) resource; DCN/host traffic uses distinct 'ports'. The planner
+runs the *same* Fig. 7 algorithm (numpy Saath on a FlowTable whose
+ports are (resource, chip) pairs) and emits WAVES: coflows admitted in
+the same tick are issued together (they share no contended resource);
+later waves are chained behind earlier ones with optimization barriers
+(runtime.overlap). All-or-none holds by construction: an SPMD
+collective is indivisible across its chips.
+
+Planning is static per train step (sizes known at trace time), replayed
+every step boundary — the paper's δ maps to the step interval (§2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.coflow import Coflow, Flow, Trace
+from repro.core.params import SchedulerParams
+from repro.core.policies import make_policy
+from repro.fabric.state import FlowTable
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCoflow:
+    name: str
+    bytes: int                 # per-chip payload
+    resources: tuple           # e.g. ("ici:data",), ("ici:model",), ("dcn",)
+    arrival_rank: int          # readiness order within the step
+    chips: tuple = ()          # chip ids involved; () = all
+
+
+# canonical resources on a (pod, data, model) mesh
+RESOURCES = ("ici:data", "ici:model", "ici:pod", "dcn", "host")
+
+
+def plan_waves(coflows: Sequence[CollectiveCoflow], *,
+               num_chips: int = 16,
+               params: SchedulerParams | None = None) -> List[List[str]]:
+    """Order collectives with the Saath coordinator; returns waves of
+    coflow names (wave = admitted in the same coordinator tick).
+
+    The fabric model: one port per (resource, chip). A coflow's flows
+    cover its resource on every involved chip; sizes are the per-chip
+    bytes, so per-flow queue thresholds and LCoF act exactly as in the
+    paper (a 'wide' MoE a2a demotes faster than a thin DCN upload).
+    """
+    if not coflows:
+        return []
+    params = params or SchedulerParams(
+        port_bw=50e9, delta=1e-4, start_threshold=8 * 1024 * 1024)
+    res_index = {r: i for i, r in enumerate(RESOURCES)}
+    P = len(RESOURCES) * num_chips
+
+    trace_coflows = []
+    fid = 0
+    for c in coflows:
+        chips = c.chips or tuple(range(num_chips))
+        flows = []
+        for r in c.resources:
+            base = res_index[r] * num_chips
+            for ch in chips:
+                flows.append(Flow(fid, base + ch, base + ch,
+                                  max(c.bytes, 1.0)))
+                fid += 1
+        trace_coflows.append(
+            Coflow(cid=c.arrival_rank, arrival=float(c.arrival_rank) * 1e-9,
+                   flows=flows))
+    trace = Trace(num_ports=P, coflows=trace_coflows)
+    table = FlowTable.from_trace(trace, params.port_bw)
+    table.active[:] = True
+
+    pol = make_policy("saath", params, work_conservation=False)
+    pol.reset(table)
+
+    # FlowTable renumbers coflows positionally in cid-sorted order
+    ranks_sorted = sorted(c.arrival_rank for c in coflows)
+    pos_of_rank = {r: i for i, r in enumerate(ranks_sorted)}
+    by_pos: Dict[int, str] = {pos_of_rank[c.arrival_rank]: c.name
+                              for c in coflows}
+    waves: List[List[str]] = []
+    now = 0.0
+    remaining = set(by_pos)
+    guard = 0
+    while remaining and guard < len(by_pos) + 2:
+        guard += 1
+        rates = pol.schedule(table, now)
+        admitted = sorted(
+            c for c in remaining
+            if rates[table.flow_lo[c]:table.flow_hi[c]].max() > 0)
+        if not admitted:  # should not happen: ports free up every wave
+            admitted = [min(remaining)]
+        waves.append([by_pos[c] for c in admitted])
+        for c in admitted:
+            lo, hi = table.flow_lo[c], table.flow_hi[c]
+            table.sent[lo:hi] = table.size[lo:hi]
+            table.done[lo:hi] = True
+            table.finished[c] = True
+            table.active[c] = False
+            remaining.discard(c)
+        now += params.delta
+    return waves
+
+
+def grad_bucket_coflows(buckets, *, axes=("ici:data",),
+                        rank_offset: int = 0) -> List[CollectiveCoflow]:
+    """Buckets arrive in reverse-layer order (bucket 0 ready first)."""
+    return [CollectiveCoflow(name=f"grad/{b.bid}", bytes=b.bytes,
+                             resources=tuple(axes),
+                             arrival_rank=rank_offset + b.bid)
+            for b in buckets]

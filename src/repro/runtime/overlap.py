@@ -1,0 +1,67 @@
+"""Wave-ordered collective issue (the all-or-none issue engine).
+
+Inside jit, XLA is free to reorder independent collectives; to make the
+Saath plan binding we chain waves with ``jax.lax.optimization_barrier``:
+every collective of wave i+1 data-depends on the results of wave i, so
+the compiled program issues the waves in plan order while collectives
+*within* a wave (disjoint resources per the planner) remain free to
+overlap with each other and with compute.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def issue_waves(tensors: Dict[str, jax.Array],
+                waves: Sequence[Sequence[str]],
+                op: Callable[[str, jax.Array], jax.Array]):
+    """Apply `op(name, x)` (a collective) to each named tensor, wave by
+    wave, with barriers between waves. Returns dict of results."""
+    out: Dict[str, jax.Array] = {}
+    token = None
+    for wave in waves:
+        if token is not None:
+            # make this wave's inputs depend on the previous wave's outputs
+            gated = jax.lax.optimization_barrier(
+                tuple(tensors[n] for n in wave) + (token,))
+            wave_in = dict(zip(wave, gated[:-1]))
+        else:
+            wave_in = {n: tensors[n] for n in wave}
+        results = [op(n, wave_in[n]) for n in wave]
+        for n, r in zip(wave, results):
+            out[n] = r
+        # token summarises the wave cheaply (scalar from each result)
+        token = jnp.stack([jnp.real(r.ravel()[0]).astype(jnp.float32)
+                           for r in results]).sum()
+    return out
+
+
+def scheduled_psum(grads_flat: List[jax.Array], buckets, waves,
+                   axis_name: str | tuple):
+    """shard_map-level: per-bucket psum of flattened gradients, issued in
+    Saath wave order. grads_flat: flat leaf list (same order bucketize
+    saw). Returns the reduced flat list."""
+    name_to_bucket = {f"grad/{b.bid}": b for b in buckets}
+    packed = {
+        f"grad/{b.bid}": jnp.concatenate(
+            [grads_flat[i].ravel() for i in b.leaf_idx])
+        for b in buckets
+    }
+
+    def op(name, x):
+        return jax.lax.psum(x, axis_name)
+
+    reduced = issue_waves(packed, waves, op)
+
+    out = list(grads_flat)
+    for name, vec in reduced.items():
+        b = name_to_bucket[name]
+        off = 0
+        for i in b.leaf_idx:
+            n = grads_flat[i].size
+            out[i] = vec[off:off + n].reshape(grads_flat[i].shape)
+            off += n
+    return out

@@ -1,0 +1,4 @@
+from repro.traces.loader import load_coflow_benchmark
+from repro.traces.synth import fb_like_trace, tiny_trace
+
+__all__ = ["fb_like_trace", "tiny_trace", "load_coflow_benchmark"]

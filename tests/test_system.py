@@ -1,0 +1,40 @@
+"""End-to-end behaviour of the paper's system: trace -> schedulers ->
+claims, and the framework bridge on top of the same coordinator."""
+import numpy as np
+
+from repro.core.params import SchedulerParams
+from repro.fabric.engine import simulate
+from repro.fabric.metrics import percentile_speedup
+from repro.traces import tiny_trace
+
+
+def test_end_to_end_saath_beats_aalo_tail():
+    tr = tiny_trace(60, 24, seed=5)
+    p = SchedulerParams()
+    aalo = simulate(tr, "aalo", p)
+    saath = simulate(tr, "saath", p)
+    assert saath.table.finished.all() and aalo.table.finished.all()
+    s = percentile_speedup(aalo.table.cct, saath.table.cct)
+    # the paper's effect is in the tail; median should not regress much
+    assert s["p90"] > 1.0, s
+    assert s["p50"] > 0.8, s
+
+
+def test_online_saath_tracks_offline_varys():
+    tr = tiny_trace(60, 24, seed=6)
+    p = SchedulerParams()
+    varys = simulate(tr, "varys-sebf", p)   # clairvoyant
+    saath = simulate(tr, "saath", p)        # online
+    a = float(np.nanmean(varys.table.cct))
+    b = float(np.nanmean(saath.table.cct))
+    assert b <= 2.0 * a, (a, b)  # online within 2x of clairvoyant avg
+
+
+def test_all_policies_agree_on_total_work():
+    """Every scheduler moves exactly the trace's bytes (no lost or
+    duplicated traffic) regardless of policy."""
+    tr = tiny_trace(30, 12, seed=7)
+    total = sum(f.size for c in tr.coflows for f in c.flows)
+    for pol in ("saath", "saath-jax", "aalo", "uc-tcp", "varys-sebf"):
+        res = simulate(tr, pol, SchedulerParams())
+        assert abs(float(res.table.sent.sum()) - total) < 1e-6 * total
