@@ -1,0 +1,21 @@
+PY := python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-slow test-all bench-smoke bench
+
+test:            ## fast tier-1 suite (slow integration tests excluded)
+	$(PY) -m pytest -q
+
+test-slow:       ## only the @pytest.mark.slow integration tests
+	$(PY) -m pytest -q -m slow
+
+test-all:        ## everything
+	$(PY) -m pytest -q -m ""
+
+bench-smoke:     ## the quick batched-engine benchmark paths
+	$(PY) -m benchmarks.fig9_speedup --engine=jax
+	$(PY) -m benchmarks.fig14_sensitivity --engine=jax
+	$(PY) -m benchmarks.table2_coordinator_latency --engine=jax
+
+bench:           ## full quick benchmark suite (numpy reference engine)
+	$(PY) -m benchmarks.run

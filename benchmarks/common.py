@@ -1,6 +1,7 @@
 """Shared benchmark machinery: trace + simulation cache, CSV emit."""
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import sys
 import time
@@ -47,6 +48,22 @@ class Bench:
                   f"{dict(policy_kwargs or {})} in "
                   f"{time.perf_counter() - t0:.1f}s", file=sys.stderr)
         return self._sims[key]
+
+
+def cli_bench(argv=None) -> "Tuple[Bench, str]":
+    """Common driver CLI: --full fabric scale, --engine numpy|jax.
+
+    `numpy` is the event-driven reference replay; `jax` adds the batched
+    XLA fleet-engine path (fabric.jax_engine) where the driver supports
+    it.
+    """
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="FB-scale fabric (526 coflows x 150 ports)")
+    ap.add_argument("--engine", choices=("numpy", "jax"), default="numpy",
+                    help="replay engine for the Saath side")
+    args = ap.parse_args(argv)
+    return Bench(quick=not args.full), args.engine
 
 
 def emit(name: str, rows):

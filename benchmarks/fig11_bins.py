@@ -1,14 +1,24 @@
 """Fig. 11/12: Saath speedup over Aalo per Table-1 bin
-(size <=/> 100MB x width <=/> 10)."""
+(size <=/> 100MB x width <=/> 10).
+
+--engine=jax replays the Saath side through the batched XLA engine
+(fabric.jax_engine.run_to_table) instead of the event-driven replay;
+Aalo stays on the numpy reference (it has no jitted coordinator).
+"""
 from __future__ import annotations
 
-from benchmarks.common import Bench, emit
+from benchmarks.common import Bench, cli_bench, emit
 from repro.fabric.metrics import bin_speedups
 
 
-def run(bench: Bench):
+def run(bench: Bench, engine: str = "numpy"):
     aalo = bench.sim("aalo").table
-    saath = bench.sim("saath").table
+    if engine == "jax":
+        from repro.core.params import SchedulerParams
+        from repro.fabric import jax_engine
+        saath, _ = jax_engine.run_to_table(bench.trace(), SchedulerParams())
+    else:
+        saath = bench.sim("saath").table
     bins = bin_speedups(aalo, saath, qs=(50, 90))
     rows = []
     for b, d in bins.items():
@@ -17,9 +27,9 @@ def run(bench: Bench):
                "p90": d.get("p90", float("nan")),
                "n": d.get("n", 0)}
         rows.append(row)
-    emit("fig11_bins", rows)
+    emit(f"fig11_bins[{engine}]", rows)
     return rows
 
 
 if __name__ == "__main__":
-    run(Bench())
+    run(*cli_bench())

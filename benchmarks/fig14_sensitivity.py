@@ -7,8 +7,11 @@ both degrade as delta grows; Saath's edge grows with contention (A).
 from __future__ import annotations
 
 import dataclasses
+import time
 
-from benchmarks.common import Bench, emit
+import numpy as np
+
+from benchmarks.common import Bench, cli_bench, emit
 from repro.core.params import MB, SchedulerParams
 from repro.fabric.metrics import percentile_speedup
 
@@ -19,7 +22,9 @@ def _speedup(bench, params, **trace_kw):
     return percentile_speedup(a, s)
 
 
-def run(bench: Bench):
+def run(bench: Bench, engine: str = "numpy"):
+    if engine == "jax":
+        return run_jax_sweep(bench)
     rows = []
     base = SchedulerParams()
 
@@ -53,5 +58,49 @@ def run(bench: Bench):
     return rows
 
 
+def run_jax_sweep(bench: Bench):
+    """The whole (S, E, delta, d) grid on one trace as ONE vmapped XLA
+    computation (fabric.jax_engine.simulate_sweep) — the paper's Fig. 14
+    methodology at sweep-in-one-shot cost. Reports Saath CCT stats per
+    setting; the S-insensitivity claim (LCoF fixes FIFO's HoL blocking)
+    is checked directly on the batched results."""
+    from repro.fabric import jax_engine
+    from repro.traces import tiny_trace
+
+    n, ports = (60, 24) if bench.quick else (100, 48)
+    trace = tiny_trace(n, ports, seed=0, load=0.8)
+    base = SchedulerParams()
+    grid = []
+    for S in (1 * MB, 10 * MB, 100 * MB):
+        grid.append(("S", S / MB,
+                     dataclasses.replace(base, start_threshold=S)))
+    for E in (2.0, 10.0, 32.0):
+        grid.append(("E", E, dataclasses.replace(base, growth=E)))
+    for delta in (8e-3, 64e-3, 256e-3):
+        grid.append(("delta_ms", delta * 1e3,
+                     dataclasses.replace(base, delta=delta)))
+    for d in (1.0, 2.0, 8.0):
+        grid.append(("d", d, dataclasses.replace(base, deadline_factor=d)))
+
+    t0 = time.perf_counter()
+    res = jax_engine.simulate_sweep(trace, [p for _, _, p in grid])
+    wall = time.perf_counter() - t0
+    C = len(trace.coflows)
+    rows = []
+    for i, (knob, value, _) in enumerate(grid):
+        cct = res.cct[i, :C]
+        rows.append({"knob": knob, "value": value,
+                     "avg_cct": float(np.nanmean(cct)),
+                     "p50_cct": float(np.nanpercentile(cct, 50)),
+                     "p90_cct": float(np.nanpercentile(cct, 90))})
+    emit("fig14_sensitivity[jax]",
+         rows + [{"knob": "wall_s", "value": wall, "avg_cct": len(grid),
+                  "p50_cct": float("nan"), "p90_cct": float("nan")}])
+    # S-insensitivity: avg CCT varies < 2x across the S grid
+    s_rows = [r["avg_cct"] for r in rows if r["knob"] == "S"]
+    assert max(s_rows) <= 2.0 * min(s_rows), s_rows
+    return rows
+
+
 if __name__ == "__main__":
-    run(Bench())
+    run(*cli_bench())

@@ -55,6 +55,8 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="FB-scale fabric (526 coflows x 150 ports)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--engine", choices=("numpy", "jax"), default="numpy",
+                    help="add the batched jax_engine paths where supported")
     args = ap.parse_args()
     bench = Bench(quick=not args.full)
     t0 = time.time()
@@ -64,7 +66,11 @@ def main():
             continue
         t1 = time.time()
         try:
-            mod.run(bench)
+            import inspect
+            if "engine" in inspect.signature(mod.run).parameters:
+                mod.run(bench, engine=args.engine)
+            else:
+                mod.run(bench)
         except AssertionError as e:
             failures.append((name, str(e)))
             print(f"# {name} CLAIM-CHECK FAILED: {e}", file=sys.stderr)

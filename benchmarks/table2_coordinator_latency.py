@@ -12,7 +12,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Bench, emit
+from benchmarks.common import Bench, cli_bench, emit
 from repro.core import jax_coordinator as jc
 from repro.core.params import SchedulerParams
 from repro.kernels import ops
@@ -27,7 +27,7 @@ def _time(fn, n=20, warmup=3):
     return (time.perf_counter() - t0) / n
 
 
-def run(bench: Bench):
+def run(bench: Bench, engine: str = "numpy"):
     import jax
     import jax.numpy as jnp
 
@@ -77,11 +77,35 @@ def run(bench: Bench):
         rows.append({"impl": "jax-jit", "C": C, "P": P,
                      "avg_ms": dt * 1e3,
                      "note": f"contention={dt_k * 1e3:.3f}ms"})
+    if engine == "jax":
+        rows += run_engine_throughput(bench)
     emit("table2_coordinator", rows)
     big = next(r for r in rows if r["C"] == 4096)
     assert big["avg_ms"] < 1e3, "coordinator tick should be sub-second"
     return rows
 
 
+def run_engine_throughput(bench: Bench):
+    """Amortized per-trace coordinator-step cost when the whole fleet
+    runs as one scanned/vmapped computation (fabric.jax_engine) — the
+    batched counterpart of the single-tick numbers above."""
+    from repro.core.params import SchedulerParams
+    from repro.fabric import jax_engine
+    from repro.traces import tiny_trace
+
+    p = SchedulerParams()
+    n, ports, fleet = (60, 24, 16) if bench.quick else (120, 48, 32)
+    traces = [tiny_trace(n, ports, seed=s, load=0.8) for s in range(fleet)]
+    res = jax_engine.simulate_batch(traces, p)          # compile
+    t0 = time.perf_counter()
+    res = jax_engine.simulate_batch(traces, p)
+    wall = time.perf_counter() - t0
+    steps = res.events * fleet                          # coordinator ticks
+    return [{"impl": "jax-batched-engine", "C": n, "P": ports,
+             "avg_ms": 1e3 * wall / max(steps, 1),
+             "note": f"fleet={fleet} events={res.events} "
+                     f"wall={wall:.2f}s (amortized per trace-step)"}]
+
+
 if __name__ == "__main__":
-    run(Bench())
+    run(*cli_bench())

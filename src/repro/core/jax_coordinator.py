@@ -26,6 +26,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.queues import CROSS_EPS
 from repro.kernels import ops
 
 BIG = jnp.float32(1e30)
@@ -37,11 +38,57 @@ class CoordParams(NamedTuple):
     deadline_factor: float = 2.0
     min_rate_frac: float = 1e-3
     bw_ref: float = 1.0        # reference port bandwidth for t_min
+    growth: float = 0.0        # E; 0 = infer from thresholds (legacy)
 
     @staticmethod
     def from_params(p) -> "CoordParams":
         return CoordParams(tuple(p.thresholds()), p.deadline_factor,
-                           p.min_rate_frac, p.port_bw)
+                           p.min_rate_frac, p.port_bw, p.growth)
+
+
+def _queue_spans(thresholds, growth: float = 0.0) -> list:
+    """Per-queue residence spans (matches core.queues.min_queue_residence):
+    span_q = Q_q^hi - Q_q^lo; the unbounded last queue uses one growth
+    step beyond its lower bound. `growth` must be passed explicitly for
+    K == 2, where thresholds[1] is +inf and cannot be used to infer E."""
+    K = len(thresholds)
+    los = (0.0,) + tuple(thresholds[:-1])
+    if not growth:
+        growth = (thresholds[1] / thresholds[0]) if K > 2 else 2.0
+    spans = [h - l for h, l in zip(thresholds, los)]
+    spans[K - 1] = (los[K - 1] * growth - los[K - 1]) if K > 1 \
+        else thresholds[0]
+    return spans
+
+
+class DynCoordParams(NamedTuple):
+    """Coordinator parameters as traced arrays.
+
+    Same knobs as CoordParams but every leaf is a jax array, so a
+    parameter sweep can be vmapped (stack a leading axis on each leaf)
+    instead of recompiling per setting. K = len(thresholds) stays a
+    static shape. Built host-side: spans are precomputed with plain
+    python so the traced tick never sees the +inf arithmetic.
+    """
+    thresholds: jax.Array       # (K,) f32, last = +inf
+    span: jax.Array             # (K,) f32 queue residence spans
+    deadline_factor: jax.Array  # () f32
+    min_rate_frac: jax.Array    # () f32
+    bw_ref: jax.Array           # () f32
+
+    @staticmethod
+    def from_params(p) -> "DynCoordParams":
+        return DynCoordParams.from_cp(CoordParams.from_params(p))
+
+    @staticmethod
+    def from_cp(cp: CoordParams) -> "DynCoordParams":
+        return DynCoordParams(
+            jnp.asarray(cp.thresholds, jnp.float32),
+            jnp.asarray(_queue_spans(cp.thresholds, cp.growth),
+                        jnp.float32),
+            jnp.float32(cp.deadline_factor),
+            jnp.float32(cp.min_rate_frac),
+            jnp.float32(cp.bw_ref))
 
 
 class CoordState(NamedTuple):
@@ -70,8 +117,12 @@ class CoflowBatch(NamedTuple):
 
 
 def _queue_of(value: jax.Array, th: jax.Array) -> jax.Array:
-    """Smallest q with value < Q_q^hi (th sorted, th[-1] = +inf)."""
-    return jnp.searchsorted(th, value, side="right").astype(jnp.int32)
+    """Smallest q with value < Q_q^hi (th sorted, th[-1] = +inf).
+    Applies core.queues.CROSS_EPS so exact-on-threshold landings (every
+    crossing event lands there) decide identically to the f64 reference.
+    """
+    return jnp.searchsorted(th, value * (1.0 + CROSS_EPS),
+                            side="right").astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("cp", "kernel"))
@@ -80,7 +131,15 @@ def schedule_tick(state: CoordState, batch: CoflowBatch, now: jax.Array,
                   kernel: str | None = None):
     """One Fig. 7 coordinator tick. Returns (new_state, out) where out has
     per-coflow equal rates (MADD), admission mask, queue, contention."""
-    th = jnp.asarray(cp.thresholds, jnp.float32)
+    return tick_core(state, batch, now, DynCoordParams.from_cp(cp),
+                     kernel=kernel)
+
+
+def tick_core(state: CoordState, batch: CoflowBatch, now: jax.Array,
+              dp: DynCoordParams, *, kernel: str | None = None):
+    """The Fig. 7 tick with fully traced parameters (un-jitted; callers
+    embed it in their own jit/scan/vmap — fabric.jax_engine scans it)."""
+    th = dp.thresholds
     C, P = batch.cnt_s.shape
     act = batch.active
 
@@ -88,22 +147,15 @@ def schedule_tick(state: CoordState, batch: CoflowBatch, now: jax.Array,
     q = _queue_of(batch.m * batch.width.astype(jnp.float32), th)
     q = jnp.where(act, q, jnp.maximum(state.queue, 0))
 
-    # D5: FIFO-derived deadlines, refreshed on queue entry. Spans are
-    # static python (cp.thresholds is a static tuple); the last queue is
-    # unbounded so its span uses one growth step beyond its lower bound
-    # (matches core.queues.min_queue_residence).
+    # D5: FIFO-derived deadlines, refreshed on queue entry (spans are
+    # precomputed host-side in DynCoordParams, matching
+    # core.queues.min_queue_residence).
     entered = act & (q != state.queue)
-    K = len(cp.thresholds)
+    K = th.shape[0]
     cq = jnp.zeros((K,), jnp.float32).at[q].add(act.astype(jnp.float32))
-    los = (0.0,) + cp.thresholds[:-1]
-    growth = (cp.thresholds[1] / cp.thresholds[0]) if K > 1 else 2.0
-    spans = [h - l for h, l in zip(cp.thresholds, los)]
-    spans[K - 1] = (los[K - 1] * growth - los[K - 1]) if K > 1 \
-        else cp.thresholds[0]
-    span = jnp.asarray(spans, jnp.float32)
-    t_min = span[q] / (jnp.maximum(batch.width, 1) * cp.bw_ref)
+    t_min = dp.span[q] / (jnp.maximum(batch.width, 1) * dp.bw_ref)
     deadline = jnp.where(
-        entered, now + cp.deadline_factor * jnp.maximum(cq[q], 1.0) * t_min,
+        entered, now + dp.deadline_factor * jnp.maximum(cq[q], 1.0) * t_min,
         state.deadline)
     expired = act & (now >= deadline)
 
@@ -112,54 +164,65 @@ def schedule_tick(state: CoordState, batch: CoflowBatch, now: jax.Array,
                        (batch.cnt_r > 0).astype(jnp.float32),
                        act, force=kernel)
 
-    # order: expired first (by deadline), then (queue, k, stability,
-    # arrival); inactive last. jnp.lexsort: last key is primary.
+    # order: expired first (by deadline — a float lexsort operand, zero
+    # for everyone else), then (queue, k, stability, arrival); coflows
+    # with no live ports and inactive coflows last, so perm's first
+    # `n_live` entries double as the admission processing list.
+    # jnp.lexsort: last key is primary.
+    hp = act & ((batch.cnt_s > 0).any(axis=1)
+                | (batch.cnt_r > 0).any(axis=1))
     arr_rank = batch.arrival
     not_running = (~state.running).astype(jnp.int32)
-    primary = jnp.where(~act, 2, jnp.where(expired, 0, 1))
+    primary = jnp.where(~hp, 2, jnp.where(expired, 0, 1))
+    dl_key = jnp.where(expired & hp, deadline, 0.0)
     key_q = jnp.where(expired, 0, q)
     key_k = jnp.where(expired, 0, k)
     key_st = jnp.where(expired, 0, not_running)
-    key_arr = jnp.where(expired,
-                        jnp.argsort(jnp.argsort(deadline)), arr_rank)
+    key_arr = jnp.where(expired, 0, arr_rank)
     perm = jnp.lexsort((jnp.arange(C), key_arr, key_st, key_k, key_q,
-                        primary))
+                        dl_key, primary))
 
-    # D1/D2: all-or-none admission with MADD equal rates, in `perm` order
-    min_rate = cp.min_rate_frac * cp.bw_ref
+    # D1/D2: all-or-none admission with MADD equal rates, processed in
+    # `perm` priority order. Only a coflow with live ports can change the
+    # carry (a missed or port-less coflow leaves `avail` untouched), so
+    # the sequential pass runs as a while_loop over the COMPACTED live
+    # list: trip count = live coflows, not padded C. Results are
+    # identical to a full scan over perm — skipped entries are no-ops —
+    # and the fleet engine's per-tick cost drops with occupancy.
+    min_rate = dp.min_rate_frac * dp.bw_ref
+    cnt = jnp.concatenate([batch.cnt_s, batch.cnt_r], axis=1)   # (C, 2P)
+    avail0 = jnp.concatenate([batch.bw_s, batch.bw_r])          # (2P,)
+    has = cnt > 0
+    inv = jnp.where(has, 1.0 / jnp.maximum(cnt, 1e-9), 0.0)
+    bigm = jnp.where(has, 0.0, BIG)
+    clist = perm                          # live coflows lead (see above)
+    n_live = hp.sum().astype(jnp.int32)
+    zC = jnp.zeros((C,), jnp.float32)
 
-    def admit_step(carry, c):
-        avail_s, avail_r = carry
-        cs = batch.cnt_s[c]
-        cr = batch.cnt_r[c]
-        r = jnp.minimum(
-            jnp.where(cs > 0, avail_s / jnp.maximum(cs, 1e-9), BIG).min(),
-            jnp.where(cr > 0, avail_r / jnp.maximum(cr, 1e-9), BIG).min())
-        has_ports = ((cs > 0).any() | (cr > 0).any()) & act[c]
-        ok = has_ports & (r >= min_rate) & (r < BIG)
+    def admit_body(s):
+        k, avail, rate_, adm = s
+        c = clist[k]
+        r = (avail * inv[c] + bigm[c]).min()
+        ok = (r >= min_rate) & (r < BIG)
         r = jnp.where(ok, r, 0.0)
-        return (avail_s - r * cs, avail_r - r * cr), (r, ok)
+        return (k + 1, avail - r * cnt[c], rate_.at[c].set(r),
+                adm.at[c].set(ok))
 
-    (avail_s, avail_r), (r_perm, ok_perm) = jax.lax.scan(
-        admit_step, (batch.bw_s, batch.bw_r), perm)
-    rate = jnp.zeros((C,), jnp.float32).at[perm].set(r_perm)
-    admitted = jnp.zeros((C,), bool).at[perm].set(ok_perm)
+    _, avail, rate, admitted = jax.lax.while_loop(
+        lambda s: s[0] < n_live, admit_body,
+        (jnp.int32(0), avail0, zC, jnp.zeros((C,), bool)))
 
     # D4: coflow-granular work conservation over the missed list
-    def wc_step(carry, c):
-        avail_s, avail_r = carry
-        cs = batch.cnt_s[c]
-        cr = batch.cnt_r[c]
-        r = jnp.minimum(
-            jnp.where(cs > 0, avail_s / jnp.maximum(cs, 1e-9), BIG).min(),
-            jnp.where(cr > 0, avail_r / jnp.maximum(cr, 1e-9), BIG).min())
-        ok = act[c] & ~admitted[c] & (r > 0) & (r < BIG) \
-            & ((cs > 0).any() | (cr > 0).any())
+    def wc_body(s):
+        k, avail_, wc = s
+        c = clist[k]
+        r = (avail_ * inv[c] + bigm[c]).min()
+        ok = ~admitted[c] & (r > 0) & (r < BIG)
         r = jnp.where(ok, r, 0.0)
-        return (avail_s - r * cs, avail_r - r * cr), r
+        return (k + 1, avail_ - r * cnt[c], wc.at[c].set(r))
 
-    (_, _), wc_perm = jax.lax.scan(wc_step, (avail_s, avail_r), perm)
-    wc_rate = jnp.zeros((C,), jnp.float32).at[perm].set(wc_perm)
+    _, _, wc_rate = jax.lax.while_loop(
+        lambda s: s[0] < n_live, wc_body, (jnp.int32(0), avail, zC))
 
     new_state = CoordState(queue=jnp.where(act, q, state.queue),
                            deadline=deadline, running=admitted)

@@ -12,12 +12,23 @@ import numpy as np
 from repro.core.params import SchedulerParams
 
 
+# Relative crossing tolerance: the event-driven simulator lands a flow
+# EXACTLY on its queue threshold (the crossing instant is an event), so
+# an exact `value < Q_q^hi` comparison is a coin flip on the last float
+# ulp — and the f64 reference and the f32 jitted coordinator can flip
+# differently, forking otherwise-identical replays. Counting a value
+# within this relative band below the threshold as crossed (consistently
+# here and in jax_coordinator._queue_of) makes the decision deterministic
+# across precisions; the transition moves <= 0.001% early.
+CROSS_EPS = 1e-5
+
+
 def queue_of(value: np.ndarray, params: SchedulerParams) -> np.ndarray:
     """Queue index for a 'progress' value against exponential thresholds.
 
     q = smallest q with value < Q_q^hi; values below Q_0^hi land in queue 0.
     """
-    value = np.asarray(value, dtype=np.float64)
+    value = np.asarray(value, dtype=np.float64) * (1.0 + CROSS_EPS)
     with np.errstate(divide="ignore"):
         ratio = value / params.start_threshold
     q = np.where(

@@ -1,0 +1,357 @@
+"""Batched fixed-step XLA fleet simulator (the tentpole of PR 1).
+
+Where `fabric.engine.Simulator` replays ONE trace through a Python
+event loop, this module replays a whole fleet: `core.jax_coordinator.
+tick_core` is wrapped in a `jax.lax.scan` over δ-grid ticks and
+`jax.vmap`-ed over a leading trace axis, so N traces (and, via stacked
+`EngineParams`, M parameter settings) run as one XLA computation.
+
+Semantics (DESIGN.md §3): a fixed-step simulation on the δ grid — the
+schedule takes effect only at δ ticks, exactly the paper's pipelined
+coordinator. Between the discrete events the event-driven reference
+jumps across (arrival, flow completion, queue-threshold crossing,
+starvation deadline) the Fig. 7 schedule is a deterministic function
+of unchanged state, so each scan step safely jumps to the next
+grid-quantized event; flow completion instants are still recorded
+exactly (rates are constant inside an interval, the completion time
+is algebraic). A flow finishing mid-interval leaves its bandwidth
+idle until the next tick, matching the reference's δ-sensitivity
+(Fig. 14(c)).
+
+Known granularity differences vs the numpy `Saath` reference (both
+shared with `policies.saath_jax`): work conservation is
+coflow-granular, and the §4.3 dynamics re-queue is not modelled.
+Equivalence is property-tested in tests/test_jax_engine.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_coordinator as jc
+from repro.core.params import SchedulerParams
+from repro.traces.batch import TraceBatch, pack
+
+# completion slop: a flow whose remaining bytes are within REL_EPS of
+# what this tick delivers completes now — f32 cannot resolve finer
+# (accumulated over thousands of ticks), and without it a completion can
+# slip a tick and desynchronize the replay from the float64 reference.
+REL_EPS = 1e-5
+
+
+class EngineParams(NamedTuple):
+    """Traced scheduler knobs: a DynCoordParams plus the δ grid step.
+
+    Every leaf may carry a leading sweep axis (see `simulate_sweep`).
+    """
+    dp: jc.DynCoordParams
+    delta: jax.Array      # () f32 seconds
+    wc_weight: jax.Array  # () f32 1.0 = apply coflow-granular WC, 0.0 = off
+
+    @staticmethod
+    def from_scheduler(p: SchedulerParams, *,
+                       work_conservation: bool = True) -> "EngineParams":
+        return EngineParams(jc.DynCoordParams.from_params(p),
+                            jnp.float32(p.delta),
+                            jnp.float32(1.0 if work_conservation else 0.0))
+
+
+class EngineState(NamedTuple):
+    """Per-trace scan carry (all leaves get a leading batch axis)."""
+    coord: jc.CoordState
+    sent: jax.Array      # (F,) f32 bytes
+    done: jax.Array      # (F,) bool
+    fct: jax.Array       # (F,) f32 absolute completion time (0 until done)
+    finished: jax.Array  # (C,) bool
+    cct: jax.Array       # (C,) f32 completion - arrival (nan until done)
+    t0: jax.Array        # () f32 grid origin (first arrival, quantized up)
+    tick: jax.Array      # () i32 next tick index
+
+
+class EngineResult(NamedTuple):
+    cct: np.ndarray       # (B, C) nan for unfinished/padded coflows
+    fct: np.ndarray       # (B, F) nan for unfinished/padded flows
+    sent: np.ndarray      # (B, F) bytes
+    finished: np.ndarray  # (B, C) bool (padded coflows report True)
+    ticks: int            # max δ-grid ticks simulated across the batch
+    events: int           # event steps (scan iterations) executed
+
+    @property
+    def avg_cct(self) -> np.ndarray:
+        """(B,) mean CCT per trace over its real coflows."""
+        return np.nanmean(self.cct, axis=1)
+
+
+# ---- single-trace tick ---------------------------------------------------
+
+def _init_state(tb: TraceBatch, ep: EngineParams) -> EngineState:
+    """Single-trace state init (arrays here are unbatched rows)."""
+    F = tb.cid.shape[0]
+    C = tb.arrival.shape[0]
+    first = jnp.min(jnp.where(tb.coflow_valid, tb.arrival, jnp.inf))
+    t0 = jnp.ceil(first / ep.delta - 1e-6) * ep.delta
+    return EngineState(
+        coord=jc.CoordState(jnp.full((C,), -1, jnp.int32),
+                            jnp.full((C,), jnp.inf, jnp.float32),
+                            jnp.zeros((C,), bool)),
+        sent=jnp.zeros((F,), jnp.float32),
+        done=~tb.flow_valid,
+        fct=jnp.zeros((F,), jnp.float32),
+        finished=~tb.coflow_valid,
+        cct=jnp.full((C,), jnp.nan, jnp.float32),
+        t0=t0, tick=jnp.int32(0))
+
+
+# max ticks one event-jump may skip (idle gaps between arrivals are
+# jumped exactly; this only caps pathological/finished lanes)
+MAX_JUMP_TICKS = 1024.0
+
+
+def _segment_sum(data: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Sum `data` (F,) over contiguous index ranges [lo, hi) (any shape
+    of lo/hi) via one cumsum + two boundary gathers."""
+    s = jnp.concatenate([jnp.zeros_like(data[:1]), jnp.cumsum(data)])
+    return s[hi] - s[lo]
+
+
+def _segment_max(data: jax.Array, tb: TraceBatch) -> jax.Array:
+    """Max of non-negative `data` (F,) per contiguous coflow segment ->
+    (C,). Segmented cummax via associative_scan; the value at the last
+    flow of each segment is the segment max (0 for padded coflows)."""
+    def comb(a, b):
+        va, ia = a
+        vb, ib = b
+        return jnp.where(ia == ib, jnp.maximum(va, vb), vb), ib
+
+    v, _ = jax.lax.associative_scan(comb, (data, tb.cid))
+    return jnp.where(tb.coflow_valid, v[tb.flow_hi - 1], 0.0)
+
+
+def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
+          kernel: Optional[str]) -> EngineState:
+    """Advance one *event step*: schedule at the current δ tick, find the
+    next instant the schedule could change (arrival, flow completion,
+    queue-threshold crossing, starvation deadline — the reference
+    simulator's event list), quantize it UP to the δ grid, and integrate
+    the constant rates across the jumped interval. Between those events
+    the Fig. 7 schedule is a fixed point of unchanged state, so skipping
+    the intermediate ticks reproduces the per-tick trajectory exactly.
+    """
+    C = tb.arrival.shape[0]
+    delta = ep.delta
+    tickf = state.tick.astype(jnp.float32)
+    now = state.t0 + tickf * delta
+    eps_t = 1e-3 * delta
+
+    # activation (reference: arrival <= now + eps, eps << δ)
+    active = tb.coflow_valid & ~state.finished & (tb.arrival <= now + eps_t)
+    live = active[tb.cid] & ~state.done & tb.flow_valid
+    livef = live.astype(jnp.float32)
+
+    # coordinator view of the fabric: m_c (Eq. 1) over ALL flows,
+    # live-flow counts per (coflow, port) — scatter-free: 1-D cumsums
+    # over the host-precomputed (cid, port)-sorted flow orders
+    m = _segment_max(state.sent * tb.flow_valid, tb)
+    cnt_s = _segment_sum(livef[tb.perm_src], tb.lo_src, tb.hi_src)
+    cnt_r = _segment_sum(livef[tb.perm_dst], tb.lo_dst, tb.hi_dst)
+    batch = jc.CoflowBatch(active=active, arrival=tb.arrival_rank, m=m,
+                           width=tb.width, cnt_s=cnt_s, cnt_r=cnt_r,
+                           bw_s=tb.bw_send, bw_r=tb.bw_recv)
+    coord, out = jc.tick_core(state.coord, batch, now, ep.dp, kernel=kernel)
+    r_f = (out["rate"] + ep.wc_weight * out["wc_rate"])[tb.cid] * livef
+    served = live & (r_f > 0)
+    rem = tb.size - state.sent
+
+    # ---- event horizon (mirrors Simulator._next_event + Saath
+    # progress_events, vectorized) -------------------------------------
+    inf = jnp.float32(jnp.inf)
+    t_fin = jnp.min(jnp.where(served, now + rem / jnp.maximum(r_f, 1e-30),
+                              inf))
+    # per-flow queue-threshold crossing: flow f of coflow c crosses when
+    # sent_f reaches Q_q^hi / N_c (q = the post-assignment queue)
+    q = jnp.maximum(coord.queue, 0)
+    lim = (ep.dp.thresholds[q] /
+           jnp.maximum(tb.width, 1).astype(jnp.float32))[tb.cid]
+    dt_th = jnp.where(served & jnp.isfinite(lim) & (lim > state.sent),
+                      (lim - state.sent) / jnp.maximum(r_f, 1e-30), inf)
+    t_th = now + jnp.min(dt_th)
+    t_dl = jnp.min(jnp.where(active & (coord.deadline > now + eps_t),
+                             coord.deadline, inf))
+    t_arr = jnp.min(jnp.where(tb.coflow_valid & (tb.arrival > now + eps_t),
+                              tb.arrival, inf))
+    t_ev = jnp.minimum(jnp.minimum(t_fin, t_th), jnp.minimum(t_dl, t_arr))
+    n_ev = jnp.where(jnp.isfinite(t_ev),
+                     jnp.ceil((t_ev - state.t0) / delta - 1e-4),
+                     tickf + MAX_JUMP_TICKS)
+    n_next = jnp.clip(n_ev, tickf + 1.0, tickf + MAX_JUMP_TICKS)
+    dt = (n_next - tickf) * delta
+
+    # ---- integrate the constant rates over [now, now + dt) -----------
+    adv = r_f * dt
+    fin = served & (adv >= rem - REL_EPS * tb.size)
+    fct = jnp.where(fin, now + rem / jnp.maximum(r_f, 1e-30), state.fct)
+    sent = jnp.where(fin, tb.size,
+                     jnp.minimum(tb.size, state.sent + adv))
+    done = state.done | fin
+
+    # coflow completions: CCT = last FCT - arrival (fct is 0 until a
+    # flow completes, so the masked row-max sees only completed flows)
+    undone = _segment_sum((tb.flow_valid & ~done).astype(jnp.float32),
+                          tb.flow_lo, tb.flow_hi)
+    newly = active & (undone < 0.5)
+    last_fct = _segment_max(fct * tb.flow_valid, tb)
+    cct = jnp.where(newly, last_fct - tb.arrival, state.cct)
+
+    return EngineState(coord=coord, sent=sent, done=done, fct=fct,
+                       finished=state.finished | newly, cct=cct,
+                       t0=state.t0, tick=state.tick + (n_next - tickf)
+                       .astype(jnp.int32))
+
+
+# ---- batched chunk runner ------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk", "kernel", "sweep"))
+def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
+               *, chunk: int, kernel: Optional[str],
+               sweep: bool) -> EngineState:
+    """Scan `chunk` ticks for every trace in the batch (one executable,
+    reused across chunks so the host completion loop never recompiles).
+    sweep=True maps the EngineParams' leading axis alongside the traces.
+    """
+    def scan_ticks(s, tb_row, ep_row):
+        def body(c, _):
+            return _tick(c, tb_row, ep_row, kernel), None
+        s, _ = jax.lax.scan(body, s, None, length=chunk)
+        return s
+
+    return jax.vmap(scan_ticks, in_axes=(0, 0, 0 if sweep else None))(
+        state, tb, ep)
+
+
+@functools.partial(jax.jit, static_argnames=("sweep",))
+def _init_batch(tb: TraceBatch, ep: EngineParams, *,
+                sweep: bool) -> EngineState:
+    return jax.vmap(_init_state, in_axes=(0, 0 if sweep else None))(tb, ep)
+
+
+def default_max_ticks(tb: TraceBatch, delta: float, slack: float = 4.0,
+                      ) -> int:
+    """Sound-ish horizon bound: at every tick at least the head-of-line
+    coflow progresses at its bottleneck rate, so the makespan is at most
+    last_arrival + sum of per-coflow bottleneck times (x slack for
+    deadline/WC interleavings and idle arrival gaps)."""
+    bw = np.where(tb.bw_send > 0, tb.bw_send, np.inf).min()
+    per_port = np.zeros((tb.num_traces, 2, tb.num_ports))
+    np.add.at(per_port, (np.arange(tb.num_traces)[:, None], 0, tb.src),
+              tb.size * tb.flow_valid)
+    np.add.at(per_port, (np.arange(tb.num_traces)[:, None], 1, tb.dst),
+              tb.size * tb.flow_valid)
+    serial = per_port.max(axis=(1, 2)) / bw  # per-trace, coarse
+    last = np.where(tb.coflow_valid, tb.arrival, 0.0).max(axis=1)
+    # bottleneck-sum bound per trace: sum of each coflow's own bottleneck
+    tot = np.einsum("bf->b", tb.size * tb.flow_valid) / bw
+    horizon = float((last + slack * np.maximum(serial, tot)).max())
+    return max(int(np.ceil(horizon / delta)) + 2, 8)
+
+
+def simulate_batch(traces: "Sequence | TraceBatch",
+                   params: Optional[SchedulerParams] = None, *,
+                   max_ticks: Optional[int] = None, chunk: int = 128,
+                   kernel: Optional[str] = None,
+                   work_conservation: bool = True) -> EngineResult:
+    """Replay a fleet of traces under one parameter setting.
+
+    Runs jitted `chunk`-tick scans until every coflow of every trace
+    has finished (or `max_ticks` is exhausted, which raises — mirroring
+    the reference simulator's max_steps guard).
+    """
+    params = params or SchedulerParams()
+    tb = traces if isinstance(traces, TraceBatch) else \
+        pack(traces, port_bw=params.port_bw)
+    ep = EngineParams.from_scheduler(params,
+                                     work_conservation=work_conservation)
+    return _drive(tb, ep, params.delta, max_ticks, chunk, kernel,
+                  sweep=False)
+
+
+def simulate_sweep(trace, params_list: Sequence[SchedulerParams], *,
+                   max_ticks: Optional[int] = None, chunk: int = 128,
+                   kernel: Optional[str] = None) -> EngineResult:
+    """Replay ONE trace under M parameter settings as one computation.
+
+    All settings must share num_queues (K is a static shape) and delta
+    is taken per-setting — the scan length covers the smallest δ.
+    Returns an EngineResult whose leading axis is the setting axis.
+    """
+    k = {len(p.thresholds()) for p in params_list}
+    if len(k) != 1:
+        raise ValueError("sweep settings must share num_queues")
+    if len({p.port_bw for p in params_list}) != 1:
+        # port bandwidths are baked into the packed TraceBatch, so a
+        # per-setting bw would silently run every lane on settings[0]'s
+        raise ValueError("sweep settings must share port_bw")
+    tb1 = pack([trace], port_bw=params_list[0].port_bw)
+    B = len(params_list)
+    tb = TraceBatch(*(np.repeat(a, B, axis=0) for a in tb1))
+    eps = [EngineParams.from_scheduler(p) for p in params_list]
+    ep = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *eps)
+    min_delta = min(p.delta for p in params_list)
+    return _drive(tb, ep, min_delta, max_ticks, chunk, kernel, sweep=True)
+
+
+def _drive(tb: TraceBatch, ep: EngineParams, delta: float,
+           max_ticks: Optional[int], chunk: int, kernel: Optional[str],
+           *, sweep: bool) -> EngineResult:
+    if max_ticks is None:
+        max_ticks = default_max_ticks(tb, delta)
+    state = _init_batch(tb, ep, sweep=sweep)
+    events = 0
+    # every event step advances >= 1 grid tick, so max_ticks also bounds
+    # the number of event steps a terminating replay can need
+    while events < max_ticks:
+        state = _run_chunk(state, tb, ep, chunk=chunk, kernel=kernel,
+                           sweep=sweep)
+        events += chunk
+        if bool(jnp.all(state.finished)):
+            break
+    else:
+        raise RuntimeError(
+            f"jax_engine: {int((~np.asarray(state.finished)).sum())} "
+            f"coflows unfinished after {events} event steps "
+            f"(raise max_ticks or check the trace)")
+    fct = np.asarray(state.fct, np.float64)
+    fct[~np.asarray(state.done)] = np.nan
+    fct[~tb.flow_valid] = np.nan
+    return EngineResult(cct=np.asarray(state.cct, np.float64),
+                        fct=fct,
+                        sent=np.asarray(state.sent, np.float64),
+                        finished=np.asarray(state.finished),
+                        ticks=int(np.asarray(state.tick).max()),
+                        events=events)
+
+
+def run_to_table(trace, params: Optional[SchedulerParams] = None, **kw):
+    """Single-trace convenience: replay through the batched engine and
+    write cct/fct/sent back into a FlowTable (for metrics helpers like
+    `fabric.metrics.bin_speedups` that consume tables)."""
+    from repro.fabric.state import FlowTable
+
+    params = params or SchedulerParams()
+    table = FlowTable.from_trace(trace, params.port_bw)
+    res = simulate_batch([table], params, **kw)
+    F, C = table.size.shape[0], table.num_coflows
+    table.sent[:] = res.sent[0, :F]
+    table.fct[:] = res.fct[0, :F]
+    table.done[:] = ~np.isnan(res.fct[0, :F])
+    table.cct[:] = res.cct[0, :C]
+    table.finished[:] = res.finished[0, :C]
+    table.active[:] = False
+    return table, res
+
+
+__all__ = ["EngineParams", "EngineState", "EngineResult", "simulate_batch",
+           "simulate_sweep", "run_to_table", "default_max_ticks"]

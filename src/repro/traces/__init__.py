@@ -1,4 +1,6 @@
+from repro.traces.batch import TraceBatch, pack
 from repro.traces.loader import load_coflow_benchmark
 from repro.traces.synth import fb_like_trace, tiny_trace
 
-__all__ = ["fb_like_trace", "tiny_trace", "load_coflow_benchmark"]
+__all__ = ["fb_like_trace", "tiny_trace", "load_coflow_benchmark",
+           "TraceBatch", "pack"]

@@ -1,0 +1,170 @@
+"""Padded batch representation of coflow traces for the XLA fleet engine.
+
+``pack`` flattens a list of `Trace` (or pre-built `FlowTable`) objects
+into one `TraceBatch` of rectangular arrays — flows padded to a common
+F, coflows to a common C, ports to a common P — so `fabric.jax_engine`
+can `jax.vmap` a whole fleet of replays into a single XLA computation.
+
+Padding semantics (see DESIGN.md §3):
+
+* padded flows have ``flow_valid=False`` and start *done* in the
+  engine, so they never go live, never contribute to port counts, and
+  never hold a coflow open;
+* padded coflows have ``coflow_valid=False`` and ``arrival=+inf`` so
+  they never activate; their width is 1 so Eq. 1 arithmetic stays
+  benign;
+* ``arrival_rank`` is the host-computed exact FIFO rank (stable argsort
+  of arrival) — float arrivals may collide in f32, ranks cannot.
+
+Pad sizes round up to multiples (flows: 64, coflows: 16) so traces of
+slightly different sizes share one compiled engine executable.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Union
+
+import numpy as np
+
+from repro.core.coflow import Trace
+from repro.fabric.state import FlowTable
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+class TraceBatch(NamedTuple):
+    """B padded traces. Leading axis of every array is the trace axis."""
+    # per-flow (B, F)
+    cid: np.ndarray         # int32 owning coflow (0 for padding)
+    src: np.ndarray         # int32 sender port
+    dst: np.ndarray         # int32 receiver port
+    size: np.ndarray        # float32 bytes (1.0 for padding)
+    flow_valid: np.ndarray  # bool
+    # per-coflow (B, C)
+    arrival: np.ndarray       # float32 seconds (+inf for padding)
+    arrival_rank: np.ndarray  # int32 exact FIFO rank (host-computed)
+    width: np.ndarray         # int32 total flow count N_c
+    coflow_valid: np.ndarray  # bool
+    flow_lo: np.ndarray       # int32 [lo, hi) contiguous flow range —
+    flow_hi: np.ndarray       # segment reductions become cumsum diffs
+    # per-port (B, P)
+    bw_send: np.ndarray     # float32 bytes/s
+    bw_recv: np.ndarray     # float32 bytes/s
+    # port-count machinery (host-precomputed): flows reordered by
+    # (cid, src) / (cid, dst) make every (coflow, port) group contiguous,
+    # so the engine's live-flow port counts are 1-D cumsum differences
+    # over [lo, hi) instead of (F, 2P) scatter/cumsum work.
+    perm_src: np.ndarray    # (B, F) int32 flow order sorted by (cid, src)
+    perm_dst: np.ndarray    # (B, F) int32 flow order sorted by (cid, dst)
+    lo_src: np.ndarray      # (B, C, P) int32 group start in perm_src order
+    hi_src: np.ndarray      # (B, C, P) int32 group end
+    lo_dst: np.ndarray      # (B, C, P) int32
+    hi_dst: np.ndarray      # (B, C, P) int32
+
+    @property
+    def num_traces(self) -> int:
+        return self.cid.shape[0]
+
+    @property
+    def max_flows(self) -> int:
+        return self.cid.shape[1]
+
+    @property
+    def max_coflows(self) -> int:
+        return self.arrival.shape[1]
+
+    @property
+    def num_ports(self) -> int:
+        return self.bw_send.shape[1]
+
+    def row(self, b: int) -> "TraceBatch":
+        """Single-trace slice, keeping the (1, ...) batch axis."""
+        return TraceBatch(*(a[b:b + 1] for a in self))
+
+
+def pack(traces: Sequence[Union[Trace, FlowTable]], *,
+         port_bw: float = None,
+         flow_multiple: int = 64, coflow_multiple: int = 16) -> TraceBatch:
+    """Pad/pack traces (or FlowTables) into one TraceBatch.
+
+    `port_bw` is required when packing `Trace` objects (FlowTables carry
+    their own per-port bandwidths). DAG stage dependencies are a
+    host-simulator feature and are rejected here.
+    """
+    tables: List[FlowTable] = []
+    for t in traces:
+        if isinstance(t, Trace):
+            if port_bw is None:
+                raise ValueError("port_bw is required to pack Trace objects")
+            tables.append(FlowTable.from_trace(t, port_bw))
+        else:
+            tables.append(t)
+    if not tables:
+        raise ValueError("pack() needs at least one trace")
+    for t in tables:
+        if t.deps is not None:
+            raise NotImplementedError(
+                "DAG stage deps are not supported by the batched engine; "
+                "use fabric.engine.Simulator")
+
+    B = len(tables)
+    F = _round_up(max(t.size.shape[0] for t in tables), flow_multiple)
+    C = _round_up(max(t.num_coflows for t in tables), coflow_multiple)
+    P = max(t.num_ports for t in tables)
+
+    tb = TraceBatch(
+        cid=np.zeros((B, F), np.int32), src=np.zeros((B, F), np.int32),
+        dst=np.zeros((B, F), np.int32), size=np.ones((B, F), np.float32),
+        flow_valid=np.zeros((B, F), bool),
+        arrival=np.full((B, C), np.inf, np.float32),
+        arrival_rank=np.full((B, C), 2 ** 30, np.int32),
+        width=np.ones((B, C), np.int32),
+        coflow_valid=np.zeros((B, C), bool),
+        flow_lo=np.zeros((B, C), np.int32),
+        flow_hi=np.zeros((B, C), np.int32),
+        bw_send=np.zeros((B, P), np.float32),
+        bw_recv=np.zeros((B, P), np.float32),
+        perm_src=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
+        perm_dst=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
+        lo_src=np.zeros((B, C, P), np.int32),
+        hi_src=np.zeros((B, C, P), np.int32),
+        lo_dst=np.zeros((B, C, P), np.int32),
+        hi_dst=np.zeros((B, C, P), np.int32),
+    )
+    for b, t in enumerate(tables):
+        f, c = t.size.shape[0], t.num_coflows
+        tb.cid[b, :f] = t.cid
+        # padded flows get the first padded coflow id — or, when the
+        # trace fills C exactly, the LAST REAL id (the pad run then
+        # contiguously extends that coflow's run). Either way segment
+        # ids form non-repeating contiguous runs, which is all the
+        # engine's segmented reductions need; any gather through a pad
+        # cid must stay masked by flow_valid (pads start done).
+        tb.cid[b, f:] = min(c, C - 1)
+        tb.src[b, :f] = t.src
+        tb.dst[b, :f] = t.dst
+        tb.size[b, :f] = t.size
+        tb.flow_valid[b, :f] = True
+        tb.arrival[b, :c] = t.arrival
+        tb.arrival_rank[b, :c] = np.argsort(
+            np.argsort(t.arrival, kind="stable"), kind="stable")
+        tb.width[b, :c] = t.width
+        tb.coflow_valid[b, :c] = True
+        tb.flow_lo[b, :c] = t.flow_lo
+        tb.flow_hi[b, :c] = t.flow_hi
+        tb.bw_send[b, :t.num_ports] = t.bw_send
+        tb.bw_recv[b, :t.num_ports] = t.bw_recv
+        for port, perm_out, lo_out, hi_out in (
+                (t.src, tb.perm_src, tb.lo_src, tb.hi_src),
+                (t.dst, tb.perm_dst, tb.lo_dst, tb.hi_dst)):
+            order = np.lexsort((port, t.cid)).astype(np.int32)
+            perm_out[b, :f] = order
+            keys = t.cid[order].astype(np.int64) * P + port[order]
+            grid = np.arange(C * P, dtype=np.int64)
+            lo_out[b] = np.searchsorted(keys, grid, "left").reshape(C, P)
+            hi_out[b] = np.searchsorted(keys, grid, "right").reshape(C, P)
+    return tb
+
+
+__all__ = ["TraceBatch", "pack"]

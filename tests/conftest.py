@@ -1,0 +1,29 @@
+"""Test-suite wiring.
+
+* Installs the vendored ``tests/_hypothesis_compat`` shim as
+  ``hypothesis`` when the real package is missing, so the
+  property-based modules collect and run everywhere (the CI image has
+  hypothesis; the hermetic jax_pallas image does not).
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+
+
+def _install_hypothesis_shim() -> None:
+    try:
+        import hypothesis  # noqa: F401  (real package wins when present)
+        return
+    except ImportError:
+        pass
+    path = os.path.join(os.path.dirname(__file__), "_hypothesis_compat.py")
+    spec = importlib.util.spec_from_file_location("hypothesis", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+
+
+_install_hypothesis_shim()

@@ -1,0 +1,179 @@
+"""Equivalence + batching properties of the XLA fleet engine.
+
+The batched `fabric.jax_engine` must reproduce the event-driven
+`fabric.engine.Simulator`:
+
+* exactly (1% tolerance, actual agreement ~1e-3 from f32) against the
+  numpy `Saath` reference when both run at the coordinator granularity
+  the jitted tick implements — work conservation off, §4.3 dynamics
+  re-queue off (the documented granularity differences, DESIGN.md §2);
+* exactly against `Simulator` driving the SAME jitted coordinator one
+  tick at a time (`saath-jax` policy), work conservation on;
+* within the established 2x envelope against the full per-flow-WC
+  numpy Saath (mirrors test_jax_coordinator.test_full_sim_close_to_numpy).
+
+Plus: per-trace results are independent of batch packing, and
+`simulate_sweep` equals per-setting runs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.coflow import Coflow, Flow, Trace
+from repro.core.params import SchedulerParams
+from repro.core.policies import make_policy
+from repro.fabric import jax_engine
+from repro.fabric.engine import Simulator
+from repro.fabric.state import FlowTable
+from repro.traces.batch import pack
+
+PORTS = 6
+PARAMS = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                         growth=4.0, num_queues=5, dynamics_requeue=False)
+
+
+def _trace(kind: str, seed: int = 0, n: int = 6) -> Trace:
+    """Synthetic equivalence families: uniform all-to-all shuffles,
+    skewed-width mixes, staggered arrivals."""
+    rng = np.random.default_rng(seed)
+    coflows, fid = [], 0
+    for c in range(n):
+        if kind == "uniform":
+            m = int(rng.integers(1, 3))
+            r = int(rng.integers(1, 3))
+            senders = rng.choice(PORTS, m, replace=False)
+            receivers = rng.choice(PORTS, r, replace=False)
+            size = float(rng.uniform(2.0, 20.0))
+            flows = [Flow(fid + i, int(s), int(d), size)
+                     for i, (s, d) in enumerate(
+                         (s, d) for s in senders for d in receivers)]
+            arrival = float(rng.uniform(0.0, 2.0))
+        elif kind == "skewed":
+            w = int(rng.integers(1, 6))
+            flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                          int(rng.integers(0, PORTS)),
+                          float(np.exp(rng.normal(1.5, 1.0))))
+                     for i in range(w)]
+            arrival = float(rng.uniform(0.0, 2.0))
+        elif kind == "staggered":
+            w = int(rng.integers(1, 4))
+            flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                          int(rng.integers(0, PORTS)),
+                          float(rng.uniform(1.0, 15.0)))
+                     for i in range(w)]
+            arrival = 3.0 * c  # strictly staggered, mostly disjoint
+        else:  # pragma: no cover
+            raise ValueError(kind)
+        fid += len(flows)
+        coflows.append(Coflow(c, arrival, flows))
+    return Trace(num_ports=PORTS, coflows=coflows)
+
+
+FAMILIES = ("uniform", "skewed", "staggered")
+
+
+def _reference_cct(trace, policy_kwargs=None, params=PARAMS):
+    table = FlowTable.from_trace(trace, params.port_bw)
+    pol = make_policy("saath", params, **(policy_kwargs or {}))
+    Simulator(params).run(table, pol)
+    return table.cct
+
+
+@pytest.mark.parametrize("kind", FAMILIES)
+def test_engine_matches_numpy_reference_within_1pct(kind):
+    """Batched engine vs Simulator + numpy Saath at the coordinator
+    granularity: average AND per-coflow CCT within 1%."""
+    traces = [_trace(kind, seed=s) for s in range(3)]
+    res = jax_engine.simulate_batch(traces, PARAMS, work_conservation=False)
+    for b, tr in enumerate(traces):
+        want = _reference_cct(tr, {"work_conservation": False})
+        got = res.cct[b, :len(tr.coflows)]
+        assert res.finished[b].all()
+        np.testing.assert_allclose(got, want, rtol=1e-2)
+        assert abs(np.nanmean(got) / np.nanmean(want) - 1.0) < 1e-2
+
+
+@pytest.mark.parametrize("kind", FAMILIES)
+def test_engine_matches_tickwise_coordinator(kind):
+    """Same jitted coordinator, batched scan vs one-tick-at-a-time
+    through the event simulator (work conservation ON both sides)."""
+    tr = _trace(kind, seed=11)
+    table = FlowTable.from_trace(tr, PARAMS.port_bw)
+    Simulator(PARAMS).run(table, make_policy("saath-jax", PARAMS))
+    res = jax_engine.simulate_batch([tr], PARAMS)
+    got = res.cct[0, :len(tr.coflows)]
+    np.testing.assert_allclose(got, table.cct, rtol=1e-2)
+
+
+def test_engine_full_saath_envelope():
+    """vs the full numpy Saath (per-flow WC + dynamics): the documented
+    granularity difference stays within the 2x avg-CCT envelope."""
+    full = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                           growth=4.0, num_queues=5)
+    for kind in FAMILIES:
+        tr = _trace(kind, seed=5)
+        want = _reference_cct(tr, params=full)
+        res = jax_engine.simulate_batch([tr], full)
+        a = float(np.nanmean(want))
+        b = float(np.nanmean(res.cct[0, :len(tr.coflows)]))
+        assert b <= 2.0 * a + 4 * full.delta, (kind, a, b)
+        assert res.finished[0].all()
+
+
+def test_two_queue_config_matches_reference():
+    """K=2 regression: thresholds[1] is +inf, so the last-queue span must
+    come from the explicit growth factor (a +inf span would disable the
+    D5 starvation deadlines only on the jax side)."""
+    p2 = dataclasses.replace(PARAMS, num_queues=2)
+    tr = _trace("skewed", seed=4)
+    want = _reference_cct(tr, {"work_conservation": False}, params=p2)
+    res = jax_engine.simulate_batch([tr], p2, work_conservation=False)
+    # K=2 keeps most coflows in the deadline-driven last queue, so
+    # expiry-tick reorderings shift CCTs by a few δ; 2% cleanly
+    # separates that from the broken +inf-span behaviour (starvation)
+    np.testing.assert_allclose(res.cct[0, :len(tr.coflows)], want,
+                               rtol=2e-2)
+
+
+def test_engine_moves_exactly_the_trace_bytes():
+    tr = _trace("skewed", seed=3)
+    res = jax_engine.simulate_batch([tr], PARAMS)
+    tb = pack([tr], port_bw=PARAMS.port_bw)
+    total = sum(f.size for c in tr.coflows for f in c.flows)
+    got = float((res.sent[0] * tb.flow_valid[0]).sum())
+    assert abs(got - total) < 1e-5 * total
+
+
+def test_packing_independence_under_vmap():
+    """A trace's results don't depend on what it is batched with or how
+    much padding the batch forces."""
+    small = _trace("uniform", seed=1, n=4)
+    big = _trace("skewed", seed=2, n=14)   # forces more C/F padding
+    alone = jax_engine.simulate_batch([small], PARAMS)
+    packed = jax_engine.simulate_batch([big, small, small], PARAMS)
+    C = len(small.coflows)
+    np.testing.assert_allclose(packed.cct[1, :C], alone.cct[0, :C],
+                               rtol=1e-6)
+    np.testing.assert_allclose(packed.cct[2, :C], alone.cct[0, :C],
+                               rtol=1e-6)
+
+
+def test_sweep_matches_individual_runs():
+    tr = _trace("uniform", seed=7)
+    settings = [dataclasses.replace(PARAMS, start_threshold=s)
+                for s in (2.0, 4.0, 16.0)]
+    sw = jax_engine.simulate_sweep(tr, settings)
+    C = len(tr.coflows)
+    for i, p in enumerate(settings):
+        solo = jax_engine.simulate_batch([tr], p)
+        np.testing.assert_allclose(sw.cct[i, :C], solo.cct[0, :C],
+                                   rtol=1e-5)
+
+
+def test_run_to_table_roundtrip():
+    tr = _trace("staggered", seed=9)
+    table, res = jax_engine.run_to_table(tr, PARAMS)
+    assert table.finished.all() and table.done.all()
+    assert np.isfinite(table.cct).all()
+    np.testing.assert_allclose(table.sent, table.size, rtol=1e-5)
