@@ -14,6 +14,8 @@ test-all:        ## everything
 
 bench-smoke:     ## the quick batched-engine benchmark paths
 	$(PY) -m benchmarks.fig9_speedup --engine=jax
+	$(PY) -m benchmarks.fig10_breakdown --engine=jax
+	$(PY) -m benchmarks.fig13_fct_deviation --engine=jax
 	$(PY) -m benchmarks.fig14_sensitivity --engine=jax
 	$(PY) -m benchmarks.table2_coordinator_latency --engine=jax
 

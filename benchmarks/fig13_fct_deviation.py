@@ -1,17 +1,35 @@
-"""Fig. 13: FCT deviation (out-of-sync) collapses under Saath vs Aalo."""
+"""Fig. 13: FCT deviation (out-of-sync) collapses under Saath vs Aalo.
+
+--engine=jax replays the Saath side through the batched XLA fleet
+engine (`jax_engine.run_to_table`) — the per-flow FCTs the deviation
+metric consumes are recorded algebraically by the traced tick, so the
+jitted path reproduces the out-of-sync collapse, not just mean CCTs.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Bench, emit, pctl
+from benchmarks.common import Bench, cli_bench, emit, pctl
 from repro.fabric.metrics import fct_normalized_std
 
 
-def run(bench: Bench):
+def _saath_table(bench: Bench, engine: str):
+    if engine == "jax":
+        from repro.core.params import SchedulerParams
+        from repro.fabric import jax_engine
+
+        table, _ = jax_engine.run_to_table(bench.trace(), SchedulerParams())
+        return table
+    return bench.sim("saath").table
+
+
+def run(bench: Bench, engine: str = "numpy"):
     rows = []
     devs = {}
     for pol in ("aalo", "saath"):
-        dev = fct_normalized_std(bench.sim(pol).table)
+        table = _saath_table(bench, engine) if pol == "saath" \
+            else bench.sim(pol).table
+        dev = fct_normalized_std(table)
         devs[pol] = dev
         for kind in ("equal", "unequal"):
             d = dev[kind]
@@ -23,7 +41,7 @@ def run(bench: Bench):
                 "frac_under_10pct": float((d < 0.10).mean()),
                 "p50": pctl(d, 50),
             })
-    emit("fig13_fct_deviation", rows)
+    emit(f"fig13_fct_deviation[{engine}]", rows)
     a = devs["aalo"]["equal"]
     s = devs["saath"]["equal"]
     if a.size and s.size:
@@ -33,4 +51,4 @@ def run(bench: Bench):
 
 
 if __name__ == "__main__":
-    run(Bench())
+    run(*cli_bench())

@@ -59,11 +59,14 @@ def run(bench: Bench, engine: str = "numpy"):
 
 
 def run_jax_sweep(bench: Bench):
-    """The whole (S, E, delta, d) grid on one trace as ONE vmapped XLA
-    computation (fabric.jax_engine.simulate_sweep) — the paper's Fig. 14
-    methodology at sweep-in-one-shot cost. Reports Saath CCT stats per
-    setting; the S-insensitivity claim (LCoF fixes FIFO's HoL blocking)
-    is checked directly on the batched results."""
+    """The whole (S, E, delta, d, mechanism-switch) grid on one trace as
+    ONE vmapped XLA computation (fabric.jax_engine.simulate_sweep) — the
+    paper's Fig. 14 methodology at sweep-in-one-shot cost. The work-
+    conservation and §4.3 re-queue switches are traced DynCoordParams
+    leaves, so the mechanism ablations ride the same executable as the
+    threshold knobs. Reports Saath CCT stats per setting; the
+    S-insensitivity claim (LCoF fixes FIFO's HoL blocking) is checked
+    directly on the batched results."""
     from repro.fabric import jax_engine
     from repro.traces import tiny_trace
 
@@ -81,6 +84,12 @@ def run_jax_sweep(bench: Bench):
                      dataclasses.replace(base, delta=delta)))
     for d in (1.0, 2.0, 8.0):
         grid.append(("d", d, dataclasses.replace(base, deadline_factor=d)))
+    # mechanism switches (wc = work conservation, rq = §4.3 re-queue),
+    # value encodes the pair as 2*wc + rq
+    for wc in (True, False):
+        for rq in (True, False):
+            grid.append(("mech", 2 * wc + rq, dataclasses.replace(
+                base, work_conservation=wc, dynamics_requeue=rq)))
 
     t0 = time.perf_counter()
     res = jax_engine.simulate_sweep(trace, [p for _, _, p in grid])
@@ -99,6 +108,10 @@ def run_jax_sweep(bench: Bench):
     # S-insensitivity: avg CCT varies < 2x across the S grid
     s_rows = [r["avg_cct"] for r in rows if r["knob"] == "S"]
     assert max(s_rows) <= 2.0 * min(s_rows), s_rows
+    # mechanisms should not hurt: full SAATH (wc+rq) avg CCT stays
+    # within 10% of (and typically beats) the no-mechanism ablation
+    mech = {r["value"]: r["avg_cct"] for r in rows if r["knob"] == "mech"}
+    assert mech[3] <= 1.1 * mech[0], mech
     return rows
 
 

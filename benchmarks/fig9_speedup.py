@@ -40,7 +40,12 @@ def run(bench: Bench, engine: str = "numpy"):
 def run_fleet(bench: Bench):
     """16-trace fleet: sequential event-driven numpy replays vs one
     batched `jax_engine.simulate_batch` call (cold = incl. XLA compile,
-    warm = the steady-state sweep cost a parameter study pays)."""
+    warm = the steady-state sweep cost a parameter study pays).
+
+    Two batched rows: full FIDELITY (per-flow work conservation + §4.3
+    re-queue — must match the numpy references' CCTs, the PR-2 claim)
+    and the coflow-granular THROUGHPUT mode (the parameter-sweep
+    configuration the >= 5x wall-clock gate applies to)."""
     from repro.core.params import SchedulerParams
     from repro.core.policies import make_policy
     from repro.fabric import jax_engine
@@ -66,17 +71,28 @@ def run_fleet(bench: Bench):
     t_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
     res = jax_engine.simulate_batch(traces, p)
-    t_warm = time.perf_counter() - t0
-
+    t_fid = time.perf_counter() - t0
     ratio = float(np.mean(res.avg_cct) / np.mean(seq_cct))
+
+    fast_kw = dict(fidelity="coflow", dynamics_requeue=False)
+    res_fast = jax_engine.simulate_batch(traces, p, **fast_kw)
+    t0 = time.perf_counter()
+    res_fast = jax_engine.simulate_batch(traces, p, **fast_kw)
+    t_warm = time.perf_counter() - t0
+    ratio_fast = float(np.mean(res_fast.avg_cct) / np.mean(seq_cct))
+
     rows = [
         {"vs": "fleet-seq-numpy", "wall_s": t_seq, "speedup": 1.0,
          "note": f"{fleet}x Simulator.run {n}x{ports}"},
         {"vs": "fleet-jax-cold", "wall_s": t_cold,
          "speedup": t_seq / t_cold, "note": "incl. XLA compile"},
+        {"vs": "fleet-jax-fidelity", "wall_s": t_fid,
+         "speedup": t_seq / t_fid,
+         "note": f"events={res.events} avg-cct-ratio={ratio:.3f}"},
         {"vs": "fleet-jax-warm", "wall_s": t_warm,
          "speedup": t_seq / t_warm,
-         "note": f"events={res.events} avg-cct-ratio={ratio:.3f}"},
+         "note": f"events={res_fast.events} "
+                 f"avg-cct-ratio={ratio_fast:.3f}"},
     ]
     emit("fig9_fleet", rows)
     warm = t_seq / t_warm
@@ -84,8 +100,10 @@ def run_fleet(bench: Bench):
     # on loaded/shared CI runners where wall-clock ratios wander
     floor = float(os.environ.get("SAATH_FLEET_MIN_SPEEDUP", "5.0"))
     assert warm >= floor, f"batched fleet should be >={floor}x: {warm:.1f}x"
-    # coflow-granular WC (documented) keeps avg CCT in a tight envelope
-    assert 0.5 < ratio < 2.0, ratio
+    # full fidelity must MATCH the per-flow reference, not approximate it
+    assert 0.97 < ratio < 1.03, ratio
+    # the coflow-granular throughput mode keeps the documented envelope
+    assert 0.5 < ratio_fast < 2.0, ratio_fast
     return rows
 
 

@@ -12,11 +12,15 @@ contention as the ``kernels.contention`` Pallas kernel on TPU). It is used
   paper's coordinator-cost table at 512-port x 4k-coflow scale.
 
 Granularity: one row per COFLOW with per-port live-flow counts
-(cnt_s/cnt_r), i.e. the all-or-none admission and the coflow-level work
-conservation are exact; per-flow work conservation (rescuing a strict
-subset of a missed coflow's flows) is the numpy reference's finer
-behaviour — for collective coflows a partial issue is meaningless, so
-the coflow granularity is the faithful TPU mapping (DESIGN.md §2).
+(cnt_s/cnt_r) drives queue assignment, LCoF ordering, deadlines and the
+all-or-none admission. Work conservation runs at FLOW granularity when
+the caller supplies a ``FlowView`` (the reference's ``greedy_flow_alloc``
+semantics: a strict subset of a missed coflow's flows can be rescued);
+without one it falls back to the coflow-granular equal-rate fill, which
+is the faithful mapping for collective coflows where a partial issue is
+meaningless (DESIGN.md §2). The §4.3 cluster-dynamics re-queue is driven
+by the caller-computed finished-flow median estimate (``batch.mixed`` /
+``batch.m_dyn``) and gated by ``DynCoordParams.requeue``.
 """
 from __future__ import annotations
 
@@ -39,11 +43,20 @@ class CoordParams(NamedTuple):
     min_rate_frac: float = 1e-3
     bw_ref: float = 1.0        # reference port bandwidth for t_min
     growth: float = 0.0        # E; 0 = infer from thresholds (legacy)
+    # mechanism switches (traced 0/1 scalars in DynCoordParams, so a
+    # parameter sweep can vmap over them instead of recompiling)
+    work_conservation: bool = True   # D4 leftover-bandwidth fill
+    dynamics_requeue: bool = True    # §4.3 median-based re-queue
+    lcof: bool = True                # LCoF contention ordering (Fig. 10)
+    per_flow_threshold: bool = True  # Eq. 1 vs Aalo total-bytes queues
 
     @staticmethod
     def from_params(p) -> "CoordParams":
-        return CoordParams(tuple(p.thresholds()), p.deadline_factor,
-                           p.min_rate_frac, p.port_bw, p.growth)
+        return CoordParams(
+            tuple(p.thresholds()), p.deadline_factor,
+            p.min_rate_frac, p.port_bw, p.growth,
+            work_conservation=getattr(p, "work_conservation", True),
+            dynamics_requeue=getattr(p, "dynamics_requeue", True))
 
 
 def _queue_spans(thresholds, growth: float = 0.0) -> list:
@@ -75,6 +88,10 @@ class DynCoordParams(NamedTuple):
     deadline_factor: jax.Array  # () f32
     min_rate_frac: jax.Array    # () f32
     bw_ref: jax.Array           # () f32
+    wc: jax.Array               # () f32 1 = work conservation on
+    requeue: jax.Array          # () f32 1 = §4.3 dynamics re-queue on
+    lcof: jax.Array             # () f32 1 = LCoF ordering (0 = FIFO-in-q)
+    per_flow: jax.Array         # () f32 1 = Eq. 1 per-flow thresholds
 
     @staticmethod
     def from_params(p) -> "DynCoordParams":
@@ -88,7 +105,11 @@ class DynCoordParams(NamedTuple):
                         jnp.float32),
             jnp.float32(cp.deadline_factor),
             jnp.float32(cp.min_rate_frac),
-            jnp.float32(cp.bw_ref))
+            jnp.float32(cp.bw_ref),
+            jnp.float32(1.0 if cp.work_conservation else 0.0),
+            jnp.float32(1.0 if cp.dynamics_requeue else 0.0),
+            jnp.float32(1.0 if cp.lcof else 0.0),
+            jnp.float32(1.0 if cp.per_flow_threshold else 0.0))
 
 
 class CoordState(NamedTuple):
@@ -114,6 +135,25 @@ class CoflowBatch(NamedTuple):
     cnt_r: jax.Array     # (C,P) f32 live-flow counts at receiver ports
     bw_s: jax.Array      # (P,) f32
     bw_r: jax.Array      # (P,) f32
+    # optional refinements (None = mechanism unavailable this tick):
+    total: jax.Array | None = None  # (C,) f32 total bytes sent (Aalo
+    #                      queues for the per_flow_threshold=0 ablation)
+    mixed: jax.Array | None = None  # (C,) bool — has BOTH finished and
+    #                      live flows (§4.3 re-queue candidates)
+    m_dyn: jax.Array | None = None  # (C,) f32 estimated remaining
+    #                      length m_hat from the finished-flow median
+
+
+class FlowView(NamedTuple):
+    """Per-flow companion to CoflowBatch for flow-granular work
+    conservation. Flows are stored contiguous per coflow (the host
+    layout shared with traces.batch), so a flow's priority inside the
+    missed list is just (coflow priority, flow index) — no per-tick
+    gather tables."""
+    cid: jax.Array      # (F,) int32 owning coflow
+    src: jax.Array      # (F,) int32 sender port
+    dst: jax.Array      # (F,) int32 receiver port
+    live: jax.Array     # (F,) bool
 
 
 def _queue_of(value: jax.Array, th: jax.Array) -> jax.Array:
@@ -127,24 +167,38 @@ def _queue_of(value: jax.Array, th: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("cp", "kernel"))
 def schedule_tick(state: CoordState, batch: CoflowBatch, now: jax.Array,
-                  *, cp: CoordParams,
-                  kernel: str | None = None):
-    """One Fig. 7 coordinator tick. Returns (new_state, out) where out has
-    per-coflow equal rates (MADD), admission mask, queue, contention."""
+                  *, cp: CoordParams, kernel: str | None = None,
+                  flows: FlowView | None = None):
+    """One Fig. 7 coordinator tick. Returns (new_state, out) with
+    per-coflow equal rates (MADD), admission mask, queue, contention, and
+    (when a FlowView is supplied) per-flow work-conservation rates."""
     return tick_core(state, batch, now, DynCoordParams.from_cp(cp),
-                     kernel=kernel)
+                     kernel=kernel, flows=flows)
 
 
 def tick_core(state: CoordState, batch: CoflowBatch, now: jax.Array,
-              dp: DynCoordParams, *, kernel: str | None = None):
+              dp: DynCoordParams, *, kernel: str | None = None,
+              flows: FlowView | None = None):
     """The Fig. 7 tick with fully traced parameters (un-jitted; callers
     embed it in their own jit/scan/vmap — fabric.jax_engine scans it)."""
     th = dp.thresholds
     C, P = batch.cnt_s.shape
     act = batch.active
 
-    # D3: per-flow thresholds (Eq. 1) — compare m_c * N_c against Q_q^hi
-    q = _queue_of(batch.m * batch.width.astype(jnp.float32), th)
+    # D3: per-flow thresholds (Eq. 1) — compare m_c * N_c against Q_q^hi;
+    # the Fig. 10 A/N ablation (per_flow=0) uses Aalo total-bytes queues
+    qval = batch.m * batch.width.astype(jnp.float32)
+    if batch.total is not None:
+        qval = jnp.where(dp.per_flow > 0, qval, batch.total)
+    q = _queue_of(qval, th)
+    # §4.3 cluster dynamics: a coflow with both finished and live flows
+    # re-queues by its estimated remaining length (the caller-computed
+    # finished-flow-median m_hat, Eq. 1 form) — approximate SRTF that can
+    # move a coflow back UP the queues, matching Saath._assign_queues.
+    if batch.mixed is not None:
+        q_dyn = _queue_of(batch.m_dyn * batch.width.astype(jnp.float32),
+                          th)
+        q = jnp.where((dp.requeue > 0) & batch.mixed & act, q_dyn, q)
     q = jnp.where(act, q, jnp.maximum(state.queue, 0))
 
     # D5: FIFO-derived deadlines, refreshed on queue entry (spans are
@@ -175,9 +229,12 @@ def tick_core(state: CoordState, batch: CoflowBatch, now: jax.Array,
     not_running = (~state.running).astype(jnp.int32)
     primary = jnp.where(~hp, 2, jnp.where(expired, 0, 1))
     dl_key = jnp.where(expired & hp, deadline, 0.0)
+    # lcof=0 (Fig. 10 A/N): FIFO within queue — contention and stability
+    # keys drop out, leaving (queue, arrival) exactly as the reference
+    lc = dp.lcof > 0
     key_q = jnp.where(expired, 0, q)
-    key_k = jnp.where(expired, 0, k)
-    key_st = jnp.where(expired, 0, not_running)
+    key_k = jnp.where(expired | ~lc, 0, k)
+    key_st = jnp.where(expired | ~lc, 0, not_running)
     key_arr = jnp.where(expired, 0, arr_rank)
     perm = jnp.lexsort((jnp.arange(C), key_arr, key_st, key_k, key_q,
                         dl_key, primary))
@@ -212,21 +269,65 @@ def tick_core(state: CoordState, batch: CoflowBatch, now: jax.Array,
         lambda s: s[0] < n_live, admit_body,
         (jnp.int32(0), avail0, zC, jnp.zeros((C,), bool)))
 
-    # D4: coflow-granular work conservation over the missed list
-    def wc_body(s):
-        k, avail_, wc = s
-        c = clist[k]
-        r = (avail_ * inv[c] + bigm[c]).min()
-        ok = ~admitted[c] & (r > 0) & (r < BIG)
-        r = jnp.where(ok, r, 0.0)
-        return (k + 1, avail_ - r * cnt[c], wc.at[c].set(r))
+    # D4 work conservation over the missed list (lines 18-23), gated by
+    # dp.wc via the trip count (zero iterations when the switch is off).
+    wc_on = dp.wc > 0
+    if flows is None:
+        # coflow-granular fallback: one equal rate across all live flows
+        # of each missed coflow (the faithful collective-coflow mapping)
+        def wc_body(s):
+            j, avail_, wc = s
+            c = clist[j]
+            r = (avail_ * inv[c] + bigm[c]).min()
+            ok = ~admitted[c] & (r > 0) & (r < BIG)
+            r = jnp.where(ok, r, 0.0)
+            return (j + 1, avail_ - r * cnt[c], wc.at[c].set(r))
 
-    _, _, wc_rate = jax.lax.while_loop(
-        lambda s: s[0] < n_live, wc_body, (jnp.int32(0), avail, zC))
+        _, _, wc_rate = jax.lax.while_loop(
+            lambda s: s[0] < jnp.where(wc_on, n_live, 0), wc_body,
+            (jnp.int32(0), avail, zC))
+        wc_flow = None
+    else:
+        # per-flow greedy fill, the reference's greedy_flow_alloc: live
+        # flows of missed coflows, ordered by (coflow priority, flow
+        # index) — exactly the reference's wc_order — each take
+        # min(avail_src, avail_dst), so a strict SUBSET of a missed
+        # coflow's flows can be rescued. One lexsort compacts the
+        # candidates to the front; the while_loop then walks them
+        # sequentially (trip count = candidate flows; zero when the wc
+        # switch is off). Host-A/B-tested against round-based fills
+        # with segmented scans, one-hot reductions and scatter-mins:
+        # the compacted sequential walk wins on XLA CPU — the body is
+        # two gathers + two scalar updates.
+        wc_rate = zC
+        avail_s, avail_r = avail[:P], avail[P:]
+        missed_c = hp & ~admitted
+        invp = jnp.argsort(perm)          # priority rank of each coflow
+        F = flows.src.shape[0]
+        cand0 = flows.live & missed_c[flows.cid] & wc_on
+        # three separate sort keys (candidates first, coflow priority,
+        # flow index) — a fused invp[cid]*F + i key would overflow int32
+        # near the advertised 4k-coflow x 256k-flow scale
+        flist = jnp.lexsort((jnp.arange(F), invp[flows.cid],
+                             (~cand0).astype(jnp.int32)))
+        n_cand = cand0.sum().astype(jnp.int32)
+
+        def wc_flow_body(s):
+            i, a_s, a_r, wcf = s
+            f = flist[i]
+            sp, dq = flows.src[f], flows.dst[f]
+            r = jnp.maximum(jnp.minimum(a_s[sp], a_r[dq]), 0.0)
+            return (i + 1, a_s.at[sp].add(-r), a_r.at[dq].add(-r),
+                    wcf.at[f].set(r))
+
+        _, _, _, wc_flow = jax.lax.while_loop(
+            lambda s: s[0] < n_cand, wc_flow_body,
+            (jnp.int32(0), avail_s, avail_r,
+             jnp.zeros((F,), jnp.float32)))
 
     new_state = CoordState(queue=jnp.where(act, q, state.queue),
                            deadline=deadline, running=admitted)
-    out = {"rate": rate, "wc_rate": wc_rate, "admitted": admitted,
-           "queue": q, "contention": k, "expired": expired,
-           "order": perm}
+    out = {"rate": rate, "wc_rate": wc_rate, "wc_flow": wc_flow,
+           "admitted": admitted, "queue": q, "contention": k,
+           "expired": expired, "order": perm}
     return new_state, out

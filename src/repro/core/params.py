@@ -18,6 +18,8 @@ class SchedulerParams:
     deadline_factor: float = 2.0  # d, starvation deadline multiplier
     port_bw: float = GBPS         # B_p, bytes/sec per port (uniform default)
     min_rate_frac: float = 1e-3   # all-or-none admission floor (fraction of B)
+    # D4 work conservation (per-flow greedy fill of leftover bandwidth)
+    work_conservation: bool = True
     # §4.3 cluster-dynamics handling (SRTF re-queue from finished-flow median)
     dynamics_requeue: bool = True
     # Beyond-paper option: a second work-conservation round that raises the

@@ -21,13 +21,17 @@ class Saath(Policy):
 
     def __init__(self, params: SchedulerParams, *, all_or_none: bool = True,
                  per_flow_threshold: bool = True, lcof: bool = True,
-                 work_conservation: bool = True):
+                 work_conservation: bool | None = None):
         super().__init__(params)
-        # ablation switches (Fig. 10: A/N, A/N+PF, full SAATH)
+        # ablation switches (Fig. 10: A/N, A/N+PF, full SAATH);
+        # work_conservation defaults to the SchedulerParams field so the
+        # numpy reference and the jitted planes read one knob
         self.all_or_none = all_or_none
         self.per_flow_threshold = per_flow_threshold
         self.lcof = lcof
-        self.work_conservation = work_conservation
+        self.work_conservation = (params.work_conservation
+                                  if work_conservation is None
+                                  else work_conservation)
 
     def reset(self, table: FlowTable) -> None:
         C = table.num_coflows

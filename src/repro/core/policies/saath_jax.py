@@ -1,8 +1,11 @@
 """Simulator wrapper around the jitted JAX coordinator (core.jax_coordinator).
 
-Agreement with the numpy Saath is exact for the all-or-none admission
-(property-tested); work conservation is coflow-granular here (see the
-jax_coordinator docstring).
+Full-fidelity agreement with the numpy Saath: the all-or-none admission
+is exact (property-tested), work conservation runs per-flow through the
+coordinator's FlowView path (same greedy order as
+``policies.base.greedy_flow_alloc``), and the §4.3 dynamics re-queue is
+fed the same finished-flow-median remaining-length estimate the numpy
+reference computes.
 """
 from __future__ import annotations
 
@@ -18,32 +21,58 @@ class SaathJax(Policy):
     name = "saath-jax"
 
     def __init__(self, params: SchedulerParams, *, kernel: str | None = None,
-                 work_conservation: bool = True):
+                 work_conservation: bool | None = None):
         super().__init__(params)
-        self.cp = jc.CoordParams.from_params(params)
+        cp = jc.CoordParams.from_params(params)
+        if work_conservation is not None:
+            cp = cp._replace(work_conservation=work_conservation)
+        self.cp = cp
         self.kernel = kernel
-        self.work_conservation = work_conservation
 
     def reset(self, table: FlowTable) -> None:
-        # pad the coflow axis to limit jit recompiles across traces
+        # pad the coflow/flow axes to limit jit recompiles across traces
         self._C = -(-table.num_coflows // 64) * 64
+        self._F = -(-table.size.shape[0] // 256) * 256
         self._state = jc.init_state(self._C)
 
-    def _batch(self, table: FlowTable) -> jc.CoflowBatch:
+    def _dynamics(self, table: FlowTable, live: np.ndarray):
+        """§4.3 inputs, mirroring Saath._assign_queues: which coflows are
+        mixed done/live, and their median-estimated remaining length."""
+        C = table.num_coflows
+        mixed = np.zeros(C, bool)
+        m_dyn = np.zeros(C)
+        if not self.cp.dynamics_requeue:
+            return mixed, m_dyn
+        done_f = table.done & table.active[table.cid]
+        has_done = np.bincount(table.cid[done_f], minlength=C) > 0
+        has_live = np.bincount(table.cid[live], minlength=C) > 0
+        mixed = has_done & has_live & table.active
+        for c in np.nonzero(mixed)[0]:
+            lo, hi = table.flow_lo[c], table.flow_hi[c]
+            fdone = table.done[lo:hi]
+            f_e = float(np.median(table.size[lo:hi][fdone]))
+            rem = np.maximum(f_e - table.sent[lo:hi][~fdone], 0.0)
+            m_dyn[c] = float(rem.max()) if rem.size else 0.0
+        return mixed, m_dyn
+
+    def _views(self, table: FlowTable):
         import jax.numpy as jnp
 
         live = table.flow_live()
         cnt_s, cnt_r = table.flow_counts(live)
         C, Cp = table.num_coflows, self._C
+        F, Fp = table.size.shape[0], self._F
 
-        def pad(x, fill=0):
-            out = np.full((Cp,) + x.shape[1:], fill, x.dtype)
-            out[:C] = x
+        def pad(x, fill=0, n=None):
+            n = Cp if n is None else n
+            out = np.full((n,) + x.shape[1:], fill, x.dtype)
+            out[:x.shape[0]] = x
             return jnp.asarray(out)
 
         rank = np.argsort(np.argsort(table.arrival, kind="stable"),
                           kind="stable").astype(np.int32)
-        return jc.CoflowBatch(
+        mixed, m_dyn = self._dynamics(table, live)
+        batch = jc.CoflowBatch(
             active=pad(table.active),
             arrival=pad(rank, 2 ** 30),
             m=pad(table.coflow_max_flow_sent().astype(np.float32)),
@@ -52,20 +81,28 @@ class SaathJax(Policy):
             cnt_r=pad(cnt_r.astype(np.float32)),
             bw_s=jnp.asarray(table.bw_send, jnp.float32),
             bw_r=jnp.asarray(table.bw_recv, jnp.float32),
+            total=pad(table.coflow_sent_total().astype(np.float32)),
+            mixed=pad(mixed),
+            m_dyn=pad(m_dyn.astype(np.float32)),
         )
+        flows = jc.FlowView(
+            cid=pad(table.cid, 0, Fp),
+            src=pad(table.src, 0, Fp), dst=pad(table.dst, 0, Fp),
+            live=pad(live, False, Fp))
+        return batch, flows
 
     def schedule(self, table: FlowTable, now: float) -> np.ndarray:
         import jax.numpy as jnp
 
+        batch, flows = self._views(table)
         self._state, out = jc.schedule_tick(
-            self._state, self._batch(table), jnp.float32(now),
-            cp=self.cp, kernel=self.kernel)
+            self._state, batch, jnp.float32(now),
+            cp=self.cp, kernel=self.kernel, flows=flows)
+        F = table.size.shape[0]
         r_c = np.asarray(out["rate"], np.float64)[:table.num_coflows]
-        if self.work_conservation:
-            r_c = r_c + np.asarray(
-                out["wc_rate"], np.float64)[:table.num_coflows]
         rates = r_c[table.cid]
         rates[~table.flow_live()] = 0.0
+        rates += np.asarray(out["wc_flow"], np.float64)[:F]
         self._last_out = out
         return rates
 

@@ -27,13 +27,17 @@ def queue_of(value: np.ndarray, params: SchedulerParams) -> np.ndarray:
     """Queue index for a 'progress' value against exponential thresholds.
 
     q = smallest q with value < Q_q^hi; values below Q_0^hi land in queue 0.
+
+    Implemented as a searchsorted over ``params.thresholds()`` — the SAME
+    rule (same array, same side) as ``jax_coordinator._queue_of`` — so the
+    two planes cannot disagree near an E^k boundary. The previous
+    ``floor(log(ratio)/log(E))`` form could land one queue off from the
+    threshold array at exact powers of E (log rounding), despite
+    CROSS_EPS.
     """
+    th = np.asarray(params.thresholds(), dtype=np.float64)
     value = np.asarray(value, dtype=np.float64) * (1.0 + CROSS_EPS)
-    with np.errstate(divide="ignore"):
-        ratio = value / params.start_threshold
-    q = np.where(
-        ratio < 1.0, 0,
-        np.floor(np.log(np.maximum(ratio, 1.0)) / np.log(params.growth)) + 1)
+    q = np.searchsorted(th, value, side="right")
     return np.clip(q, 0, params.num_queues - 1).astype(np.int32)
 
 

@@ -35,7 +35,9 @@ class SimResult:
     steps: int            # scheduler invocations
     wall_seconds: float   # host time spent simulating
     sched_seconds: float  # host time spent inside policy.schedule
-    makespan: float       # last CCT
+    makespan: float       # last ABSOLUTE flow completion time (not a
+    #                       CCT — CCTs are arrival-relative durations);
+    #                       0.0 when no flow finished
 
     @property
     def cct(self) -> np.ndarray:
@@ -159,8 +161,10 @@ class Simulator:
         else:
             raise RuntimeError("simulator exceeded max_steps")
 
-        makespan = float(np.nanmax(table.fct)) if np.isfinite(
-            np.nanmax(table.fct)) else 0.0
+        # last absolute FCT; guard the all-NaN case (nothing finished)
+        # instead of letting np.nanmax emit a RuntimeWarning
+        fin_fct = table.fct[np.isfinite(table.fct)]
+        makespan = float(fin_fct.max()) if fin_fct.size else 0.0
         return SimResult(table, steps, time.perf_counter() - t0, sched_s,
                          makespan)
 

@@ -18,10 +18,13 @@ is algebraic). A flow finishing mid-interval leaves its bandwidth
 idle until the next tick, matching the reference's δ-sensitivity
 (Fig. 14(c)).
 
-Known granularity differences vs the numpy `Saath` reference (both
-shared with `policies.saath_jax`): work conservation is
-coflow-granular, and the §4.3 dynamics re-queue is not modelled.
-Equivalence is property-tested in tests/test_jax_engine.py.
+Full fidelity vs the numpy `Saath` reference (shared with
+`policies.saath_jax`): work conservation runs at FLOW granularity (the
+reference's greedy_flow_alloc order) and the §4.3 dynamics re-queue is
+modelled exactly (per-coflow finished-flow median via the
+host-precomputed size-sorted segment layout, `TraceBatch.perm_size`).
+Equivalence is property-tested to 1% in tests/test_jax_engine.py on the
+full reference configuration.
 """
 from __future__ import annotations
 
@@ -46,18 +49,33 @@ REL_EPS = 1e-5
 class EngineParams(NamedTuple):
     """Traced scheduler knobs: a DynCoordParams plus the δ grid step.
 
-    Every leaf may carry a leading sweep axis (see `simulate_sweep`).
+    Every leaf may carry a leading sweep axis (see `simulate_sweep`) —
+    including the dp.wc / dp.requeue mechanism switches, so those
+    ablation grids vmap instead of recompiling. dp.lcof / dp.per_flow
+    are traced too but need the ablation event-horizon structure
+    compiled in (`_tick`'s with_ablations), which `simulate_batch`
+    derives per call; `simulate_sweep` always runs full-SAATH queues.
     """
     dp: jc.DynCoordParams
     delta: jax.Array      # () f32 seconds
-    wc_weight: jax.Array  # () f32 1.0 = apply coflow-granular WC, 0.0 = off
 
     @staticmethod
     def from_scheduler(p: SchedulerParams, *,
-                       work_conservation: bool = True) -> "EngineParams":
-        return EngineParams(jc.DynCoordParams.from_params(p),
-                            jnp.float32(p.delta),
-                            jnp.float32(1.0 if work_conservation else 0.0))
+                       work_conservation: "bool | None" = None,
+                       dynamics_requeue: "bool | None" = None,
+                       lcof: bool = True,
+                       per_flow_threshold: bool = True) -> "EngineParams":
+        cp = jc.CoordParams.from_params(p)
+        cp = cp._replace(
+            work_conservation=(cp.work_conservation
+                               if work_conservation is None
+                               else work_conservation),
+            dynamics_requeue=(cp.dynamics_requeue
+                              if dynamics_requeue is None
+                              else dynamics_requeue),
+            lcof=lcof, per_flow_threshold=per_flow_threshold)
+        return EngineParams(jc.DynCoordParams.from_cp(cp),
+                            jnp.float32(p.delta))
 
 
 class EngineState(NamedTuple):
@@ -109,6 +127,15 @@ def _init_state(tb: TraceBatch, ep: EngineParams) -> EngineState:
 # max ticks one event-jump may skip (idle gaps between arrivals are
 # jumped exactly; this only caps pathological/finished lanes)
 MAX_JUMP_TICKS = 1024.0
+# with the §4.3 dynamics re-queue active the cap MIRRORS
+# fabric.engine.Simulator's default max_jump of 200δ — semantic, not
+# just a guard: the estimated remaining length drifts continuously (no
+# discrete event), so both replay loops must re-invoke the coordinator
+# at the same bounded cadence or their queue moves (and hence
+# trajectories) fork. Between discrete events a re-evaluation on
+# unchanged state is a fixed point, so matching the reference's cadence
+# costs steps, never correctness.
+DYNAMICS_JUMP_TICKS = 200.0
 
 
 def _segment_sum(data: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
@@ -132,7 +159,9 @@ def _segment_max(data: jax.Array, tb: TraceBatch) -> jax.Array:
 
 
 def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
-          kernel: Optional[str]) -> EngineState:
+          kernel: Optional[str], *, per_flow_wc: bool = True,
+          with_dynamics: bool = True,
+          with_ablations: bool = False) -> EngineState:
     """Advance one *event step*: schedule at the current δ tick, find the
     next instant the schedule could change (arrival, flow completion,
     queue-threshold crossing, starvation deadline — the reference
@@ -140,6 +169,14 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     the constant rates across the jumped interval. Between those events
     the Fig. 7 schedule is a fixed point of unchanged state, so skipping
     the intermediate ticks reproduces the per-tick trajectory exactly.
+
+    The three keyword flags are STATIC structure switches (resolved
+    host-side, not traced): `per_flow_wc` selects the exact per-flow
+    work-conservation fill vs the cheaper coflow-granular one,
+    `with_dynamics` builds the §4.3 finished-flow-median machinery, and
+    `with_ablations` builds the total-bytes queue inputs/events for the
+    Fig. 10 per_flow_threshold=0 path. Turning one off removes its cost
+    from the compiled step entirely.
     """
     C = tb.arrival.shape[0]
     delta = ep.delta
@@ -158,11 +195,53 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     m = _segment_max(state.sent * tb.flow_valid, tb)
     cnt_s = _segment_sum(livef[tb.perm_src], tb.lo_src, tb.hi_src)
     cnt_r = _segment_sum(livef[tb.perm_dst], tb.lo_dst, tb.hi_dst)
+    total = _segment_sum(state.sent * tb.flow_valid, tb.flow_lo,
+                         tb.flow_hi) if with_ablations else None
+
+    mixed = m_dyn = None
+    if with_dynamics:
+        # §4.3 remaining-length estimate: the EXACT median of finished-
+        # flow sizes per coflow, as order statistics over the host-
+        # precomputed (cid, size)-sorted segment layout (tb.perm_size) —
+        # one cumsum of the done mask gives each done flow's rank inside
+        # its segment, the two middle ranks select the median, no
+        # per-tick sort or scatter.
+        done_real = (state.done & tb.flow_valid).astype(jnp.float32)
+        d_s = done_real[tb.perm_size]
+        size_s = tb.size[tb.perm_size]
+        cid_s = tb.cid[tb.perm_size]
+        S = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                             jnp.cumsum(d_s)])
+        n_done = (S[tb.flow_hi] - S[tb.flow_lo]).astype(jnp.int32)  # (C,)
+        drank = (S[:-1] - S[tb.flow_lo][cid_s]).astype(jnp.int32)   # (F,)
+        k1 = jnp.maximum(n_done - 1, 0) // 2
+        k2 = n_done // 2
+        hit1 = (d_s > 0.5) & (drank == k1[cid_s])
+        hit2 = (d_s > 0.5) & (drank == k2[cid_s])
+        v1 = _segment_sum(size_s * hit1, tb.flow_lo, tb.flow_hi)
+        v2 = _segment_sum(size_s * hit2, tb.flow_lo, tb.flow_hi)
+        f_e = 0.5 * (v1 + v2)        # median (0 when nothing finished)
+        rem_dyn = jnp.maximum(f_e[tb.cid] - state.sent, 0.0) * livef
+        m_dyn = _segment_max(rem_dyn, tb)
+        n_live_c = _segment_sum(livef, tb.flow_lo, tb.flow_hi)
+        mixed = active & (n_done > 0) & (n_live_c > 0.5)
+
     batch = jc.CoflowBatch(active=active, arrival=tb.arrival_rank, m=m,
                            width=tb.width, cnt_s=cnt_s, cnt_r=cnt_r,
-                           bw_s=tb.bw_send, bw_r=tb.bw_recv)
-    coord, out = jc.tick_core(state.coord, batch, now, ep.dp, kernel=kernel)
-    r_f = (out["rate"] + ep.wc_weight * out["wc_rate"])[tb.cid] * livef
+                           bw_s=tb.bw_send, bw_r=tb.bw_recv,
+                           total=total, mixed=mixed, m_dyn=m_dyn)
+    flows = jc.FlowView(cid=tb.cid, src=tb.src, dst=tb.dst, live=live) \
+        if per_flow_wc else None
+    coord, out = jc.tick_core(state.coord, batch, now, ep.dp,
+                              kernel=kernel, flows=flows)
+    # per-flow rates: MADD equal rate for admitted coflows + the work-
+    # conservation fill (flow-granular when per_flow_wc, else the
+    # coflow-granular equal rate; both already gated by dp.wc)
+    r_f = out["rate"][tb.cid] * livef
+    if per_flow_wc:
+        r_f = r_f + out["wc_flow"]
+    else:
+        r_f = r_f + out["wc_rate"][tb.cid] * livef
     served = live & (r_f > 0)
     rem = tb.size - state.sent
 
@@ -171,23 +250,33 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     inf = jnp.float32(jnp.inf)
     t_fin = jnp.min(jnp.where(served, now + rem / jnp.maximum(r_f, 1e-30),
                               inf))
-    # per-flow queue-threshold crossing: flow f of coflow c crosses when
-    # sent_f reaches Q_q^hi / N_c (q = the post-assignment queue)
+    # queue-threshold crossing, per the active threshold rule: flow f of
+    # coflow c crosses when sent_f reaches Q_q^hi / N_c (Eq. 1), or —
+    # for the per_flow=0 Aalo-queue ablation — when the coflow's TOTAL
+    # bytes reach Q_q^hi (q = the post-assignment queue)
     q = jnp.maximum(coord.queue, 0)
-    lim = (ep.dp.thresholds[q] /
-           jnp.maximum(tb.width, 1).astype(jnp.float32))[tb.cid]
+    thq = ep.dp.thresholds[q]
+    lim = (thq / jnp.maximum(tb.width, 1).astype(jnp.float32))[tb.cid]
     dt_th = jnp.where(served & jnp.isfinite(lim) & (lim > state.sent),
                       (lim - state.sent) / jnp.maximum(r_f, 1e-30), inf)
     t_th = now + jnp.min(dt_th)
+    if with_ablations:
+        R_c = _segment_sum(r_f, tb.flow_lo, tb.flow_hi)
+        dt_tot = jnp.where(active & (R_c > 0) & jnp.isfinite(thq)
+                           & (thq > total),
+                           (thq - total) / jnp.maximum(R_c, 1e-30), inf)
+        t_th = now + jnp.where(ep.dp.per_flow > 0, jnp.min(dt_th),
+                               jnp.min(dt_tot))
     t_dl = jnp.min(jnp.where(active & (coord.deadline > now + eps_t),
                              coord.deadline, inf))
     t_arr = jnp.min(jnp.where(tb.coflow_valid & (tb.arrival > now + eps_t),
                               tb.arrival, inf))
     t_ev = jnp.minimum(jnp.minimum(t_fin, t_th), jnp.minimum(t_dl, t_arr))
+    jump = DYNAMICS_JUMP_TICKS if with_dynamics else MAX_JUMP_TICKS
     n_ev = jnp.where(jnp.isfinite(t_ev),
                      jnp.ceil((t_ev - state.t0) / delta - 1e-4),
-                     tickf + MAX_JUMP_TICKS)
-    n_next = jnp.clip(n_ev, tickf + 1.0, tickf + MAX_JUMP_TICKS)
+                     tickf + jump)
+    n_next = jnp.clip(n_ev, tickf + 1.0, tickf + jump)
     dt = (n_next - tickf) * delta
 
     # ---- integrate the constant rates over [now, now + dt) -----------
@@ -214,17 +303,25 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
 
 # ---- batched chunk runner ------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("chunk", "kernel", "sweep"))
+@functools.partial(jax.jit, static_argnames=(
+    "chunk", "kernel", "sweep", "features"))
 def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
-               *, chunk: int, kernel: Optional[str],
-               sweep: bool) -> EngineState:
+               *, chunk: int, kernel: Optional[str], sweep: bool,
+               features: tuple) -> EngineState:
     """Scan `chunk` ticks for every trace in the batch (one executable,
     reused across chunks so the host completion loop never recompiles).
     sweep=True maps the EngineParams' leading axis alongside the traces.
+    `features` = (per_flow_wc, with_dynamics, with_ablations), the
+    static structure switches threaded to `_tick`.
     """
+    per_flow_wc, with_dynamics, with_ablations = features
+
     def scan_ticks(s, tb_row, ep_row):
         def body(c, _):
-            return _tick(c, tb_row, ep_row, kernel), None
+            return _tick(c, tb_row, ep_row, kernel,
+                         per_flow_wc=per_flow_wc,
+                         with_dynamics=with_dynamics,
+                         with_ablations=with_ablations), None
         s, _ = jax.lax.scan(body, s, None, length=chunk)
         return s
 
@@ -262,31 +359,57 @@ def simulate_batch(traces: "Sequence | TraceBatch",
                    params: Optional[SchedulerParams] = None, *,
                    max_ticks: Optional[int] = None, chunk: int = 128,
                    kernel: Optional[str] = None,
-                   work_conservation: bool = True) -> EngineResult:
+                   work_conservation: "bool | None" = None,
+                   dynamics_requeue: "bool | None" = None,
+                   lcof: bool = True,
+                   per_flow_threshold: bool = True,
+                   fidelity: str = "flow") -> EngineResult:
     """Replay a fleet of traces under one parameter setting.
 
+    The mechanism switches default to the SchedulerParams fields
+    (work_conservation / dynamics_requeue) or full SAATH (lcof /
+    per_flow_threshold); pass explicit values for Fig. 10 ablations.
+    `fidelity` picks the work-conservation granularity: "flow" (default)
+    is the paper-exact per-flow greedy fill; "coflow" hands leftover
+    bandwidth to a missed coflow as ONE equal rate — the faithful
+    mapping for collective coflows (a partial issue is meaningless) and
+    the throughput mode for large parameter sweeps (~3x cheaper steps).
     Runs jitted `chunk`-tick scans until every coflow of every trace
     has finished (or `max_ticks` is exhausted, which raises — mirroring
     the reference simulator's max_steps guard).
     """
+    if fidelity not in ("flow", "coflow"):
+        raise ValueError(f"unknown fidelity {fidelity!r}")
     params = params or SchedulerParams()
     tb = traces if isinstance(traces, TraceBatch) else \
         pack(traces, port_bw=params.port_bw)
-    ep = EngineParams.from_scheduler(params,
-                                     work_conservation=work_conservation)
+    ep = EngineParams.from_scheduler(
+        params, work_conservation=work_conservation,
+        dynamics_requeue=dynamics_requeue, lcof=lcof,
+        per_flow_threshold=per_flow_threshold)
+    features = (fidelity == "flow",
+                params.dynamics_requeue if dynamics_requeue is None
+                else dynamics_requeue,
+                not (lcof and per_flow_threshold))
     return _drive(tb, ep, params.delta, max_ticks, chunk, kernel,
-                  sweep=False)
+                  sweep=False, features=features)
 
 
 def simulate_sweep(trace, params_list: Sequence[SchedulerParams], *,
                    max_ticks: Optional[int] = None, chunk: int = 128,
-                   kernel: Optional[str] = None) -> EngineResult:
+                   kernel: Optional[str] = None,
+                   fidelity: str = "flow") -> EngineResult:
     """Replay ONE trace under M parameter settings as one computation.
 
     All settings must share num_queues (K is a static shape) and delta
-    is taken per-setting — the scan length covers the smallest δ.
-    Returns an EngineResult whose leading axis is the setting axis.
+    is taken per-setting — the scan length covers the smallest δ. The
+    work-conservation / §4.3-re-queue switches are traced leaves, so
+    settings may mix them freely (the dynamics machinery is compiled in
+    when ANY setting re-queues). Returns an EngineResult whose leading
+    axis is the setting axis.
     """
+    if fidelity not in ("flow", "coflow"):
+        raise ValueError(f"unknown fidelity {fidelity!r}")
     k = {len(p.thresholds()) for p in params_list}
     if len(k) != 1:
         raise ValueError("sweep settings must share num_queues")
@@ -300,12 +423,15 @@ def simulate_sweep(trace, params_list: Sequence[SchedulerParams], *,
     eps = [EngineParams.from_scheduler(p) for p in params_list]
     ep = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *eps)
     min_delta = min(p.delta for p in params_list)
-    return _drive(tb, ep, min_delta, max_ticks, chunk, kernel, sweep=True)
+    features = (fidelity == "flow",
+                any(p.dynamics_requeue for p in params_list), False)
+    return _drive(tb, ep, min_delta, max_ticks, chunk, kernel, sweep=True,
+                  features=features)
 
 
 def _drive(tb: TraceBatch, ep: EngineParams, delta: float,
            max_ticks: Optional[int], chunk: int, kernel: Optional[str],
-           *, sweep: bool) -> EngineResult:
+           *, sweep: bool, features: tuple) -> EngineResult:
     if max_ticks is None:
         max_ticks = default_max_ticks(tb, delta)
     state = _init_batch(tb, ep, sweep=sweep)
@@ -314,7 +440,7 @@ def _drive(tb: TraceBatch, ep: EngineParams, delta: float,
     # the number of event steps a terminating replay can need
     while events < max_ticks:
         state = _run_chunk(state, tb, ep, chunk=chunk, kernel=kernel,
-                           sweep=sweep)
+                           sweep=sweep, features=features)
         events += chunk
         if bool(jnp.all(state.finished)):
             break

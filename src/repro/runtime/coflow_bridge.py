@@ -66,9 +66,17 @@ def plan_waves(coflows: Sequence[CollectiveCoflow], *,
     res_index = {r: i for i, r in enumerate(RESOURCES)}
     P = len(RESOURCES) * num_chips
 
+    # Densely renumber arrival ranks, preserving (rank, submission) order.
+    # Duplicate ranks are legal — e.g. two tenants both built with
+    # grad_bucket_coflows(rank_offset=0) — and previously collided in the
+    # rank->position dicts, silently dropping collectives from the plan.
+    order = sorted(range(len(coflows)),
+                   key=lambda i: (coflows[i].arrival_rank, i))
+    dense_rank = {i: pos for pos, i in enumerate(order)}
+
     trace_coflows = []
     fid = 0
-    for c in coflows:
+    for i, c in enumerate(coflows):
         chips = c.chips or tuple(range(num_chips))
         flows = []
         for r in c.resources:
@@ -78,7 +86,7 @@ def plan_waves(coflows: Sequence[CollectiveCoflow], *,
                                   max(c.bytes, 1.0)))
                 fid += 1
         trace_coflows.append(
-            Coflow(cid=c.arrival_rank, arrival=float(c.arrival_rank) * 1e-9,
+            Coflow(cid=dense_rank[i], arrival=float(dense_rank[i]) * 1e-9,
                    flows=flows))
     trace = Trace(num_ports=P, coflows=trace_coflows)
     table = FlowTable.from_trace(trace, params.port_bw)
@@ -87,11 +95,9 @@ def plan_waves(coflows: Sequence[CollectiveCoflow], *,
     pol = make_policy("saath", params, work_conservation=False)
     pol.reset(table)
 
-    # FlowTable renumbers coflows positionally in cid-sorted order
-    ranks_sorted = sorted(c.arrival_rank for c in coflows)
-    pos_of_rank = {r: i for i, r in enumerate(ranks_sorted)}
-    by_pos: Dict[int, str] = {pos_of_rank[c.arrival_rank]: c.name
-                              for c in coflows}
+    # FlowTable orders coflows by cid == dense rank, so position == rank
+    by_pos: Dict[int, str] = {dense_rank[i]: c.name
+                              for i, c in enumerate(coflows)}
     waves: List[List[str]] = []
     now = 0.0
     remaining = set(by_pos)
@@ -113,6 +119,12 @@ def plan_waves(coflows: Sequence[CollectiveCoflow], *,
             table.active[c] = False
             remaining.discard(c)
         now += params.delta
+    if remaining:
+        # a truncated plan would silently drop collectives from the step
+        raise RuntimeError(
+            f"plan_waves failed to place {len(remaining)} collectives "
+            f"({sorted(by_pos[c] for c in remaining)}) after {guard} "
+            "waves — scheduler made no progress")
     return waves
 
 

@@ -61,6 +61,11 @@ class TraceBatch(NamedTuple):
     hi_src: np.ndarray      # (B, C, P) int32 group end
     lo_dst: np.ndarray      # (B, C, P) int32
     hi_dst: np.ndarray      # (B, C, P) int32
+    # flows sorted by (cid, valid-first, size): within every coflow the
+    # REAL flows occupy [flow_lo, flow_hi) in ascending size order, so
+    # the engine's §4.3 finished-flow median is an order-statistics
+    # lookup over contiguous segments (no per-tick sort, no scatters).
+    perm_size: np.ndarray   # (B, F) int32
 
     @property
     def num_traces(self) -> int:
@@ -131,6 +136,7 @@ def pack(traces: Sequence[Union[Trace, FlowTable]], *,
         hi_src=np.zeros((B, C, P), np.int32),
         lo_dst=np.zeros((B, C, P), np.int32),
         hi_dst=np.zeros((B, C, P), np.int32),
+        perm_size=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
     )
     for b, t in enumerate(tables):
         f, c = t.size.shape[0], t.num_coflows
@@ -164,6 +170,12 @@ def pack(traces: Sequence[Union[Trace, FlowTable]], *,
             grid = np.arange(C * P, dtype=np.int64)
             lo_out[b] = np.searchsorted(keys, grid, "left").reshape(C, P)
             hi_out[b] = np.searchsorted(keys, grid, "right").reshape(C, P)
+        # (cid, valid-first, size) order: pads share the last real cid
+        # when the trace fills C exactly, so the valid key pushes them
+        # BEHIND that coflow's real flows — [flow_lo, flow_hi) stays a
+        # correct segment of real flows in this permutation too.
+        tb.perm_size[b] = np.lexsort(
+            (tb.size[b], ~tb.flow_valid[b], tb.cid[b])).astype(np.int32)
     return tb
 
 

@@ -4,13 +4,11 @@ The batched `fabric.jax_engine` must reproduce the event-driven
 `fabric.engine.Simulator`:
 
 * exactly (1% tolerance, actual agreement ~1e-3 from f32) against the
-  numpy `Saath` reference when both run at the coordinator granularity
-  the jitted tick implements — work conservation off, §4.3 dynamics
-  re-queue off (the documented granularity differences, DESIGN.md §2);
+  numpy `Saath` reference on the FULL configuration — per-flow work
+  conservation AND the §4.3 dynamics re-queue on (DESIGN.md §2/§3);
+* likewise on the ablated configurations (work conservation off);
 * exactly against `Simulator` driving the SAME jitted coordinator one
-  tick at a time (`saath-jax` policy), work conservation on;
-* within the established 2x envelope against the full per-flow-WC
-  numpy Saath (mirrors test_jax_coordinator.test_full_sim_close_to_numpy).
+  tick at a time (`saath-jax` policy), full config.
 
 Plus: per-trace results are independent of batch packing, and
 `simulate_sweep` equals per-setting runs.
@@ -97,28 +95,54 @@ def test_engine_matches_numpy_reference_within_1pct(kind):
 @pytest.mark.parametrize("kind", FAMILIES)
 def test_engine_matches_tickwise_coordinator(kind):
     """Same jitted coordinator, batched scan vs one-tick-at-a-time
-    through the event simulator (work conservation ON both sides)."""
+    through the event simulator (full config both sides)."""
     tr = _trace(kind, seed=11)
-    table = FlowTable.from_trace(tr, PARAMS.port_bw)
-    Simulator(PARAMS).run(table, make_policy("saath-jax", PARAMS))
-    res = jax_engine.simulate_batch([tr], PARAMS)
+    full = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                           growth=4.0, num_queues=5)
+    table = FlowTable.from_trace(tr, full.port_bw)
+    Simulator(full).run(table, make_policy("saath-jax", full))
+    res = jax_engine.simulate_batch([tr], full)
     got = res.cct[0, :len(tr.coflows)]
     np.testing.assert_allclose(got, table.cct, rtol=1e-2)
 
 
-def test_engine_full_saath_envelope():
-    """vs the full numpy Saath (per-flow WC + dynamics): the documented
-    granularity difference stays within the 2x avg-CCT envelope."""
+@pytest.mark.parametrize("kind", FAMILIES)
+def test_engine_full_saath_matches_reference_1pct(kind):
+    """The acceptance gate: per-flow work conservation AND the §4.3
+    dynamics re-queue ON — the batched engine matches the full numpy
+    Saath reference within 1% per-coflow AND on average (the 2x
+    granularity envelope this replaced is closed)."""
     full = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
                            growth=4.0, num_queues=5)
-    for kind in FAMILIES:
-        tr = _trace(kind, seed=5)
+    traces = [_trace(kind, seed=s) for s in range(3)]
+    res = jax_engine.simulate_batch(traces, full)
+    for b, tr in enumerate(traces):
         want = _reference_cct(tr, params=full)
-        res = jax_engine.simulate_batch([tr], full)
-        a = float(np.nanmean(want))
-        b = float(np.nanmean(res.cct[0, :len(tr.coflows)]))
-        assert b <= 2.0 * a + 4 * full.delta, (kind, a, b)
-        assert res.finished[0].all()
+        got = res.cct[b, :len(tr.coflows)]
+        assert res.finished[b].all()
+        np.testing.assert_allclose(got, want, rtol=1e-2,
+                                   atol=2 * full.delta)
+        assert abs(np.nanmean(got) / np.nanmean(want) - 1.0) < 1e-2
+
+
+@pytest.mark.parametrize("kw", [
+    dict(lcof=False, per_flow_threshold=False),   # Fig. 10 "A/N"
+    dict(lcof=False, per_flow_threshold=True),    # Fig. 10 "A/N+PF"
+])
+def test_engine_ablations_match_reference(kw):
+    """The Fig. 10 ablation switches (Aalo total-bytes queues, FIFO
+    within queue) replay through the traced tick exactly as the numpy
+    policy ablations. Dynamics re-queue is pinned off here: its
+    continuous remaining-length drift makes the trajectory sensitive to
+    f32-vs-f64 event-grid straddles under the ablated orderings (the
+    full-SAATH config is covered at 1% above)."""
+    p = dataclasses.replace(PARAMS)  # PARAMS already pins dynamics off
+    for kind in FAMILIES:
+        tr = _trace(kind, seed=2)
+        want = _reference_cct(tr, dict(kw), params=p)
+        res = jax_engine.simulate_batch([tr], p, **kw)
+        got = res.cct[0, :len(tr.coflows)]
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=2 * p.delta)
 
 
 def test_two_queue_config_matches_reference():
