@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-slow test-all bench-smoke bench
+.PHONY: test test-slow test-all api-smoke bench-smoke bench
 
 test:            ## fast tier-1 suite (slow integration tests excluded)
 	$(PY) -m pytest -q
@@ -12,7 +12,11 @@ test-slow:       ## only the @pytest.mark.slow integration tests
 test-all:        ## everything
 	$(PY) -m pytest -q -m ""
 
+api-smoke:       ## tiny Scenario on both engines + 3-step SaathSession
+	$(PY) -m benchmarks.api_smoke
+
 bench-smoke:     ## the quick batched-engine benchmark paths
+	$(PY) -m benchmarks.api_smoke
 	$(PY) -m benchmarks.fig9_speedup --engine=jax
 	$(PY) -m benchmarks.fig10_breakdown --engine=jax
 	$(PY) -m benchmarks.fig13_fct_deviation --engine=jax

@@ -1,0 +1,68 @@
+"""CI smoke for the scheduling front door (DESIGN.md §7).
+
+One tiny Scenario on BOTH engines (normalized Results must agree within
+the 1% engine-equivalence contract), plus a 3-step `SaathSession`
+(submit / advance / poll) whose incremental CCTs must match the offline
+replay. Fast by construction (~seconds + one small XLA compile).
+
+    PYTHONPATH=src python -m benchmarks.api_smoke
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.api import Scenario, SaathSession, run
+from repro.core.params import SchedulerParams
+from repro.traces import tiny_trace
+
+
+def main():
+    t0 = time.time()
+    p = SchedulerParams()
+    trace = tiny_trace(24, 12, seed=3, load=0.8)
+
+    results = {}
+    for engine in ("numpy", "jax"):
+        res = run(Scenario(policy="saath", engine=engine, trace=trace,
+                           params=p, label="api-smoke"))
+        results[engine] = res
+        print(f"# {engine}: avg_cct={res.avg_cct[0]:.3f}s "
+              f"makespan={res.makespan[0]:.3f}s steps={res.steps} "
+              f"wall={res.wall_seconds:.2f}s", file=sys.stderr)
+    rn, rj = results["numpy"], results["jax"]
+    np.testing.assert_allclose(rj.row_cct(), rn.row_cct(), rtol=1e-2,
+                               atol=2 * p.delta)
+    ratio = float(rj.avg_cct[0] / rn.avg_cct[0])
+    assert abs(ratio - 1.0) < 1e-2, ratio
+
+    # 3-step online session: submit the trace incrementally
+    sess = SaathSession(p, num_ports=12, backend="jax")
+    ordered = sorted(trace.coflows, key=lambda c: c.arrival)
+    cut1, cut2 = len(ordered) // 3, 2 * len(ordered) // 3
+    ccts = {}
+    for step, group in enumerate((ordered[:cut1], ordered[cut1:cut2],
+                                  ordered[cut2:])):
+        last = max(c.arrival for c in group)
+        for c in group:
+            sess.advance(max(c.arrival - sess.now, 0.0))
+            sess.submit([c])
+        sess.advance(max(last - sess.now, 0.0))
+        done = sess.poll()
+        print(f"# session step {step}: t={sess.now:.3f}s "
+              f"live={sess.num_live} completed={len(done)}",
+              file=sys.stderr)
+        ccts.update({d.handle: d.cct for d in done})
+    ccts.update({d.handle: d.cct for d in sess.drain(step=5.0)})
+    got = np.array([ccts[h] for h in sorted(ccts)])
+    want = rn.row_cct()[[c.cid for c in ordered]]
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=2 * p.delta)
+    print(f"# api smoke OK in {time.time() - t0:.1f}s "
+          f"(session reproduced offline CCTs, max rel err "
+          f"{np.nanmax(np.abs(got - want) / want):.2e})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,11 @@
 """Fig. 10: design-component breakdown — A/N, A/N+P/F, full Saath
 (LCoF), each vs Aalo. Paper (FB): 1.13x -> 1.3x -> 1.53x median.
 
---engine=jax replays the Saath side of every ablation through the
-batched XLA fleet engine: the lcof / per_flow_threshold switches are
-traced `DynCoordParams` leaves, so the two ablated variants share one
-compiled executable (full SAATH compiles a second, smaller one — its
-step omits the Aalo-queue event horizon entirely). The ablation
-ordering assertion guards the jitted ablation paths end to end.
+The ablation switches are the shared `repro.api` mechanism names: on
+the numpy engine they become Saath ctor kwargs, on the jax engine they
+are traced/structure switches of the batched fleet engine — one
+Scenario field either way, no per-driver engine branching. The ablation
+ordering assertion guards both planes end to end.
 """
 from __future__ import annotations
 
@@ -21,26 +20,12 @@ VARIANTS = [
 
 
 def run(bench: Bench, engine: str = "numpy"):
-    base = bench.sim("aalo").table.cct
+    base = bench.run("aalo").row_cct()
     rows = []
-    if engine == "jax":
-        import numpy as np
-
-        from repro.core.params import SchedulerParams
-        from repro.fabric import jax_engine
-
-        params = SchedulerParams()
-        trace = bench.trace()
-        C = len(trace.coflows)
-        for name, kw in VARIANTS:
-            res = jax_engine.simulate_batch([trace], params, **kw)
-            cct = np.full(base.shape, np.nan)
-            cct[:C] = res.cct[0, :C]
-            rows.append({"variant": name, **percentile_speedup(base, cct)})
-    else:
-        for name, kw in VARIANTS:
-            cct = bench.sim("saath", policy_kwargs=kw).table.cct
-            rows.append({"variant": name, **percentile_speedup(base, cct)})
+    for name, mech in VARIANTS:
+        cct = bench.run("saath", engine=engine, mechanisms=mech,
+                        label=f"fig10/{name}").row_cct()
+        rows.append({"variant": name, **percentile_speedup(base, cct)})
     emit(f"fig10_breakdown[{engine}]", rows)
     # the paper's Fig. 10 claim: each design component helps at p50
     # (5% slack absorbs replay noise on the quick fabric)

@@ -1,9 +1,9 @@
 """Fig. 11/12: Saath speedup over Aalo per Table-1 bin
 (size <=/> 100MB x width <=/> 10).
 
---engine=jax replays the Saath side through the batched XLA engine
-(fabric.jax_engine.run_to_table) instead of the event-driven replay;
-Aalo stays on the numpy reference (it has no jitted coordinator).
+The Saath side runs on the Scenario's engine; `Result.table()`
+materializes a filled FlowTable from either engine, so the bin metrics
+consume one shape of data with no engine branching.
 """
 from __future__ import annotations
 
@@ -12,13 +12,8 @@ from repro.fabric.metrics import bin_speedups
 
 
 def run(bench: Bench, engine: str = "numpy"):
-    aalo = bench.sim("aalo").table
-    if engine == "jax":
-        from repro.core.params import SchedulerParams
-        from repro.fabric import jax_engine
-        saath, _ = jax_engine.run_to_table(bench.trace(), SchedulerParams())
-    else:
-        saath = bench.sim("saath").table
+    aalo = bench.run("aalo").table()
+    saath = bench.run("saath", engine=engine).table()
     bins = bin_speedups(aalo, saath, qs=(50, 90))
     rows = []
     for b, d in bins.items():

@@ -1,34 +1,21 @@
 """Fig. 13: FCT deviation (out-of-sync) collapses under Saath vs Aalo.
 
---engine=jax replays the Saath side through the batched XLA fleet
-engine (`jax_engine.run_to_table`) — the per-flow FCTs the deviation
-metric consumes are recorded algebraically by the traced tick, so the
-jitted path reproduces the out-of-sync collapse, not just mean CCTs.
+The per-flow FCTs the deviation metric consumes are part of the
+normalized `Result` on both engines (the jax tick records them
+algebraically), so the Saath side just takes the Scenario's engine.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import Bench, cli_bench, emit, pctl
 from repro.fabric.metrics import fct_normalized_std
-
-
-def _saath_table(bench: Bench, engine: str):
-    if engine == "jax":
-        from repro.core.params import SchedulerParams
-        from repro.fabric import jax_engine
-
-        table, _ = jax_engine.run_to_table(bench.trace(), SchedulerParams())
-        return table
-    return bench.sim("saath").table
 
 
 def run(bench: Bench, engine: str = "numpy"):
     rows = []
     devs = {}
     for pol in ("aalo", "saath"):
-        table = _saath_table(bench, engine) if pol == "saath" \
-            else bench.sim(pol).table
+        table = bench.run(pol, engine=engine if pol == "saath"
+                          else "numpy").table()
         dev = fct_normalized_std(table)
         devs[pol] = dev
         for kind in ("equal", "unequal"):

@@ -1,8 +1,17 @@
 """Fig. 14: sensitivity to S (start threshold), E (growth), delta
-(sync interval), A (arrival speedup), d (deadline factor).
+(sync interval), A (arrival speedup), d (deadline factor), plus the
+work-conservation / §4.3-re-queue mechanism switches.
 
-Key paper claims: Saath insensitive to S (LCoF fixes FIFO's HoL);
-both degrade as delta grows; Saath's edge grows with contention (A).
+One methodology on both engines, through `repro.api.run`:
+
+* the (S, E, delta, d, mech) grid is ONE sweep Scenario over one trace
+  — vmapped into a single XLA computation on the jax engine, looped on
+  numpy;
+* the arrival-speedup (A) axis changes the TRACE, so it is one Scenario
+  per A with an Aalo host baseline (speedup = contention claim).
+
+Key paper claims checked: Saath insensitive to S (LCoF fixes FIFO's
+HoL); Saath's edge grows with contention (A); mechanisms don't hurt.
 """
 from __future__ import annotations
 
@@ -11,68 +20,14 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Bench, cli_bench, emit
+from benchmarks.common import Bench, cli_bench, emit, record
+from repro.api import Scenario
+from repro.api import run as api_run
 from repro.core.params import MB, SchedulerParams
 from repro.fabric.metrics import percentile_speedup
 
 
-def _speedup(bench, params, **trace_kw):
-    a = bench.sim("aalo", params, **trace_kw).table.cct
-    s = bench.sim("saath", params, **trace_kw).table.cct
-    return percentile_speedup(a, s)
-
-
-def run(bench: Bench, engine: str = "numpy"):
-    if engine == "jax":
-        return run_jax_sweep(bench)
-    rows = []
-    base = SchedulerParams()
-
-    for S in (1 * MB, 10 * MB, 100 * MB):
-        p = dataclasses.replace(base, start_threshold=S)
-        rows.append({"knob": "S", "value": S / MB,
-                     **_speedup(bench, p)})
-    for E in (2.0, 10.0, 32.0):
-        p = dataclasses.replace(base, growth=E)
-        rows.append({"knob": "E", "value": E, **_speedup(bench, p)})
-    for delta in (8e-3, 64e-3, 256e-3):
-        p = dataclasses.replace(base, delta=delta)
-        rows.append({"knob": "delta_ms", "value": delta * 1e3,
-                     **_speedup(bench, p)})
-    for A in (0.5, 1.0, 2.0):
-        rows.append({"knob": "A", "value": A,
-                     **_speedup(bench, base, arrival_speedup=A)})
-    for d in (1.0, 2.0, 8.0):
-        p = dataclasses.replace(base, deadline_factor=d)
-        a = bench.sim("aalo", base).table.cct
-        s = bench.sim("saath", p).table.cct
-        rows.append({"knob": "d", "value": d,
-                     **percentile_speedup(a, s)})
-    emit("fig14_sensitivity", rows)
-
-    # contention claim: speedup at A=2 >= speedup at A=0.5 (more
-    # contention -> LCoF pays off more)
-    a_lo = next(r for r in rows if r["knob"] == "A" and r["value"] == 0.5)
-    a_hi = next(r for r in rows if r["knob"] == "A" and r["value"] == 2.0)
-    assert a_hi["p50"] >= a_lo["p50"] * 0.8
-    return rows
-
-
-def run_jax_sweep(bench: Bench):
-    """The whole (S, E, delta, d, mechanism-switch) grid on one trace as
-    ONE vmapped XLA computation (fabric.jax_engine.simulate_sweep) — the
-    paper's Fig. 14 methodology at sweep-in-one-shot cost. The work-
-    conservation and §4.3 re-queue switches are traced DynCoordParams
-    leaves, so the mechanism ablations ride the same executable as the
-    threshold knobs. Reports Saath CCT stats per setting; the
-    S-insensitivity claim (LCoF fixes FIFO's HoL blocking) is checked
-    directly on the batched results."""
-    from repro.fabric import jax_engine
-    from repro.traces import tiny_trace
-
-    n, ports = (60, 24) if bench.quick else (100, 48)
-    trace = tiny_trace(n, ports, seed=0, load=0.8)
-    base = SchedulerParams()
+def _grid(base: SchedulerParams):
     grid = []
     for S in (1 * MB, 10 * MB, 100 * MB):
         grid.append(("S", S / MB,
@@ -90,21 +45,47 @@ def run_jax_sweep(bench: Bench):
         for rq in (True, False):
             grid.append(("mech", 2 * wc + rq, dataclasses.replace(
                 base, work_conservation=wc, dynamics_requeue=rq)))
+    return grid
+
+
+def run(bench: Bench, engine: str = "numpy"):
+    from repro.traces import tiny_trace
+
+    n, ports = (60, 24) if bench.quick else (100, 48)
+    trace = tiny_trace(n, ports, seed=0, load=0.8)
+    base = SchedulerParams()
+    grid = _grid(base)
 
     t0 = time.perf_counter()
-    res = jax_engine.simulate_sweep(trace, [p for _, _, p in grid])
+    res = api_run(Scenario(policy="saath", engine=engine, trace=trace,
+                           sweep=tuple(p for _, _, p in grid),
+                           label="fig14/grid"))
     wall = time.perf_counter() - t0
-    C = len(trace.coflows)
+    record("fig14_grid", res)
     rows = []
     for i, (knob, value, _) in enumerate(grid):
-        cct = res.cct[i, :C]
+        cct = res.row_cct(i)
         rows.append({"knob": knob, "value": value,
                      "avg_cct": float(np.nanmean(cct)),
                      "p50_cct": float(np.nanpercentile(cct, 50)),
                      "p90_cct": float(np.nanpercentile(cct, 90))})
-    emit("fig14_sensitivity[jax]",
+
+    # contention axis: A scales the TRACE's arrival rate; Saath side on
+    # the Scenario's engine, Aalo host baseline
+    for A in (0.5, 1.0, 2.0):
+        tr = tiny_trace(n, ports, seed=0, load=0.8, arrival_speedup=A)
+        a = api_run(Scenario(policy="aalo", engine="numpy", trace=tr,
+                             params=base))
+        s = api_run(Scenario(policy="saath", engine=engine, trace=tr,
+                             params=base, label=f"fig14/A={A}"))
+        sp = percentile_speedup(a.row_cct(), s.row_cct())
+        rows.append({"knob": "A", "value": A, "avg_cct": sp["p50"],
+                     "p50_cct": sp["p50"], "p90_cct": sp["p90"]})
+
+    emit(f"fig14_sensitivity[{engine}]",
          rows + [{"knob": "wall_s", "value": wall, "avg_cct": len(grid),
                   "p50_cct": float("nan"), "p90_cct": float("nan")}])
+
     # S-insensitivity: avg CCT varies < 2x across the S grid
     s_rows = [r["avg_cct"] for r in rows if r["knob"] == "S"]
     assert max(s_rows) <= 2.0 * min(s_rows), s_rows
@@ -112,6 +93,11 @@ def run_jax_sweep(bench: Bench):
     # within 10% of (and typically beats) the no-mechanism ablation
     mech = {r["value"]: r["avg_cct"] for r in rows if r["knob"] == "mech"}
     assert mech[3] <= 1.1 * mech[0], mech
+    # contention claim: speedup at A=2 >= speedup at A=0.5 (more
+    # contention -> LCoF pays off more)
+    a_lo = next(r for r in rows if r["knob"] == "A" and r["value"] == 0.5)
+    a_hi = next(r for r in rows if r["knob"] == "A" and r["value"] == 2.0)
+    assert a_hi["p50_cct"] >= a_lo["p50_cct"] * 0.8, (a_lo, a_hi)
     return rows
 
 

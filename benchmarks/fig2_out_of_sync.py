@@ -7,13 +7,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Bench, emit, pctl
+from benchmarks.common import Bench, cli_bench, emit, pctl
 from repro.fabric.metrics import fct_normalized_std, width_size_bins
 
 
-def run(bench: Bench):
-    res = bench.sim("aalo")
-    t = res.table
+def run(bench: Bench, engine: str = "numpy"):
+    t = bench.run("aalo", record_as="fig2").table()
     widths = t.width
     rows = [{
         "metric": "width",
@@ -38,4 +37,4 @@ def run(bench: Bench):
 
 
 if __name__ == "__main__":
-    run(Bench())
+    run(*cli_bench())

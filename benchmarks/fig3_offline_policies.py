@@ -5,15 +5,15 @@ evidence that contention matters.
 """
 from __future__ import annotations
 
-from benchmarks.common import Bench, emit
+from benchmarks.common import Bench, cli_bench, emit
 from repro.fabric.metrics import percentile_speedup
 
 
-def run(bench: Bench):
-    base = bench.sim("aalo").table.cct
+def run(bench: Bench, engine: str = "numpy"):
+    base = bench.run("aalo").row_cct()
     rows = []
     for pol in ("scf", "srtf", "lwtf"):
-        s = percentile_speedup(base, bench.sim(pol).table.cct)
+        s = percentile_speedup(base, bench.run(pol).row_cct())
         rows.append({"policy": pol, **{k: v for k, v in s.items()}})
     emit("fig3_offline", rows)
     lwtf = next(r for r in rows if r["policy"] == "lwtf")
@@ -24,4 +24,4 @@ def run(bench: Bench):
 
 
 if __name__ == "__main__":
-    run(Bench())
+    run(*cli_bench())

@@ -3,84 +3,81 @@
 Paper (FB trace): Saath vs Aalo p50 = 1.53x, p90 = 4.5x; ~Varys-SEBF
 parity; >>100x vs UC-TCP.
 
---engine=jax additionally runs the batched-fleet demonstration: 16
-traces replayed as ONE vmapped XLA computation vs 16 sequential
-`Simulator.run` calls (the claim this PR's engine exists for — a >= 5x
-wall-clock win once compiled).
+The Saath side runs on whichever engine the Scenario names (--engine is
+scenario data, not a code path); the baselines are host-only policies.
+The fleet section is inherently cross-engine: 16 traces replayed as ONE
+vmapped XLA computation vs 16 sequential `Simulator.run` replays — the
+>= 5x wall-clock claim the batched engine exists for.
 """
 from __future__ import annotations
 
 import os
-import time
 
 import numpy as np
 
-from benchmarks.common import Bench, cli_bench, emit
+from benchmarks.common import Bench, cli_bench, emit, record
+from repro.api import Scenario
+from repro.api import run as api_run
 from repro.fabric.metrics import percentile_speedup
 
 FLEET = 16  # traces in the batched sweep
 
 
 def run(bench: Bench, engine: str = "numpy"):
-    saath = bench.sim("saath").table.cct
+    saath = bench.run("saath", engine=engine,
+                      record_as="fig9_saath").row_cct()
     rows = []
     for pol in ("aalo", "varys-sebf", "uc-tcp", "fifo", "saath-jax"):
-        other = bench.sim(pol).table.cct
+        other = bench.run(pol).row_cct()
         s = percentile_speedup(other, saath)  # CCT_other / CCT_saath
         rows.append({"vs": pol, **s})
-    emit("fig9_speedup", rows)
+    emit(f"fig9_speedup[{engine}]", rows)
     aalo = next(r for r in rows if r["vs"] == "aalo")
     assert aalo["p50"] > 1.1, f"Saath should beat Aalo at p50: {aalo}"
     assert aalo["p90"] > 2.0, f"...and strongly at p90: {aalo}"
-    if engine == "jax":
-        rows += run_fleet(bench)
+    rows += run_fleet(bench)
     return rows
 
 
 def run_fleet(bench: Bench):
     """16-trace fleet: sequential event-driven numpy replays vs one
-    batched `jax_engine.simulate_batch` call (cold = incl. XLA compile,
-    warm = the steady-state sweep cost a parameter study pays).
+    batched engine call, all through `repro.api.run` (cold/warm split
+    via Scenario.warm_timing).
 
     Two batched rows: full FIDELITY (per-flow work conservation + §4.3
     re-queue — must match the numpy references' CCTs, the PR-2 claim)
     and the coflow-granular THROUGHPUT mode (the parameter-sweep
     configuration the >= 5x wall-clock gate applies to)."""
     from repro.core.params import SchedulerParams
-    from repro.core.policies import make_policy
-    from repro.fabric import jax_engine
-    from repro.fabric.engine import Simulator
-    from repro.fabric.state import FlowTable
     from repro.traces import tiny_trace
 
     p = SchedulerParams()
     n, ports = 40, 20
     fleet = FLEET if bench.quick else 2 * FLEET
-    traces = [tiny_trace(n, ports, seed=s, load=0.8) for s in range(fleet)]
+    traces = tuple(tiny_trace(n, ports, seed=s, load=0.8)
+                   for s in range(fleet))
 
-    t0 = time.perf_counter()
-    seq_cct = []
-    for tr in traces:
-        table = FlowTable.from_trace(tr, p.port_bw)
-        Simulator(p).run(table, make_policy("saath", p))
-        seq_cct.append(float(np.nanmean(table.cct)))
-    t_seq = time.perf_counter() - t0
+    seq = api_run(Scenario(policy="saath", engine="numpy", params=p,
+                           traces=traces, label="fleet-seq"))
+    t_seq = seq.wall_seconds
 
-    t0 = time.perf_counter()
-    res = jax_engine.simulate_batch(traces, p)
-    t_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    res = jax_engine.simulate_batch(traces, p)
-    t_fid = time.perf_counter() - t0
-    ratio = float(np.mean(res.avg_cct) / np.mean(seq_cct))
+    fid = api_run(Scenario(policy="saath", engine="jax", params=p,
+                           traces=traces, warm_timing=True,
+                           label="fleet-fidelity"))
+    t_cold = fid.wall_seconds + fid.compile_seconds
+    t_fid = fid.wall_seconds
+    ratio = float(np.mean(fid.avg_cct) / np.mean(seq.avg_cct))
 
-    fast_kw = dict(fidelity="coflow", dynamics_requeue=False)
-    res_fast = jax_engine.simulate_batch(traces, p, **fast_kw)
-    t0 = time.perf_counter()
-    res_fast = jax_engine.simulate_batch(traces, p, **fast_kw)
-    t_warm = time.perf_counter() - t0
-    ratio_fast = float(np.mean(res_fast.avg_cct) / np.mean(seq_cct))
+    fast = api_run(Scenario(policy="saath", engine="jax", params=p,
+                            traces=traces, fidelity="coflow",
+                            mechanisms={"dynamics_requeue": False},
+                            warm_timing=True, label="fleet-throughput"))
+    t_warm = fast.wall_seconds
+    ratio_fast = float(np.mean(fast.avg_cct) / np.mean(seq.avg_cct))
 
+    record("fig9_fleet_seq", seq)
+    record("fig9_fleet_fidelity", fid)
+    record("fig9_fleet_throughput", fast)
     rows = [
         {"vs": "fleet-seq-numpy", "wall_s": t_seq, "speedup": 1.0,
          "note": f"{fleet}x Simulator.run {n}x{ports}"},
@@ -88,10 +85,10 @@ def run_fleet(bench: Bench):
          "speedup": t_seq / t_cold, "note": "incl. XLA compile"},
         {"vs": "fleet-jax-fidelity", "wall_s": t_fid,
          "speedup": t_seq / t_fid,
-         "note": f"events={res.events} avg-cct-ratio={ratio:.3f}"},
+         "note": f"events={fid.steps} avg-cct-ratio={ratio:.3f}"},
         {"vs": "fleet-jax-warm", "wall_s": t_warm,
          "speedup": t_seq / t_warm,
-         "note": f"events={res_fast.events} "
+         "note": f"events={fast.steps} "
                  f"avg-cct-ratio={ratio_fast:.3f}"},
     ]
     emit("fig9_fleet", rows)

@@ -1,9 +1,12 @@
 """Benchmark suite entry point: one benchmark per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--engine=jax]
 
 --full replays the 526x150 FB-scale fabric (minutes on one CPU core);
-the default quick fabric preserves every qualitative claim. The slow
+the default quick fabric preserves every qualitative claim. Every
+driver runs through `repro.api.run`, so --engine is plain Scenario data
+threaded to the Saath side uniformly. Machine-readable perf records
+accumulate in BENCH_api.json (benchmarks.common.record). The slow
 roofline pass (`python -m benchmarks.roofline --all`) writes
 experiments/roofline/; this runner prints its cached table if present.
 """
@@ -56,7 +59,7 @@ def main():
                     help="FB-scale fabric (526 coflows x 150 ports)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--engine", choices=("numpy", "jax"), default="numpy",
-                    help="add the batched jax_engine paths where supported")
+                    help="replay engine for the Saath-side Scenarios")
     args = ap.parse_args()
     bench = Bench(quick=not args.full)
     t0 = time.time()
@@ -66,11 +69,7 @@ def main():
             continue
         t1 = time.time()
         try:
-            import inspect
-            if "engine" in inspect.signature(mod.run).parameters:
-                mod.run(bench, engine=args.engine)
-            else:
-                mod.run(bench)
+            mod.run(bench, engine=args.engine)
         except AssertionError as e:
             failures.append((name, str(e)))
             print(f"# {name} CLAIM-CHECK FAILED: {e}", file=sys.stderr)
@@ -82,9 +81,9 @@ def main():
         sys.exit(1)
 
 
-def run_all(quick=True):
+def run_all(quick=True, engine="numpy"):
     bench = Bench(quick=quick)
-    return {name: mod.run(bench) for name, mod in SUITES}
+    return {name: mod.run(bench, engine=engine) for name, mod in SUITES}
 
 
 if __name__ == "__main__":

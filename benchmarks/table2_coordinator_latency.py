@@ -1,10 +1,11 @@
 """Table 2: coordinator scheduling cost.
 
-Times (a) the numpy reference Saath on the trace-replay state (paper's
-150-port scale) and (b) the jitted JAX coordinator at production scale
-(512 ports x up to 4096 coflows), with the LCoF/contention sub-step
-broken out. The paper's C++ coordinator: 0.57 ms avg / 2.85 ms P90 at
-~150 ports.
+Times (a) the host-reference Saath replay on the bench fabric (paper's
+150-port scale), (b) the jitted JAX coordinator at production scale
+(512 ports x up to 4096 coflows) with the LCoF/contention sub-step
+broken out, and (c) the amortized per-trace-step cost of a whole fleet
+replay through `repro.api.run` on the Scenario's engine. The paper's
+C++ coordinator: 0.57 ms avg / 2.85 ms P90 at ~150 ports.
 """
 from __future__ import annotations
 
@@ -12,7 +13,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Bench, cli_bench, emit
+from benchmarks.common import Bench, cli_bench, emit, record
+from repro.api import Scenario
+from repro.api import run as api_run
 from repro.core import jax_coordinator as jc
 from repro.core.params import SchedulerParams
 from repro.kernels import ops
@@ -33,11 +36,11 @@ def run(bench: Bench, engine: str = "numpy"):
 
     rows = []
 
-    # (a) numpy reference on the replay fabric
-    res = bench.sim("saath")
+    # (a) host reference on the replay fabric
+    res = bench.run("saath")
     rows.append({
-        "impl": "numpy-replay", "C": res.table.num_coflows,
-        "P": res.table.num_ports,
+        "impl": "numpy-replay", "C": int(res.num_coflows[0]),
+        "P": res.table(0).num_ports,
         "avg_ms": 1e3 * res.sched_seconds / max(res.steps, 1),
         "note": "full Fig.7 step incl. WC",
     })
@@ -77,34 +80,32 @@ def run(bench: Bench, engine: str = "numpy"):
         rows.append({"impl": "jax-jit", "C": C, "P": P,
                      "avg_ms": dt * 1e3,
                      "note": f"contention={dt_k * 1e3:.3f}ms"})
-    if engine == "jax":
-        rows += run_engine_throughput(bench)
-    emit("table2_coordinator", rows)
-    big = next(r for r in rows if r["C"] == 4096)
+    rows += run_engine_throughput(bench, engine)
+    emit(f"table2_coordinator[{engine}]", rows)
+    big = next(r for r in rows if r.get("C") == 4096)
     assert big["avg_ms"] < 1e3, "coordinator tick should be sub-second"
     return rows
 
 
-def run_engine_throughput(bench: Bench):
-    """Amortized per-trace coordinator-step cost when the whole fleet
-    runs as one scanned/vmapped computation (fabric.jax_engine) — the
-    batched counterpart of the single-tick numbers above."""
-    from repro.core.params import SchedulerParams
-    from repro.fabric import jax_engine
+def run_engine_throughput(bench: Bench, engine: str):
+    """Amortized per-trace coordinator-step cost of a whole-fleet replay
+    through the front door on the Scenario's engine (warm timing splits
+    compile cost out on jax)."""
     from repro.traces import tiny_trace
 
     p = SchedulerParams()
     n, ports, fleet = (60, 24, 16) if bench.quick else (120, 48, 32)
-    traces = [tiny_trace(n, ports, seed=s, load=0.8) for s in range(fleet)]
-    res = jax_engine.simulate_batch(traces, p)          # compile
-    t0 = time.perf_counter()
-    res = jax_engine.simulate_batch(traces, p)
-    wall = time.perf_counter() - t0
-    steps = res.events * fleet                          # coordinator ticks
-    return [{"impl": "jax-batched-engine", "C": n, "P": ports,
-             "avg_ms": 1e3 * wall / max(steps, 1),
-             "note": f"fleet={fleet} events={res.events} "
-                     f"wall={wall:.2f}s (amortized per trace-step)"}]
+    traces = tuple(tiny_trace(n, ports, seed=s, load=0.8)
+                   for s in range(fleet))
+    res = api_run(Scenario(policy="saath", engine=engine, params=p,
+                           traces=traces, warm_timing=True,
+                           label="table2/fleet"))
+    record("table2_fleet", res)
+    return [{"impl": f"{engine}-batched-engine", "C": n, "P": ports,
+             "avg_ms": 1e3 * res.wall_seconds / max(res.steps, 1),
+             "note": f"fleet={fleet} steps={res.steps} "
+                     f"wall={res.wall_seconds:.2f}s "
+                     f"(amortized per trace-step)"}]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""`repro.api` — the one scheduling front door (DESIGN.md §7).
+
+Declarative experiments::
+
+    from repro.api import Scenario, run
+    res = run(Scenario(policy="saath", engine="jax",
+                       synth=dict(num_coflows=60, num_ports=24)))
+    res.avg_cct, res.makespan, res.table(0)
+
+Online sessions::
+
+    from repro.api import SaathSession
+    sess = SaathSession(params, num_ports=24, backend="jax")
+    sess.submit(coflows); sess.advance(0.5); done = sess.poll()
+"""
+from repro.api.scenario import (MECHANISM_KEYS, Result, Scenario,
+                                resolve_traces, run)
+from repro.api.session import CompletedCoflow, SaathSession
+
+__all__ = ["Scenario", "Result", "run", "resolve_traces",
+           "MECHANISM_KEYS", "SaathSession", "CompletedCoflow"]

@@ -1,0 +1,374 @@
+"""The scheduling front door: declarative `Scenario` -> `run` -> `Result`.
+
+One entry point replaces the per-driver engine plumbing that used to be
+scattered through `benchmarks/` (DESIGN.md §7): a `Scenario` names the
+workload (a trace, a fleet, a synth spec, or a trace file), the policy,
+the parameters (or a sweep grid), and the engine — and `run` routes it
+to the event-driven host `fabric.engine.Simulator` or the batched XLA
+`fabric.jax_engine`, normalizing either outcome into one `Result`.
+
+`Result` is the SINGLE place padding/NaN semantics live:
+
+* ``cct[b, c]`` is NaN for unfinished or padded coflows;
+* ``fct[b, f]`` is NaN for unfinished or padded flows;
+* ``makespan[b]`` (last absolute FCT) and ``avg_cct[b]`` are NaN when a
+  row finished nothing (an all-padding session slab row, an empty
+  trace) — never 0.0, which would masquerade as a zero-second replay.
+
+The engine-equivalence contract (jax CCTs within 1% of the numpy
+reference at full fidelity) is owned here and regression-tested in
+``tests/test_api.py``; drivers consume `Result` and never branch on the
+engine again.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.coflow import Trace
+from repro.core.params import SchedulerParams
+from repro.core.policies import resolve_policy
+
+# the one set of mechanism-switch names both engines resolve: traced /
+# structure switches on the jax plane, policy ctor kwargs (or
+# SchedulerParams fields) on the numpy plane
+MECHANISM_KEYS = ("work_conservation", "dynamics_requeue", "lcof",
+                  "per_flow_threshold")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Scenario:
+    """A declarative scheduling experiment.
+
+    Exactly one trace source must be set: `trace` (one Trace), `traces`
+    (a fleet, jax engine replays it batched), `synth` (kwargs for
+    `traces.synth.fb_like_trace`), or `trace_path` (the public
+    coflow-benchmark format). `sweep` replaces `params` with a grid of
+    settings over ONE trace (vmapped on the jax engine, looped on
+    numpy). `mechanisms` holds the Fig. 10 ablation switches by their
+    shared names; `policy_kwargs` passes extra host-policy ctor args
+    (numpy engine only).
+    """
+    policy: str = "saath"
+    engine: str = "numpy"              # "numpy" | "jax"
+    params: SchedulerParams = dataclasses.field(
+        default_factory=SchedulerParams)
+    sweep: Optional[Tuple[SchedulerParams, ...]] = None
+    # trace source (exactly one)
+    trace: Optional[Trace] = None
+    traces: Optional[Tuple[Trace, ...]] = None
+    synth: Optional[Mapping] = None
+    trace_path: Optional[str] = None
+    # engine knobs
+    fidelity: str = "flow"             # jax: "flow" | "coflow"
+    mechanisms: Optional[Mapping] = None
+    policy_kwargs: Optional[Mapping] = None
+    max_jump: Optional[float] = None   # numpy: Simulator re-eval cadence
+    warm_timing: bool = False          # jax: extra runs split compile
+    #                                    time out; no-op on numpy (no
+    #                                    compile to split)
+    label: str = ""
+
+    def hash(self) -> str:
+        """Stable digest of everything that determines the outcome —
+        the cache/record key benchmarks persist across PRs."""
+        h = hashlib.blake2b(digest_size=8)
+
+        def upd(*parts):
+            h.update(repr(parts).encode())
+
+        upd(self.policy, self.engine, self.fidelity, self.label,
+            dataclasses.astuple(self.params), self.max_jump)
+        if self.sweep is not None:
+            upd(tuple(dataclasses.astuple(p) for p in self.sweep))
+        upd(tuple(sorted((self.mechanisms or {}).items())),
+            tuple(sorted((self.policy_kwargs or {}).items())))
+        if self.synth is not None:
+            upd("synth", tuple(sorted(self.synth.items())))
+        elif self.trace_path is not None:
+            upd("path", self.trace_path)
+        else:
+            for t in resolve_traces(self):
+                upd(t.num_ports, len(t.coflows))
+                for c in t.coflows:
+                    # exact per-flow layout, not permutation-insensitive
+                    # aggregates — distinct experiments must not share a
+                    # cache/record key
+                    h.update(np.float64(c.arrival).tobytes())
+                    h.update(np.asarray(
+                        [(f.src, f.dst, f.size) for f in c.flows],
+                        np.float64).tobytes())
+        return h.hexdigest()
+
+
+def resolve_traces(sc: Scenario) -> List[Trace]:
+    """Materialize the scenario's trace source (exactly one allowed)."""
+    sources = [sc.trace is not None, sc.traces is not None,
+               sc.synth is not None, sc.trace_path is not None]
+    if sum(sources) != 1:
+        raise ValueError(
+            "Scenario needs exactly one trace source: "
+            "trace | traces | synth | trace_path")
+    if sc.trace is not None:
+        return [sc.trace]
+    if sc.traces is not None:
+        return list(sc.traces)
+    if sc.trace_path is not None:
+        from repro.traces.loader import load_coflow_benchmark
+        return [load_coflow_benchmark(sc.trace_path)]
+    from repro.traces.synth import fb_like_trace
+    return [fb_like_trace(**dict(sc.synth))]
+
+
+@dataclasses.dataclass
+class Result:
+    """Normalized outcome of `run` (see the module docstring for the
+    NaN/padding contract). The leading axis is the trace axis for fleet
+    scenarios and the setting axis for sweeps."""
+    engine: str
+    policy: str
+    cct: np.ndarray           # (B, C) seconds, arrival-relative
+    fct: np.ndarray           # (B, F) seconds, ABSOLUTE completion time
+    sent: np.ndarray          # (B, F) bytes
+    num_coflows: np.ndarray   # (B,) real (un-padded) coflows per row
+    num_flows: np.ndarray     # (B,) real flows per row
+    steps: int                # TOTAL coordinator invocations across the
+    #                           batch (numpy: summed Simulator steps;
+    #                           jax: scan event-steps x lanes) — the
+    #                           normalized unit amortized costs divide by
+    wall_seconds: float
+    compile_seconds: float = 0.0   # jax cold-minus-warm (warm_timing)
+    sched_seconds: float = 0.0     # numpy: host time inside the policy
+    scenario: Optional[Scenario] = None
+    traces: Optional[list] = dataclasses.field(default=None, repr=False)
+    params_rows: Optional[list] = dataclasses.field(default=None,
+                                                    repr=False)
+    _tables: Optional[list] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def batch(self) -> int:
+        return self.cct.shape[0]
+
+    @property
+    def avg_cct(self) -> np.ndarray:
+        """(B,) mean CCT over finished real coflows; NaN when none."""
+        from repro.fabric.metrics import nan_row_mean
+
+        return nan_row_mean(self.cct)
+
+    @property
+    def makespan(self) -> np.ndarray:
+        """(B,) last ABSOLUTE flow completion time; NaN when a row
+        finished nothing (both engines agree on this through here —
+        including zero-flow rows, e.g. an empty trace)."""
+        if self.fct.shape[1] == 0:
+            return np.full(self.fct.shape[0], np.nan)
+        fin = np.isfinite(self.fct)
+        safe = np.where(fin, self.fct, -np.inf).max(axis=1)
+        return np.where(fin.any(axis=1), safe, np.nan)
+
+    def row_cct(self, b: int = 0) -> np.ndarray:
+        """(C_b,) per-coflow CCTs of row `b`, padding trimmed."""
+        return self.cct[b, :int(self.num_coflows[b])]
+
+    def row_fct(self, b: int = 0) -> np.ndarray:
+        return self.fct[b, :int(self.num_flows[b])]
+
+    def table(self, b: int = 0):
+        """Materialize row `b` as a filled `FlowTable` (for the metrics
+        helpers that consume tables) — works for BOTH engines, so
+        drivers never special-case `run_to_table` again."""
+        if self._tables is not None:
+            return self._tables[b]
+        if self.traces is None:
+            raise ValueError("Result carries no traces to rebuild from")
+        from repro.fabric.state import FlowTable
+
+        p = (self.params_rows[b] if self.params_rows
+             else SchedulerParams())
+        t = FlowTable.from_trace(self.traces[b], p.port_bw)
+        F, C = t.size.shape[0], t.num_coflows
+        t.sent[:] = self.sent[b, :F]
+        t.fct[:] = self.fct[b, :F]
+        t.done[:] = np.isfinite(self.fct[b, :F])
+        t.cct[:] = self.cct[b, :C]
+        t.finished[:] = np.isfinite(self.cct[b, :C])
+        t.active[:] = False
+        return t
+
+    def summary(self, b: int = 0) -> dict:
+        """Flat record for machine-readable benchmark emission."""
+        cct = self.row_cct(b)
+        fin = cct[np.isfinite(cct)]
+        return {
+            "engine": self.engine, "policy": self.policy,
+            "scenario": self.scenario.hash() if self.scenario else "",
+            "label": self.scenario.label if self.scenario else "",
+            "row": b,
+            "num_coflows": int(self.num_coflows[b]),
+            "avg_cct": float(self.avg_cct[b]),
+            "p50_cct": float(np.percentile(fin, 50)) if fin.size
+            else float("nan"),
+            "p90_cct": float(np.percentile(fin, 90)) if fin.size
+            else float("nan"),
+            "makespan": float(self.makespan[b]),
+            "steps": self.steps,
+            "wall_seconds": self.wall_seconds,
+            "compile_seconds": self.compile_seconds,
+        }
+
+
+def _split_mechanisms(sc: Scenario):
+    """Validate mechanism names once for both engines."""
+    mech = dict(sc.mechanisms or {})
+    unknown = set(mech) - set(MECHANISM_KEYS)
+    if unknown:
+        raise ValueError(
+            f"unknown mechanism switches {sorted(unknown)}; "
+            f"available: {', '.join(MECHANISM_KEYS)}")
+    return mech
+
+
+def run(scenario: Scenario) -> Result:
+    """Execute a Scenario on its engine and normalize the outcome."""
+    sc = scenario
+    if sc.engine not in ("numpy", "jax"):
+        raise ValueError(
+            f"unknown engine {sc.engine!r}; available: numpy, jax")
+    if sc.fidelity not in ("flow", "coflow"):
+        raise ValueError(f"unknown fidelity {sc.fidelity!r}; "
+                         f"available: flow, coflow")
+    if sc.engine == "numpy" and sc.fidelity != "flow":
+        raise ValueError(
+            "the numpy reference replay is inherently flow-fidelity; "
+            'fidelity="coflow" is the jax engine\'s throughput mode')
+    resolve_policy(sc.policy, sc.engine)   # raises with available list
+    traces = resolve_traces(sc)
+    settings = list(sc.sweep) if sc.sweep is not None else None
+    if settings is not None and len(traces) != 1:
+        raise ValueError("sweep scenarios take exactly one trace")
+    if sc.engine == "numpy":
+        return _run_numpy(sc, traces, settings)
+    return _run_jax(sc, traces, settings)
+
+
+def _run_numpy(sc: Scenario, traces: List[Trace],
+               settings) -> Result:
+    from repro.core.policies import make_policy
+    from repro.fabric.engine import Simulator
+    from repro.fabric.state import FlowTable
+
+    mech = _split_mechanisms(sc)
+
+    def one(trace, params):
+        if "dynamics_requeue" in mech:
+            params = dataclasses.replace(
+                params, dynamics_requeue=mech["dynamics_requeue"])
+        if "work_conservation" in mech:
+            params = dataclasses.replace(
+                params, work_conservation=mech["work_conservation"])
+        pol_kw = dict(sc.policy_kwargs or {})
+        for k in ("lcof", "per_flow_threshold"):
+            if k in mech:
+                pol_kw[k] = mech[k]
+        table = FlowTable.from_trace(trace, params.port_bw)
+        policy = make_policy(sc.policy, params, **pol_kw)
+        res = Simulator(params, max_jump=sc.max_jump).run(table, policy)
+        return res, params
+
+    t0 = time.perf_counter()
+    if settings is not None:
+        rows = [one(traces[0], p) for p in settings]
+        row_traces = [traces[0]] * len(settings)
+    else:
+        rows = [one(t, sc.params) for t in traces]
+        row_traces = traces
+    wall = time.perf_counter() - t0
+
+    results = [r for r, _ in rows]
+    params_rows = [p for _, p in rows]
+    B = len(results)
+    Cm = max(r.table.num_coflows for r in results)
+    Fm = max(r.table.size.shape[0] for r in results)
+    cct = np.full((B, Cm), np.nan)
+    fct = np.full((B, Fm), np.nan)
+    sent = np.zeros((B, Fm))
+    for b, r in enumerate(results):
+        C, F = r.table.num_coflows, r.table.size.shape[0]
+        cct[b, :C] = r.table.cct
+        fct[b, :F] = r.table.fct
+        sent[b, :F] = r.table.sent
+    return Result(
+        engine="numpy", policy=sc.policy, cct=cct, fct=fct, sent=sent,
+        num_coflows=np.array([r.table.num_coflows for r in results]),
+        num_flows=np.array([r.table.size.shape[0] for r in results]),
+        steps=sum(r.steps for r in results), wall_seconds=wall,
+        sched_seconds=sum(r.sched_seconds for r in results),
+        scenario=sc, traces=row_traces, params_rows=params_rows,
+        _tables=[r.table for r in results])
+
+
+def _run_jax(sc: Scenario, traces: List[Trace], settings) -> Result:
+    from repro.fabric import jax_engine
+
+    if sc.policy_kwargs:
+        raise ValueError(
+            "policy_kwargs are numpy-engine only; use mechanisms= for "
+            "the shared ablation switches")
+    mech = _split_mechanisms(sc)
+
+    if settings is not None:
+        if mech:
+            raise ValueError(
+                "sweep scenarios encode work_conservation / "
+                "dynamics_requeue per setting (SchedulerParams fields); "
+                "lcof / per_flow_threshold ablations need per-setting "
+                "scenarios")
+
+        def go():
+            return jax_engine.simulate_sweep(traces[0], settings,
+                                             fidelity=sc.fidelity)
+        row_traces = [traces[0]] * len(settings)
+        params_rows = settings
+        counts = [(len(traces[0].coflows), traces[0].num_flows)
+                  ] * len(settings)
+    else:
+        def go():
+            return jax_engine.simulate_batch(
+                traces, sc.params, fidelity=sc.fidelity, **mech)
+        row_traces = traces
+        params_rows = [sc.params] * len(traces)
+        counts = [(len(t.coflows), t.num_flows) for t in traces]
+
+    t0 = time.perf_counter()
+    eres = go()
+    wall = time.perf_counter() - t0
+    compile_s = 0.0
+    if sc.warm_timing:
+        # best of two warm runs: one-shot wall clocks on shared/throttled
+        # hosts wander ±15%, which matters at the fleet speedup gate
+        warm = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            eres = go()
+            warm = min(warm, time.perf_counter() - t0)
+        compile_s, wall = max(wall - warm, 0.0), warm
+
+    return Result(
+        engine="jax", policy=sc.policy,
+        cct=np.asarray(eres.cct, np.float64),
+        fct=np.asarray(eres.fct, np.float64),
+        sent=np.asarray(eres.sent, np.float64),
+        num_coflows=np.array([c for c, _ in counts]),
+        num_flows=np.array([f for _, f in counts]),
+        steps=eres.events * eres.cct.shape[0], wall_seconds=wall,
+        compile_seconds=compile_s, scenario=sc, traces=row_traces,
+        params_rows=params_rows)
+
+
+__all__ = ["Scenario", "Result", "run", "resolve_traces",
+           "MECHANISM_KEYS"]

@@ -1,0 +1,541 @@
+"""Online scheduling sessions: `submit` / `advance` / `poll`.
+
+Offline `repro.api.run` replays traces whose arrivals are known up
+front. Real coflow schedulers are *incremental* — Saath's Fig. 7 tick,
+Philae's online ordering, DCoflow's deadline admission all consume
+arrivals as they happen — so `SaathSession` exposes the same Fig. 7
+coordinator as an open-loop service:
+
+* ``submit(coflows)`` registers new coflows at the current session
+  clock (each `Coflow.arrival` may also name a future instant);
+* ``advance(dt)`` moves the session clock and schedules every δ-grid
+  tick up to it;
+* ``poll()`` returns (and retires) the coflows that completed since the
+  last poll;
+* ``plan_tick()`` runs ONE coordinator tick in *wave-planning* mode
+  (admitted coflows complete instantly) — the mode
+  `runtime.coflow_bridge.plan_waves` is a thin client of.
+
+Two backends share the session contract (DESIGN.md §7):
+
+* ``backend="jax"`` — the tentpole path: live coflows are packed into a
+  persistent padded device slab (a `TraceBatch` whose capacities only
+  ever grow geometrically, freed rows recycled on re-pack), and
+  `advance` re-enters the jitted `fabric.jax_engine` tick scan with a
+  traced horizon cap, so one compiled chunk executable serves every
+  advance of a long-running session;
+* ``backend="numpy"`` — the event-driven host reference (the parity
+  oracle), sharing `fabric.engine.integrate_interval` with the offline
+  `Simulator` so the two loops cannot drift.
+
+Incremental replay is exact: the δ grid is pinned at the session epoch
+(t=0), ticks at or past the advance horizon are pure no-ops, and the
+schedule at a tick is only ever evaluated once every arrival at or
+before it has been submitted — so feeding a trace's coflows in at their
+arrival times reproduces the offline `run()` CCTs (tested to 1%).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.coflow import Coflow, Flow, Trace
+from repro.core.params import SchedulerParams
+from repro.fabric.state import FlowTable
+
+
+@dataclasses.dataclass
+class CompletedCoflow:
+    """One finished coflow, as returned (once) by `poll`."""
+    handle: int
+    arrival: float
+    cct: float              # seconds, arrival-relative
+    fct: np.ndarray         # absolute per-flow completion times
+
+
+@dataclasses.dataclass
+class _Entry:
+    """Host mirror of one live coflow's dynamic state (the carry that
+    survives slab re-packs)."""
+    handle: int
+    arrival: float
+    rank: int               # session-global FIFO rank (submission order)
+    src: np.ndarray
+    dst: np.ndarray
+    size: np.ndarray
+    sent: np.ndarray
+    done: np.ndarray
+    fct: np.ndarray         # absolute, NaN until done
+    rate: np.ndarray = None  # numpy backend: last schedule's rates
+    queue: int = -1
+    deadline: float = math.inf
+    running: bool = False
+    finished: bool = False
+    cct: float = math.nan
+
+
+class SaathSession:
+    """An online Saath coordinator over a fixed fabric.
+
+    `params` are the paper's scheduler knobs; `num_ports` fixes the
+    fabric (uniform `params.port_bw` per port). `mechanisms` takes the
+    shared ablation switch names (`repro.api.MECHANISM_KEYS`).
+    """
+
+    def __init__(self, params: Optional[SchedulerParams] = None, *,
+                 num_ports: int, backend: str = "jax",
+                 mechanisms: Optional[dict] = None,
+                 fidelity: str = "flow", kernel: Optional[str] = None,
+                 chunk: int = 32, min_coflow_capacity: int = 16,
+                 min_flow_capacity: int = 64):
+        if backend not in ("jax", "numpy"):
+            raise ValueError(
+                f"unknown backend {backend!r}; available: jax, numpy")
+        from repro.api.scenario import MECHANISM_KEYS
+
+        mech = dict(mechanisms or {})
+        unknown = set(mech) - set(MECHANISM_KEYS)
+        if unknown:
+            raise ValueError(
+                f"unknown mechanism switches {sorted(unknown)}; "
+                f"available: {', '.join(MECHANISM_KEYS)}")
+        self.params = params or SchedulerParams()
+        if "dynamics_requeue" in mech:
+            self.params = dataclasses.replace(
+                self.params, dynamics_requeue=mech["dynamics_requeue"])
+        if "work_conservation" in mech:
+            self.params = dataclasses.replace(
+                self.params, work_conservation=mech["work_conservation"])
+        self.num_ports = int(num_ports)
+        self.backend = backend
+        self.kernel = kernel
+        self.chunk = int(chunk)
+
+        self._clock = 0.0       # continuous session time
+        self._tick = 0          # δ-grid ticks already scheduled
+        self._seq = 0           # next handle / global FIFO rank
+        self._live: Dict[int, _Entry] = {}
+        self._slots: List[_Entry] = []      # slab slot order
+        self._tb_dirty = True   # membership changed -> re-pack
+        self._state_dirty = True  # dynamic state changed host-side
+
+        if backend == "jax":
+            from repro.fabric import jax_engine
+
+            self._je = jax_engine
+            self._ep = jax_engine.EngineParams.from_scheduler(
+                self.params,
+                work_conservation=mech.get("work_conservation"),
+                dynamics_requeue=mech.get("dynamics_requeue"),
+                lcof=mech.get("lcof", True),
+                per_flow_threshold=mech.get("per_flow_threshold", True))
+            self._features = jax_engine.features_for(
+                self.params, fidelity=fidelity,
+                dynamics_requeue=mech.get("dynamics_requeue"),
+                lcof=mech.get("lcof", True),
+                per_flow_threshold=mech.get("per_flow_threshold", True))
+            self._C_cap = int(min_coflow_capacity)
+            self._F_cap = int(min_flow_capacity)
+            self._tb = None
+            self._state = None
+            self._flow_lo = self._flow_hi = None
+        else:
+            from repro.core.policies import make_policy
+            from repro.fabric.engine import Simulator
+
+            pol_kw = {k: mech[k] for k in ("lcof", "per_flow_threshold",
+                                           "work_conservation")
+                      if k in mech}
+            self._policy = make_policy("saath", self.params, **pol_kw)
+            self._sim = Simulator(self.params)
+            self._table: Optional[FlowTable] = None
+            # a schedule whose event horizon extends past the last
+            # advance target: (evaluation instant, next-event instant).
+            # Resuming continues THIS interval instead of re-evaluating,
+            # so the incremental replay is event-for-event the offline
+            # Simulator loop (exact, not just 1%-close).
+            self._pending: "tuple[float, float] | None" = None
+
+    # ---- public surface --------------------------------------------------
+
+    @property
+    def now(self) -> float:
+        return self._clock
+
+    @property
+    def num_live(self) -> int:
+        return len(self._live)
+
+    def submit(self, coflows: Sequence[Coflow]) -> List[int]:
+        """Register coflows; returns their session handles. A coflow's
+        `arrival` below the current clock is clamped to it (the
+        coordinator cannot schedule the past)."""
+        handles = []
+        for cf in coflows:
+            src = np.array([f.src for f in cf.flows], np.int32)
+            dst = np.array([f.dst for f in cf.flows], np.int32)
+            size = np.array([f.size for f in cf.flows], np.float64)
+            if src.size == 0:
+                raise ValueError("coflow needs at least one flow")
+            ports = np.concatenate([src, dst])
+            if ((ports < 0) | (ports >= self.num_ports)).any():
+                raise ValueError(
+                    f"flow port out of range for the {self.num_ports}-"
+                    f"port fabric")
+            w = src.size
+            e = _Entry(
+                handle=self._seq, arrival=max(float(cf.arrival),
+                                              self._clock),
+                rank=self._seq, src=src, dst=dst, size=size,
+                sent=np.zeros(w), done=np.zeros(w, bool),
+                fct=np.full(w, np.nan), rate=np.zeros(w))
+            self._live[e.handle] = e
+            handles.append(e.handle)
+            self._seq += 1
+        self._tb_dirty = True
+        return handles
+
+    def advance(self, dt: float) -> float:
+        """Move the session clock by `dt` seconds, scheduling every
+        δ-grid tick up to it; returns the new clock."""
+        if dt < 0:
+            raise ValueError("advance(dt) needs dt >= 0")
+        self._clock += float(dt)
+        n_end = int(math.floor(self._clock / self.params.delta + 1e-9))
+        if self.backend == "jax":
+            self._advance_jax(n_end)
+        else:
+            self._advance_numpy(n_end)
+        return self._clock
+
+    def poll(self) -> List[CompletedCoflow]:
+        """Completed-since-last-poll coflows; retiring them frees their
+        slab rows for recycling at the next re-pack."""
+        out = []
+        for h in list(self._live):
+            e = self._live[h]
+            if e.finished:
+                out.append(CompletedCoflow(handle=h, arrival=e.arrival,
+                                           cct=float(e.cct),
+                                           fct=e.fct.copy()))
+                del self._live[h]
+                self._tb_dirty = True
+        return out
+
+    def drain(self, max_seconds: float = 3600.0,
+              step: float = 1.0) -> List[CompletedCoflow]:
+        """Advance until every submitted coflow has completed (or
+        `max_seconds` of virtual time pass); returns all completions."""
+        out = self.poll()
+        spent = 0.0
+        while self._live and spent < max_seconds:
+            self.advance(step)
+            spent += step
+            out += self.poll()
+        if self._live:
+            raise RuntimeError(
+                f"{len(self._live)} coflows unfinished after "
+                f"{max_seconds}s of virtual time")
+        return out
+
+    def plan_tick(self) -> List[int]:
+        """One coordinator tick in wave-planning mode: the admitted
+        coflows complete instantly (an SPMD collective is indivisible —
+        issuing it IS completing it for planning purposes) and their
+        handles are returned; the clock moves one δ."""
+        before = self._tick
+        admitted = self._planned_admissions()
+        # jax backend: session_plan_tick already advanced the device
+        # tick (synced back); numpy (and the no-live early-out) has not
+        self._tick = max(self._tick, before + 1)
+        self._clock = max(self._clock, self._tick * self.params.delta)
+        self.complete(admitted)
+        return admitted
+
+    def complete(self, handles: Sequence[int]) -> None:
+        """Force-complete coflows at the current clock (wave planning /
+        external cancellation)."""
+        now = self._clock
+        for h in handles:
+            e = self._live[h]
+            if e.finished:
+                continue
+            e.sent[:] = e.size
+            e.done[:] = True
+            e.fct[:] = now
+            e.finished = True
+            e.cct = now - e.arrival
+        self._state_dirty = True
+        if self.backend == "numpy":
+            self._pending = None      # the stored schedule is stale now
+        if self.backend == "numpy" and self._table is not None \
+                and not self._tb_dirty:
+            # mutate the live table in place (no re-pack needed)
+            for h in handles:
+                i = self._slots.index(self._live[h])
+                lo, hi = (self._table.flow_lo[i], self._table.flow_hi[i])
+                self._table.sent[lo:hi] = self._table.size[lo:hi]
+                self._table.done[lo:hi] = True
+                self._table.fct[lo:hi] = now
+                self._table.finished[i] = True
+                self._table.active[i] = False
+                self._table.cct[i] = now - self._table.arrival[i]
+            self._state_dirty = False
+
+    def _rebuild_table(self) -> FlowTable:
+        """Re-materialize the live coflows (slot order = submission
+        order) as a fresh FlowTable — the shared first step of both
+        backends' re-pack paths."""
+        self._slots = list(self._live.values())
+        coflows = [Coflow(cid=i, arrival=e.arrival,
+                          flows=[Flow(0, int(s), int(d), float(z))
+                                 for s, d, z in zip(e.src, e.dst,
+                                                    e.size)])
+                   for i, e in enumerate(self._slots)]
+        return FlowTable.from_trace(
+            Trace(num_ports=self.num_ports, coflows=coflows),
+            self.params.port_bw)
+
+    # ---- jax backend: the persistent device slab -------------------------
+
+    def _ensure_slab(self) -> None:
+        import jax.numpy as jnp
+
+        from repro.core import jax_coordinator as jc
+        from repro.fabric.jax_engine import EngineState
+        from repro.traces.batch import pack
+
+        if self._tb_dirty:
+            table = self._rebuild_table()
+            need_c = len(self._slots)
+            need_f = sum(e.size.size for e in self._slots)
+            while self._C_cap < need_c:
+                self._C_cap *= 2
+            while self._F_cap < need_f:
+                self._F_cap *= 2
+            tb = pack([table], flow_capacity=self._F_cap,
+                      coflow_capacity=self._C_cap,
+                      port_capacity=self.num_ports)
+            # FIFO order must be session-global: overwrite the per-pack
+            # arrival argsort with the global submission ranks
+            tb.arrival_rank[0, :need_c] = [e.rank for e in self._slots]
+            self._tb = tb
+            self._flow_lo = table.flow_lo.copy()
+            self._flow_hi = table.flow_hi.copy()
+            self._tb_dirty = False
+            self._state_dirty = True
+
+        if self._state_dirty:
+            tb = self._tb
+            C, F = tb.max_coflows, tb.max_flows
+            sent = np.zeros((1, F), np.float32)
+            done = ~tb.flow_valid.copy()
+            fct = np.zeros((1, F), np.float32)
+            finished = ~tb.coflow_valid.copy()
+            cct = np.full((1, C), np.nan, np.float32)
+            queue = np.full((1, C), -1, np.int32)
+            deadline = np.full((1, C), np.inf, np.float32)
+            running = np.zeros((1, C), bool)
+            for i, e in enumerate(self._slots):
+                lo, hi = self._flow_lo[i], self._flow_hi[i]
+                sent[0, lo:hi] = e.sent
+                done[0, lo:hi] = e.done
+                fct[0, lo:hi] = np.where(e.done,
+                                         np.nan_to_num(e.fct), 0.0)
+                finished[0, i] = e.finished
+                cct[0, i] = e.cct
+                queue[0, i] = e.queue
+                deadline[0, i] = e.deadline
+                running[0, i] = e.running
+            self._state = EngineState(
+                coord=jc.CoordState(jnp.asarray(queue),
+                                    jnp.asarray(deadline),
+                                    jnp.asarray(running)),
+                sent=jnp.asarray(sent), done=jnp.asarray(done),
+                fct=jnp.asarray(fct), finished=jnp.asarray(finished),
+                cct=jnp.asarray(cct),
+                t0=jnp.zeros((1,), jnp.float32),
+                tick=jnp.full((1,), self._tick, jnp.int32))
+            self._state_dirty = False
+
+    def _sync_from_device(self) -> None:
+        s = self._state
+        sent = np.asarray(s.sent, np.float64)[0]
+        done = np.asarray(s.done)[0]
+        fct = np.asarray(s.fct, np.float64)[0]
+        finished = np.asarray(s.finished)[0]
+        cct = np.asarray(s.cct, np.float64)[0]
+        queue = np.asarray(s.coord.queue)[0]
+        deadline = np.asarray(s.coord.deadline, np.float64)[0]
+        running = np.asarray(s.coord.running)[0]
+        for i, e in enumerate(self._slots):
+            lo, hi = self._flow_lo[i], self._flow_hi[i]
+            e.sent = sent[lo:hi].copy()
+            e.done = done[lo:hi].copy()
+            e.fct = np.where(e.done, fct[lo:hi], np.nan)
+            e.finished = bool(finished[i])
+            e.cct = float(cct[i])
+            e.queue = int(queue[i])
+            e.deadline = float(deadline[i])
+            e.running = bool(running[i])
+        self._tick = int(np.asarray(s.tick)[0])
+
+    def _advance_jax(self, n_end: int) -> None:
+        if n_end <= self._tick:
+            return
+        if not self._live:
+            self._tick = n_end
+            return
+        self._ensure_slab()
+        self._state, _ = self._je.session_advance(
+            self._state, self._tb, self._ep, n_end=n_end,
+            chunk=self.chunk, kernel=self.kernel,
+            features=self._features)
+        self._sync_from_device()
+
+    # ---- numpy backend: incremental event-driven reference ---------------
+
+    def _ensure_table(self) -> None:
+        if not self._tb_dirty:
+            return
+        table = self._rebuild_table()
+        # restore carried-over dynamic + coordinator state
+        self._policy.reset(table)
+        for i, e in enumerate(self._slots):
+            lo, hi = table.flow_lo[i], table.flow_hi[i]
+            table.sent[lo:hi] = e.sent
+            table.done[lo:hi] = e.done
+            table.fct[lo:hi] = e.fct
+            table.rate[lo:hi] = e.rate
+            table.finished[i] = e.finished
+            table.cct[i] = e.cct
+            self._policy._queue[i] = e.queue
+            self._policy._deadline[i] = e.deadline
+            self._policy._running[i] = e.running
+        self._table = table
+        self._tb_dirty = False
+        self._state_dirty = False
+
+    def _sync_from_table(self) -> None:
+        t = self._table
+        for i, e in enumerate(self._slots):
+            lo, hi = t.flow_lo[i], t.flow_hi[i]
+            e.sent = t.sent[lo:hi].copy()
+            e.done = t.done[lo:hi].copy()
+            e.fct = t.fct[lo:hi].copy()
+            e.rate = t.rate[lo:hi].copy()
+            e.finished = bool(t.finished[i])
+            e.cct = float(t.cct[i])
+            e.queue = int(self._policy._queue[i])
+            e.deadline = float(self._policy._deadline[i])
+            e.running = bool(self._policy._running[i])
+
+    def _advance_numpy(self, n_end: int) -> None:
+        if n_end <= self._tick:
+            return
+        if not self._live:
+            self._tick = n_end
+            return
+        self._ensure_table()
+        from repro.fabric.engine import _quantize_up, integrate_interval
+
+        table, pol, p = self._table, self._policy, self.params
+        now = self._tick * p.delta
+        target = n_end * p.delta
+        eps = 1e-12
+        guard = 0
+        while now < target - eps:
+            guard += 1
+            if guard > self._sim.max_steps:
+                raise RuntimeError("session exceeded max_steps")
+
+            # resume a schedule interval a previous advance capped: keep
+            # integrating the STORED rates to its event horizon (or to a
+            # since-submitted arrival's tick — a discrete event the
+            # offline loop would have stopped at) before re-evaluating.
+            # This keeps the evaluation instants — and with them the
+            # §4.3 drift re-queues and max_jump cadence — exactly the
+            # offline Simulator's.
+            if self._pending is not None:
+                t_eval, t_next = self._pending
+                if t_next <= now + eps:
+                    self._pending = None
+                    continue
+                stop_ev = t_next
+                late = table.arrival[table.arrival > t_eval + eps]
+                if late.size:
+                    stop_ev = min(stop_ev, max(
+                        _quantize_up(float(late.min()), p.delta),
+                        t_eval + p.delta))
+                if stop_ev <= now + eps:
+                    self._pending = None
+                    continue
+                stop = min(stop_ev, target)
+                self._sim._activate(table, t_eval)
+                integrate_interval(table, table.rate.copy(),
+                                   table.flow_live(), now, stop)
+                now = stop
+                if stop >= stop_ev - eps:
+                    self._pending = None
+                continue
+
+            self._sim._activate(table, now)
+            if table.finished.all():
+                now = target
+                break
+            live = table.flow_live()
+            future = table.arrival[table.arrival > now + eps]
+            next_arrival = float(future.min()) if future.size \
+                else math.inf
+            if not live.any():
+                now = target if math.isinf(next_arrival) else \
+                    min(_quantize_up(next_arrival, p.delta), target)
+                continue
+            rates = pol.schedule(table, now)
+            t_ev = self._sim._next_event(table, pol, now, rates,
+                                         next_arrival)
+            if math.isinf(t_ev):
+                raise RuntimeError(
+                    f"session deadlock at t={now:.3f}: no rates, no "
+                    f"events ({int(live.sum())} live flows)")
+            t_next = max(_quantize_up(t_ev, p.delta), now + p.delta)
+            stop = min(t_next, target)
+            integrate_interval(table, rates, live, now, stop)
+            if stop < t_next - eps:
+                self._pending = (now, t_next)
+            now = stop
+        self._tick = n_end
+        self._sync_from_table()
+
+    # ---- wave planning ---------------------------------------------------
+
+    def _planned_admissions(self) -> List[int]:
+        live = [e for e in self._live.values() if not e.finished]
+        if not live:
+            return []
+        now = self._tick * self.params.delta
+        if self.backend == "jax":
+            self._ensure_slab()
+            self._state, admitted = self._je.session_plan_tick(
+                self._state, self._tb, self._ep, kernel=self.kernel,
+                features=self._features)
+            adm = np.asarray(admitted)[0]
+            self._sync_from_device()
+            return [e.handle for i, e in enumerate(self._slots)
+                    if adm[i] and not e.finished]
+        self._ensure_table()
+        self._pending = None          # planning re-evaluates every tick
+        table, pol = self._table, self._policy
+        self._sim._activate(table, now)
+        rates = pol.schedule(table, now)
+        out = [e.handle for i, e in enumerate(self._slots)
+               if not e.finished
+               and rates[table.flow_lo[i]:table.flow_hi[i]].max() > 0]
+        self._sync_from_table()
+        return out
+
+
+__all__ = ["SaathSession", "CompletedCoflow"]

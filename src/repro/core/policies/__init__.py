@@ -17,9 +17,57 @@ REGISTRY = {
     "uc-tcp": UCTCP,
 }
 
+# Policies whose Fig. 7 tick also exists as the jitted XLA plane
+# (core.jax_coordinator / fabric.jax_engine): "saath" and its
+# tick-at-a-time wrapper resolve to the SAME algorithm on both engines,
+# so `repro.api.Scenario(policy="saath")` is engine-portable; every
+# other registry entry is host-only.
+JAX_ENGINE_POLICIES = frozenset({"saath", "saath-jax"})
+
+
+def available(engine: str = "numpy") -> list:
+    """Policy names runnable on `engine` ('numpy' = host reference
+    simulator, 'jax' = batched XLA fleet engine), sorted."""
+    names = REGISTRY if engine == "numpy" else JAX_ENGINE_POLICIES
+    return sorted(names)
+
 
 def make_policy(name: str, params, **kw) -> Policy:
-    return REGISTRY[name](params, **kw)
+    """Instantiate a registered policy; unknown names raise with the
+    available list (the single name registry both planes resolve
+    through)."""
+    try:
+        cls = REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; available: "
+            f"{', '.join(sorted(REGISTRY))}") from None
+    return cls(params, **kw)
+
+
+def resolve_policy(name: str, engine: str) -> str:
+    """Validate `name` for `engine` and return its canonical name.
+
+    Both planes resolve through the one REGISTRY: on the jax engine the
+    saath family maps onto the jitted coordinator (canonically "saath");
+    host-only policies raise with the jax-capable list, unknown names
+    raise with the full list.
+    """
+    if name not in REGISTRY:
+        raise ValueError(
+            f"unknown policy {name!r}; available: "
+            f"{', '.join(sorted(REGISTRY))}")
+    if engine == "jax":
+        if name not in JAX_ENGINE_POLICIES:
+            raise ValueError(
+                f"policy {name!r} has no jitted implementation; "
+                f"engine='jax' supports: "
+                f"{', '.join(sorted(JAX_ENGINE_POLICIES))} "
+                f"(use engine='numpy' for the host reference)")
+        return "saath"
+    return name
+
 
 __all__ = ["Policy", "Saath", "SaathJax", "Aalo", "CoordinatedFifo", "SCF",
-           "SRTF", "LWTF", "VarysSEBF", "UCTCP", "REGISTRY", "make_policy"]
+           "SRTF", "LWTF", "VarysSEBF", "UCTCP", "REGISTRY", "make_policy",
+           "JAX_ENGINE_POLICIES", "available", "resolve_policy"]

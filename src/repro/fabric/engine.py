@@ -37,7 +37,11 @@ class SimResult:
     sched_seconds: float  # host time spent inside policy.schedule
     makespan: float       # last ABSOLUTE flow completion time (not a
     #                       CCT — CCTs are arrival-relative durations);
-    #                       0.0 when no flow finished
+    #                       NaN when no flow finished — the same
+    #                       "nothing completed" value the jax plane and
+    #                       the repro.api.Result normalizer report, so
+    #                       an empty replay can't masquerade as a
+    #                       zero-second one
 
     @property
     def cct(self) -> np.ndarray:
@@ -45,12 +49,49 @@ class SimResult:
 
     @property
     def avg_cct(self) -> float:
-        return float(np.nanmean(self.table.cct))
+        """Mean CCT over finished coflows; NaN when none finished (no
+        all-NaN RuntimeWarning), matching the jax plane's semantics."""
+        from repro.fabric.metrics import nan_row_mean
+
+        return float(nan_row_mean(self.table.cct[None, :])[0])
 
 
 def _quantize_up(t: float, delta: float) -> float:
     k = math.ceil(t / delta - 1e-9)
     return k * delta
+
+
+def integrate_interval(table: FlowTable, rates: np.ndarray,
+                       live: np.ndarray, now: float,
+                       t_next: float) -> None:
+    """Advance `table` at constant `rates` across [now, t_next): record
+    exact (algebraic) flow completion instants, first-schedule times,
+    and coflow completions (CCT = last FCT - arrival). Shared by
+    `Simulator.run` and the online `repro.api.SaathSession` numpy
+    backend so the two replay loops cannot drift."""
+    served = live & (rates > 0)
+    table.first_sched[served & np.isnan(table.first_sched)] = now
+
+    adv = rates * (t_next - now)
+    rem = table.size - table.sent
+    fin = live & (adv >= rem - 1e-9) & (rates > 0)
+    if fin.any():
+        table.fct[fin] = now + rem[fin] / rates[fin]
+        table.done[fin] = True
+        table.sent[fin] = table.size[fin]
+    grow = live & ~fin
+    table.sent[grow] = np.minimum(table.size[grow],
+                                  table.sent[grow] + adv[grow])
+    table.rate[:] = rates
+
+    if fin.any():
+        for c in np.unique(table.cid[fin]):
+            lo, hi = table.flow_lo[c], table.flow_hi[c]
+            if table.done[lo:hi].all() and not table.finished[c]:
+                table.finished[c] = True
+                table.active[c] = False
+                last = float(np.nanmax(table.fct[lo:hi]))
+                table.cct[c] = last - table.arrival[c]
 
 
 class Simulator:
@@ -98,7 +139,7 @@ class Simulator:
 
         arrivals = np.sort(np.unique(table.arrival))
         if arrivals.size == 0:
-            return SimResult(table, 0, 0.0, 0.0, 0.0)
+            return SimResult(table, 0, 0.0, 0.0, float("nan"))
         now = _quantize_up(float(arrivals[0]), p.delta)
         steps = 0
 
@@ -124,39 +165,13 @@ class Simulator:
             sched_s += time.perf_counter() - s0
             steps += 1
 
-            served = live & (rates > 0)
-            table.first_sched[served & np.isnan(table.first_sched)] = now
-
             t_ev = self._next_event(table, policy, now, rates, next_arrival)
             if math.isinf(t_ev):
                 raise RuntimeError(
                     f"simulator deadlock at t={now:.3f}: no rates, no events "
                     f"({int(live.sum())} live flows)")
             t_next = max(_quantize_up(t_ev, p.delta), now + p.delta)
-            dt = t_next - now
-
-            # advance flows; record exact completion instants
-            adv = rates * dt
-            rem = table.size - table.sent
-            fin = live & (adv >= rem - 1e-9) & (rates > 0)
-            if fin.any():
-                table.fct[fin] = now + rem[fin] / rates[fin]
-                table.done[fin] = True
-                table.sent[fin] = table.size[fin]
-            grow = live & ~fin
-            table.sent[grow] = np.minimum(table.size[grow],
-                                          table.sent[grow] + adv[grow])
-            table.rate[:] = rates
-
-            # coflow completions: CCT = last FCT - arrival
-            if fin.any():
-                for c in np.unique(table.cid[fin]):
-                    lo, hi = table.flow_lo[c], table.flow_hi[c]
-                    if table.done[lo:hi].all() and not table.finished[c]:
-                        table.finished[c] = True
-                        table.active[c] = False
-                        last = float(np.nanmax(table.fct[lo:hi]))
-                        table.cct[c] = last - table.arrival[c]
+            integrate_interval(table, rates, live, now, t_next)
             now = t_next
         else:
             raise RuntimeError("simulator exceeded max_steps")
@@ -164,7 +179,7 @@ class Simulator:
         # last absolute FCT; guard the all-NaN case (nothing finished)
         # instead of letting np.nanmax emit a RuntimeWarning
         fin_fct = table.fct[np.isfinite(table.fct)]
-        makespan = float(fin_fct.max()) if fin_fct.size else 0.0
+        makespan = float(fin_fct.max()) if fin_fct.size else float("nan")
         return SimResult(table, steps, time.perf_counter() - t0, sched_s,
                          makespan)
 
@@ -172,7 +187,11 @@ class Simulator:
 def simulate(trace, policy_name: str, params: Optional[SchedulerParams] = None,
              *, policy_kwargs: Optional[dict] = None,
              max_jump: Optional[float] = None) -> SimResult:
-    """One-call convenience: trace + policy name -> SimResult."""
+    """One-call convenience: trace + policy name -> SimResult.
+
+    Deprecated front door (kept as a shim for one PR): new code should
+    go through `repro.api.run(Scenario(...))`, which normalizes results
+    across both engines."""
     from repro.core.policies import make_policy
 
     params = params or SchedulerParams()

@@ -100,8 +100,16 @@ class EngineResult(NamedTuple):
 
     @property
     def avg_cct(self) -> np.ndarray:
-        """(B,) mean CCT per trace over its real coflows."""
-        return np.nanmean(self.cct, axis=1)
+        """(B,) mean CCT per trace over its real coflows.
+
+        A row with no finished real coflows (e.g. an all-padding session
+        slab row) reports NaN — the "nothing completed" value of the
+        `repro.api.Result` normalizer — instead of tripping numpy's
+        all-NaN RuntimeWarning.
+        """
+        from repro.fabric.metrics import nan_row_mean
+
+        return nan_row_mean(self.cct)
 
 
 # ---- single-trace tick ---------------------------------------------------
@@ -158,32 +166,13 @@ def _segment_max(data: jax.Array, tb: TraceBatch) -> jax.Array:
     return jnp.where(tb.coflow_valid, v[tb.flow_hi - 1], 0.0)
 
 
-def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
-          kernel: Optional[str], *, per_flow_wc: bool = True,
-          with_dynamics: bool = True,
-          with_ablations: bool = False) -> EngineState:
-    """Advance one *event step*: schedule at the current δ tick, find the
-    next instant the schedule could change (arrival, flow completion,
-    queue-threshold crossing, starvation deadline — the reference
-    simulator's event list), quantize it UP to the δ grid, and integrate
-    the constant rates across the jumped interval. Between those events
-    the Fig. 7 schedule is a fixed point of unchanged state, so skipping
-    the intermediate ticks reproduces the per-tick trajectory exactly.
-
-    The three keyword flags are STATIC structure switches (resolved
-    host-side, not traced): `per_flow_wc` selects the exact per-flow
-    work-conservation fill vs the cheaper coflow-granular one,
-    `with_dynamics` builds the §4.3 finished-flow-median machinery, and
-    `with_ablations` builds the total-bytes queue inputs/events for the
-    Fig. 10 per_flow_threshold=0 path. Turning one off removes its cost
-    from the compiled step entirely.
-    """
-    C = tb.arrival.shape[0]
-    delta = ep.delta
-    tickf = state.tick.astype(jnp.float32)
-    now = state.t0 + tickf * delta
-    eps_t = 1e-3 * delta
-
+def _views(state: EngineState, tb: TraceBatch, now: jax.Array,
+           eps_t: jax.Array, *, per_flow_wc: bool, with_dynamics: bool,
+           with_ablations: bool):
+    """One tick's coordinator view of the slab: activation, per-(coflow,
+    port) live counts, Eq. 1 m_c, and (when compiled in) the §4.3
+    finished-flow-median inputs — shared by the scanned `_tick` and the
+    single-shot session `plan_tick`."""
     # activation (reference: arrival <= now + eps, eps << δ)
     active = tb.coflow_valid & ~state.finished & (tb.arrival <= now + eps_t)
     live = active[tb.cid] & ~state.done & tb.flow_valid
@@ -232,6 +221,46 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
                            total=total, mixed=mixed, m_dyn=m_dyn)
     flows = jc.FlowView(cid=tb.cid, src=tb.src, dst=tb.dst, live=live) \
         if per_flow_wc else None
+    return batch, flows, active, live, livef
+
+
+def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
+          kernel: Optional[str], *, per_flow_wc: bool = True,
+          with_dynamics: bool = True,
+          with_ablations: bool = False,
+          n_end: Optional[jax.Array] = None) -> EngineState:
+    """Advance one *event step*: schedule at the current δ tick, find the
+    next instant the schedule could change (arrival, flow completion,
+    queue-threshold crossing, starvation deadline — the reference
+    simulator's event list), quantize it UP to the δ grid, and integrate
+    the constant rates across the jumped interval. Between those events
+    the Fig. 7 schedule is a fixed point of unchanged state, so skipping
+    the intermediate ticks reproduces the per-tick trajectory exactly.
+
+    The three keyword flags are STATIC structure switches (resolved
+    host-side, not traced): `per_flow_wc` selects the exact per-flow
+    work-conservation fill vs the cheaper coflow-granular one,
+    `with_dynamics` builds the §4.3 finished-flow-median machinery, and
+    `with_ablations` builds the total-bytes queue inputs/events for the
+    Fig. 10 per_flow_threshold=0 path. Turning one off removes its cost
+    from the compiled step entirely.
+
+    `n_end` (traced, sessions only) caps the replay at tick index
+    `n_end`: the jump never passes it, and once `tick >= n_end` the step
+    is an exact no-op (the whole new state is discarded), so an online
+    `SaathSession` can advance to a wall-clock horizon, accept new
+    arrivals, and re-enter the scan without ever having scheduled a tick
+    that couldn't yet see them. `None` (offline replay) compiles the cap
+    out.
+    """
+    delta = ep.delta
+    tickf = state.tick.astype(jnp.float32)
+    now = state.t0 + tickf * delta
+    eps_t = 1e-3 * delta
+    batch, flows, active, live, livef = _views(
+        state, tb, now, eps_t, per_flow_wc=per_flow_wc,
+        with_dynamics=with_dynamics, with_ablations=with_ablations)
+    total = batch.total
     coord, out = jc.tick_core(state.coord, batch, now, ep.dp,
                               kernel=kernel, flows=flows)
     # per-flow rates: MADD equal rate for admitted coflows + the work-
@@ -277,6 +306,8 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
                      jnp.ceil((t_ev - state.t0) / delta - 1e-4),
                      tickf + jump)
     n_next = jnp.clip(n_ev, tickf + 1.0, tickf + jump)
+    if n_end is not None:
+        n_next = jnp.minimum(n_next, jnp.maximum(n_end, tickf + 1.0))
     dt = (n_next - tickf) * delta
 
     # ---- integrate the constant rates over [now, now + dt) -----------
@@ -295,10 +326,19 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     last_fct = _segment_max(fct * tb.flow_valid, tb)
     cct = jnp.where(newly, last_fct - tb.arrival, state.cct)
 
-    return EngineState(coord=coord, sent=sent, done=done, fct=fct,
-                       finished=state.finished | newly, cct=cct,
-                       t0=state.t0, tick=state.tick + (n_next - tickf)
-                       .astype(jnp.int32))
+    new = EngineState(coord=coord, sent=sent, done=done, fct=fct,
+                      finished=state.finished | newly, cct=cct,
+                      t0=state.t0, tick=state.tick + (n_next - tickf)
+                      .astype(jnp.int32))
+    if n_end is None:
+        return new
+    # at/past the horizon the step must be a PURE no-op: the schedule at
+    # tick n_end is evaluated on the NEXT advance, when every arrival
+    # submitted at <= n_end*δ is already in the slab — evaluating it now
+    # would bake deadlines/queues that ignore those arrivals.
+    can = tickf < n_end
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(can, a, b), new, state)
 
 
 # ---- batched chunk runner ------------------------------------------------
@@ -307,12 +347,14 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     "chunk", "kernel", "sweep", "features"))
 def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
                *, chunk: int, kernel: Optional[str], sweep: bool,
-               features: tuple) -> EngineState:
+               features: tuple,
+               n_end: Optional[jax.Array] = None) -> EngineState:
     """Scan `chunk` ticks for every trace in the batch (one executable,
     reused across chunks so the host completion loop never recompiles).
     sweep=True maps the EngineParams' leading axis alongside the traces.
     `features` = (per_flow_wc, with_dynamics, with_ablations), the
-    static structure switches threaded to `_tick`.
+    static structure switches threaded to `_tick`. `n_end` (sessions)
+    caps every lane at that tick index — see `_tick`.
     """
     per_flow_wc, with_dynamics, with_ablations = features
 
@@ -321,7 +363,8 @@ def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
             return _tick(c, tb_row, ep_row, kernel,
                          per_flow_wc=per_flow_wc,
                          with_dynamics=with_dynamics,
-                         with_ablations=with_ablations), None
+                         with_ablations=with_ablations,
+                         n_end=n_end), None
         s, _ = jax.lax.scan(body, s, None, length=chunk)
         return s
 
@@ -366,6 +409,10 @@ def simulate_batch(traces: "Sequence | TraceBatch",
                    fidelity: str = "flow") -> EngineResult:
     """Replay a fleet of traces under one parameter setting.
 
+    Deprecated front door (kept as a shim for one PR): new code should
+    go through `repro.api.run(Scenario(..., engine="jax"))`, which owns
+    result normalization and the engine-equivalence contract.
+
     The mechanism switches default to the SchedulerParams fields
     (work_conservation / dynamics_requeue) or full SAATH (lcof /
     per_flow_threshold); pass explicit values for Fig. 10 ablations.
@@ -378,19 +425,17 @@ def simulate_batch(traces: "Sequence | TraceBatch",
     has finished (or `max_ticks` is exhausted, which raises — mirroring
     the reference simulator's max_steps guard).
     """
-    if fidelity not in ("flow", "coflow"):
-        raise ValueError(f"unknown fidelity {fidelity!r}")
     params = params or SchedulerParams()
+    features = features_for(
+        params, fidelity=fidelity, work_conservation=work_conservation,
+        dynamics_requeue=dynamics_requeue, lcof=lcof,
+        per_flow_threshold=per_flow_threshold)
     tb = traces if isinstance(traces, TraceBatch) else \
         pack(traces, port_bw=params.port_bw)
     ep = EngineParams.from_scheduler(
         params, work_conservation=work_conservation,
         dynamics_requeue=dynamics_requeue, lcof=lcof,
         per_flow_threshold=per_flow_threshold)
-    features = (fidelity == "flow",
-                params.dynamics_requeue if dynamics_requeue is None
-                else dynamics_requeue,
-                not (lcof and per_flow_threshold))
     return _drive(tb, ep, params.delta, max_ticks, chunk, kernel,
                   sweep=False, features=features)
 
@@ -400,6 +445,9 @@ def simulate_sweep(trace, params_list: Sequence[SchedulerParams], *,
                    kernel: Optional[str] = None,
                    fidelity: str = "flow") -> EngineResult:
     """Replay ONE trace under M parameter settings as one computation.
+
+    Deprecated front door (kept as a shim for one PR): prefer
+    `repro.api.run(Scenario(..., sweep=...))`.
 
     All settings must share num_queues (K is a static shape) and delta
     is taken per-setting — the scan length covers the smallest δ. The
@@ -460,10 +508,84 @@ def _drive(tb: TraceBatch, ep: EngineParams, delta: float,
                         events=events)
 
 
+# ---- online session support (repro.api.SaathSession) ---------------------
+
+def features_for(params: SchedulerParams, *, fidelity: str = "flow",
+                 work_conservation: "bool | None" = None,
+                 dynamics_requeue: "bool | None" = None,
+                 lcof: bool = True,
+                 per_flow_threshold: bool = True) -> tuple:
+    """The static `(per_flow_wc, with_dynamics, with_ablations)` structure
+    switches `_tick` compiles against, derived exactly as
+    `simulate_batch` derives them — shared with the online session so an
+    incremental replay runs the same compiled step structure."""
+    if fidelity not in ("flow", "coflow"):
+        raise ValueError(f"unknown fidelity {fidelity!r}")
+    return (fidelity == "flow",
+            params.dynamics_requeue if dynamics_requeue is None
+            else dynamics_requeue,
+            not (lcof and per_flow_threshold))
+
+
+def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
+                    *, n_end: int, chunk: int = 32,
+                    kernel: Optional[str] = None,
+                    features: tuple = (True, True, False),
+                    max_steps: int = 10_000_000):
+    """Re-enter the jitted tick scan on a live session slab until every
+    lane has reached δ-grid tick `n_end` or finished all its real
+    coflows. The horizon cap is traced (`_tick`'s `n_end`), so one
+    compiled chunk executable serves every advance; ticks at or past the
+    horizon are exact no-ops. Returns (state, event_steps_executed)."""
+    steps = 0
+    ne = jnp.float32(n_end)
+    while True:
+        ticks = np.asarray(state.tick)
+        fin = np.asarray(state.finished).all(axis=-1)
+        if bool(np.all((ticks >= n_end) | fin)):
+            break
+        state = _run_chunk(state, tb, ep, chunk=chunk, kernel=kernel,
+                           sweep=False, features=features, n_end=ne)
+        steps += chunk
+        if steps > max_steps:
+            raise RuntimeError(
+                f"session_advance exceeded {max_steps} event steps "
+                f"before reaching tick {n_end} (check the slab)")
+    return state, steps
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "features"))
+def session_plan_tick(state: EngineState, tb: TraceBatch,
+                      ep: EngineParams, *, kernel: Optional[str] = None,
+                      features: tuple = (True, False, False)):
+    """One coordinator tick on the slab WITHOUT integrating rates: the
+    wave-planning mode `runtime.coflow_bridge.plan_waves` uses (a wave =
+    the admitted set of one tick; the caller completes admitted coflows
+    instantly). Returns (state with post-tick coordinator carry and
+    tick+1, admitted (B, C) bool)."""
+    per_flow_wc, with_dynamics, with_ablations = features
+
+    def one(s, tb_row):
+        tickf = s.tick.astype(jnp.float32)
+        now = s.t0 + tickf * ep.delta
+        eps_t = 1e-3 * ep.delta
+        batch, flows, _, _, _ = _views(
+            s, tb_row, now, eps_t, per_flow_wc=per_flow_wc,
+            with_dynamics=with_dynamics, with_ablations=with_ablations)
+        coord, out = jc.tick_core(s.coord, batch, now, ep.dp,
+                                  kernel=kernel, flows=flows)
+        return s._replace(coord=coord, tick=s.tick + 1), out["admitted"]
+
+    return jax.vmap(one)(state, tb)
+
+
 def run_to_table(trace, params: Optional[SchedulerParams] = None, **kw):
     """Single-trace convenience: replay through the batched engine and
     write cct/fct/sent back into a FlowTable (for metrics helpers like
-    `fabric.metrics.bin_speedups` that consume tables)."""
+    `fabric.metrics.bin_speedups` that consume tables).
+
+    Deprecated front door (kept as a shim for one PR): prefer
+    `repro.api.run(...)` and `Result.table()`."""
     from repro.fabric.state import FlowTable
 
     params = params or SchedulerParams()
@@ -480,4 +602,5 @@ def run_to_table(trace, params: Optional[SchedulerParams] = None, **kw):
 
 
 __all__ = ["EngineParams", "EngineState", "EngineResult", "simulate_batch",
-           "simulate_sweep", "run_to_table", "default_max_ticks"]
+           "simulate_sweep", "run_to_table", "default_max_ticks",
+           "features_for", "session_advance", "session_plan_tick"]

@@ -14,6 +14,22 @@ from repro.fabric.state import FlowTable
 MB = 1024.0 * 1024.0
 
 
+def nan_row_mean(x: np.ndarray) -> np.ndarray:
+    """Row-wise mean over finite entries of a (B, N) array; NaN
+    (silently — no all-NaN RuntimeWarning) for rows with none.
+
+    THE one definition of "nothing completed" shared by
+    `repro.api.Result.avg_cct`, `SimResult.avg_cct` and
+    `EngineResult.avg_cct` — the NaN/padding contract lives in the
+    `repro.api` normalizer and every plane funnels through here.
+    """
+    x = np.asarray(x, float)
+    fin = np.isfinite(x)
+    cnt = fin.sum(axis=1)
+    tot = np.where(fin, x, 0.0).sum(axis=1)
+    return np.where(cnt > 0, tot / np.maximum(cnt, 1), np.nan)
+
+
 def percentile_speedup(cct_base: np.ndarray, cct_new: np.ndarray,
                        qs=(10, 50, 90)) -> dict:
     """Per-coflow speedup = CCT_base / CCT_new (Fig. 9's metric)."""

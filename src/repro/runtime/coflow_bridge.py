@@ -11,28 +11,28 @@ scheduler (DESIGN.md §2). Each pending collective is one COFLOW:
 
 Port model (TPU v5e): every chip has independent ICI links per torus
 axis, so two collectives contend iff they use the same (axis, chip-
-group) resource; DCN/host traffic uses distinct 'ports'. The planner
-runs the *same* Fig. 7 algorithm (numpy Saath on a FlowTable whose
-ports are (resource, chip) pairs) and emits WAVES: coflows admitted in
-the same tick are issued together (they share no contended resource);
-later waves are chained behind earlier ones with optimization barriers
-(runtime.overlap). All-or-none holds by construction: an SPMD
-collective is indivisible across its chips.
+group) resource; DCN/host traffic uses distinct 'ports'. The planner is
+a thin client of `repro.api.SaathSession` (DESIGN.md §7): collectives
+are submitted in dense arrival-rank order and each wave is one
+`plan_tick` — the session's wave-planning mode, in which the admitted
+(resource-disjoint, all-or-none) set completes instantly. Later waves
+are chained behind earlier ones with optimization barriers
+(runtime.overlap). ``backend="jax"`` (the default) runs the jitted
+coordinator on the session's device slab; ``backend="numpy"`` is the
+host reference, kept as the parity oracle — the two produce bitwise-
+identical wave orders (tests/test_runtime_bridge.py).
 
-Planning is static per train step (sizes known at trace time), replayed
-every step boundary — the paper's δ maps to the step interval (§2).
+Static per-step planning (sizes known at trace time) remains the
+default framework use; an open-loop *online* use of the same session
+(arrivals across steps) is demonstrated by examples/online_service.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
-import numpy as np
-
-from repro.core.coflow import Coflow, Flow, Trace
+from repro.core.coflow import Coflow, Flow
 from repro.core.params import SchedulerParams
-from repro.core.policies import make_policy
-from repro.fabric.state import FlowTable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,82 +48,81 @@ class CollectiveCoflow:
 RESOURCES = ("ici:data", "ici:model", "ici:pod", "dcn", "host")
 
 
+def collective_to_coflow(c: CollectiveCoflow, *, num_chips: int = 16,
+                         arrival: float = 0.0) -> Coflow:
+    """One collective as a Coflow on the (resource, chip) port grid: a
+    flow per involved chip on each of its resources, sized by the
+    per-chip bytes — so per-flow queue thresholds and LCoF act exactly
+    as in the paper (a 'wide' MoE a2a demotes faster than a thin DCN
+    upload)."""
+    res_index = {r: i for i, r in enumerate(RESOURCES)}
+    chips = c.chips or tuple(range(num_chips))
+    flows, fid = [], 0
+    for r in c.resources:
+        base = res_index[r] * num_chips
+        for ch in chips:
+            flows.append(Flow(fid, base + ch, base + ch,
+                              max(c.bytes, 1.0)))
+            fid += 1
+    return Coflow(cid=0, arrival=arrival, flows=flows)
+
+
+def bridge_params() -> SchedulerParams:
+    """Default fabric knobs for the collective plane (50 GB/s ICI-class
+    ports, 0.1 ms waves, 8 MB start threshold)."""
+    return SchedulerParams(port_bw=50e9, delta=1e-4,
+                           start_threshold=8 * 1024 * 1024)
+
+
 def plan_waves(coflows: Sequence[CollectiveCoflow], *,
                num_chips: int = 16,
-               params: SchedulerParams | None = None) -> List[List[str]]:
+               params: SchedulerParams | None = None,
+               backend: str = "jax") -> List[List[str]]:
     """Order collectives with the Saath coordinator; returns waves of
     coflow names (wave = admitted in the same coordinator tick).
 
-    The fabric model: one port per (resource, chip). A coflow's flows
-    cover its resource on every involved chip; sizes are the per-chip
-    bytes, so per-flow queue thresholds and LCoF act exactly as in the
-    paper (a 'wide' MoE a2a demotes faster than a thin DCN upload).
+    All-or-none holds by construction: an SPMD collective is
+    indivisible across its chips, so within a wave no two collectives
+    share a contended (resource, chip) port. Duplicate arrival ranks
+    are legal — e.g. two tenants both built with
+    grad_bucket_coflows(rank_offset=0) — and are densely renumbered
+    preserving (rank, submission) order before submission, so the
+    session's global FIFO ranks reproduce the intended order.
     """
     if not coflows:
         return []
-    params = params or SchedulerParams(
-        port_bw=50e9, delta=1e-4, start_threshold=8 * 1024 * 1024)
-    res_index = {r: i for i, r in enumerate(RESOURCES)}
-    P = len(RESOURCES) * num_chips
+    from repro.api import SaathSession
 
-    # Densely renumber arrival ranks, preserving (rank, submission) order.
-    # Duplicate ranks are legal — e.g. two tenants both built with
-    # grad_bucket_coflows(rank_offset=0) — and previously collided in the
-    # rank->position dicts, silently dropping collectives from the plan.
+    params = params or bridge_params()
+    P = len(RESOURCES) * num_chips
     order = sorted(range(len(coflows)),
                    key=lambda i: (coflows[i].arrival_rank, i))
-    dense_rank = {i: pos for pos, i in enumerate(order)}
+    # work conservation off: a wave is an all-or-none admitted set; a
+    # partially-issued collective is meaningless
+    sess = SaathSession(params, num_ports=P, backend=backend,
+                        mechanisms={"work_conservation": False})
+    names = {}
+    for i in order:
+        c = coflows[i]
+        h = sess.submit([collective_to_coflow(c, num_chips=num_chips)])[0]
+        names[h] = c.name
 
-    trace_coflows = []
-    fid = 0
-    for i, c in enumerate(coflows):
-        chips = c.chips or tuple(range(num_chips))
-        flows = []
-        for r in c.resources:
-            base = res_index[r] * num_chips
-            for ch in chips:
-                flows.append(Flow(fid, base + ch, base + ch,
-                                  max(c.bytes, 1.0)))
-                fid += 1
-        trace_coflows.append(
-            Coflow(cid=dense_rank[i], arrival=float(dense_rank[i]) * 1e-9,
-                   flows=flows))
-    trace = Trace(num_ports=P, coflows=trace_coflows)
-    table = FlowTable.from_trace(trace, params.port_bw)
-    table.active[:] = True
-
-    pol = make_policy("saath", params, work_conservation=False)
-    pol.reset(table)
-
-    # FlowTable orders coflows by cid == dense rank, so position == rank
-    by_pos: Dict[int, str] = {dense_rank[i]: c.name
-                              for i, c in enumerate(coflows)}
     waves: List[List[str]] = []
-    now = 0.0
-    remaining = set(by_pos)
+    remaining = set(names)
     guard = 0
-    while remaining and guard < len(by_pos) + 2:
+    while remaining and guard < len(names) + 2:
         guard += 1
-        rates = pol.schedule(table, now)
-        admitted = sorted(
-            c for c in remaining
-            if rates[table.flow_lo[c]:table.flow_hi[c]].max() > 0)
+        admitted = sorted(h for h in sess.plan_tick() if h in remaining)
         if not admitted:  # should not happen: ports free up every wave
             admitted = [min(remaining)]
-        waves.append([by_pos[c] for c in admitted])
-        for c in admitted:
-            lo, hi = table.flow_lo[c], table.flow_hi[c]
-            table.sent[lo:hi] = table.size[lo:hi]
-            table.done[lo:hi] = True
-            table.finished[c] = True
-            table.active[c] = False
-            remaining.discard(c)
-        now += params.delta
+            sess.complete(admitted)
+        waves.append([names[h] for h in admitted])
+        remaining.difference_update(admitted)
     if remaining:
         # a truncated plan would silently drop collectives from the step
         raise RuntimeError(
             f"plan_waves failed to place {len(remaining)} collectives "
-            f"({sorted(by_pos[c] for c in remaining)}) after {guard} "
+            f"({sorted(names[h] for h in remaining)}) after {guard} "
             "waves — scheduler made no progress")
     return waves
 

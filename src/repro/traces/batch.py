@@ -90,12 +90,20 @@ class TraceBatch(NamedTuple):
 
 def pack(traces: Sequence[Union[Trace, FlowTable]], *,
          port_bw: float = None,
-         flow_multiple: int = 64, coflow_multiple: int = 16) -> TraceBatch:
+         flow_multiple: int = 64, coflow_multiple: int = 16,
+         flow_capacity: int = 0, coflow_capacity: int = 0,
+         port_capacity: int = 0) -> TraceBatch:
     """Pad/pack traces (or FlowTables) into one TraceBatch.
 
     `port_bw` is required when packing `Trace` objects (FlowTables carry
     their own per-port bandwidths). DAG stage dependencies are a
     host-simulator feature and are rejected here.
+
+    The `*_capacity` floors support incremental (session) packing: an
+    online `SaathSession` re-packs its live coflows into a slab whose
+    capacities only ever grow geometrically, so the padded shapes — and
+    therefore the compiled engine executables — stay stable across
+    submit/retire churn while freed rows are recycled.
     """
     tables: List[FlowTable] = []
     for t in traces:
@@ -114,9 +122,11 @@ def pack(traces: Sequence[Union[Trace, FlowTable]], *,
                 "use fabric.engine.Simulator")
 
     B = len(tables)
-    F = _round_up(max(t.size.shape[0] for t in tables), flow_multiple)
-    C = _round_up(max(t.num_coflows for t in tables), coflow_multiple)
-    P = max(t.num_ports for t in tables)
+    F = max(_round_up(max(t.size.shape[0] for t in tables), flow_multiple),
+            flow_capacity)
+    C = max(_round_up(max(t.num_coflows for t in tables), coflow_multiple),
+            coflow_capacity)
+    P = max(max(t.num_ports for t in tables), port_capacity)
 
     tb = TraceBatch(
         cid=np.zeros((B, F), np.int32), src=np.zeros((B, F), np.int32),

@@ -1,0 +1,173 @@
+"""The scheduling front door: Scenario/run/Result contract.
+
+Covers the engine-equivalence contract now owned by `repro.api`
+(numpy vs jax CCTs within 1% through one entry point), the Result
+normalizer's NaN/padding semantics (the avg_cct / makespan regression),
+and the unified policy registry errors.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import MECHANISM_KEYS, Result, Scenario, run
+from repro.core.coflow import Coflow, Flow, Trace
+from repro.core.params import SchedulerParams
+
+PORTS = 6
+PARAMS = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                         growth=4.0, num_queues=5)
+
+
+def _trace(seed: int = 0, n: int = 6) -> Trace:
+    rng = np.random.default_rng(seed)
+    coflows, fid = [], 0
+    for c in range(n):
+        w = int(rng.integers(1, 5))
+        flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                      int(rng.integers(0, PORTS)),
+                      float(rng.uniform(1.0, 15.0))) for i in range(w)]
+        fid += w
+        coflows.append(Coflow(c, float(rng.uniform(0.0, 2.0)), flows))
+    return Trace(num_ports=PORTS, coflows=coflows)
+
+
+def test_run_owns_the_engine_equivalence_contract():
+    """One Scenario, two engines: per-coflow CCTs within 1%."""
+    tr = _trace(0)
+    rn = run(Scenario(policy="saath", engine="numpy", trace=tr,
+                      params=PARAMS))
+    rj = run(Scenario(policy="saath", engine="jax", trace=tr,
+                      params=PARAMS))
+    np.testing.assert_allclose(rj.row_cct(), rn.row_cct(), rtol=1e-2,
+                               atol=2 * PARAMS.delta)
+    np.testing.assert_allclose(rj.makespan, rn.makespan, rtol=1e-2)
+    assert abs(rj.avg_cct[0] / rn.avg_cct[0] - 1.0) < 1e-2
+
+
+def test_mechanism_switches_resolve_identically():
+    """The shared ablation names act the same on both engines."""
+    tr = _trace(2)
+    mech = dict(lcof=False, per_flow_threshold=True,
+                work_conservation=False, dynamics_requeue=False)
+    rn = run(Scenario(engine="numpy", trace=tr, params=PARAMS,
+                      mechanisms=mech))
+    rj = run(Scenario(engine="jax", trace=tr, params=PARAMS,
+                      mechanisms=mech))
+    np.testing.assert_allclose(rj.row_cct(), rn.row_cct(), rtol=1e-2,
+                               atol=2 * PARAMS.delta)
+
+
+def test_sweep_scenario_loops_on_numpy_and_vmaps_on_jax():
+    tr = _trace(1)
+    sweep = tuple(dataclasses.replace(PARAMS, start_threshold=s)
+                  for s in (2.0, 8.0))
+    rn = run(Scenario(engine="numpy", trace=tr, params=PARAMS,
+                      sweep=sweep))
+    rj = run(Scenario(engine="jax", trace=tr, params=PARAMS,
+                      sweep=sweep))
+    assert rn.batch == rj.batch == 2
+    for i in range(2):
+        np.testing.assert_allclose(rj.row_cct(i), rn.row_cct(i),
+                                   rtol=1e-2, atol=2 * PARAMS.delta)
+
+
+def test_result_table_rebuilds_for_both_engines():
+    tr = _trace(3)
+    for engine in ("numpy", "jax"):
+        t = run(Scenario(engine=engine, trace=tr, params=PARAMS)).table()
+        assert t.finished.all() and t.done.all()
+        np.testing.assert_allclose(t.sent, t.size, rtol=1e-5)
+        assert np.isfinite(t.cct).all()
+
+
+# ---- the Result normalizer owns NaN/padding semantics (satellite) -----
+
+
+def test_empty_replay_reports_nan_not_zero():
+    """Regression: SimResult.makespan used to report 0.0 for a replay
+    that finished nothing — a unit claim ('zero seconds') the jax
+    plane's NaN contradicted. Both planes now agree on NaN, defined
+    once in the Result normalizer."""
+    from repro.fabric.engine import simulate
+
+    empty = Trace(num_ports=4, coflows=[])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")            # no all-NaN warnings
+        sim = simulate(empty, "saath", PARAMS)
+        assert np.isnan(sim.makespan)
+        assert np.isnan(sim.avg_cct)
+        res = run(Scenario(engine="numpy", trace=empty, params=PARAMS))
+        assert np.isnan(res.makespan[0])
+        assert np.isnan(res.avg_cct[0])
+
+
+def test_engine_result_all_padding_row_is_nan_without_warning():
+    """Regression: EngineResult.avg_cct tripped numpy's all-NaN mean
+    RuntimeWarning (and an ill-defined value) on an all-padding batch
+    row — e.g. a drained session slab."""
+    from repro.fabric.jax_engine import EngineResult
+
+    res = EngineResult(
+        cct=np.array([[1.0, np.nan], [np.nan, np.nan]]),
+        fct=np.full((2, 2), np.nan), sent=np.zeros((2, 2)),
+        finished=np.ones((2, 2), bool), ticks=0, events=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        avg = res.avg_cct
+    assert avg[0] == 1.0 and np.isnan(avg[1])
+
+
+def test_result_normalizer_row_semantics():
+    r = Result(engine="jax", policy="saath",
+               cct=np.array([[2.0, np.nan], [np.nan, np.nan]]),
+               fct=np.array([[5.0, np.nan], [np.nan, np.nan]]),
+               sent=np.zeros((2, 2)), num_coflows=np.array([2, 1]),
+               num_flows=np.array([2, 1]), steps=0, wall_seconds=0.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert r.avg_cct[0] == 2.0 and np.isnan(r.avg_cct[1])
+        assert r.makespan[0] == 5.0 and np.isnan(r.makespan[1])
+
+
+# ---- registry / validation errors (satellite) -------------------------
+
+
+def test_unknown_policy_raises_with_available_list():
+    from repro.core.policies import make_policy
+
+    with pytest.raises(ValueError, match="saath.*varys-sebf"):
+        make_policy("sincronia", PARAMS)
+    with pytest.raises(ValueError, match="available:.*aalo"):
+        run(Scenario(policy="sincronia", trace=_trace(0)))
+
+
+def test_host_only_policy_rejected_on_jax_with_capable_list():
+    with pytest.raises(ValueError, match="saath"):
+        run(Scenario(policy="aalo", engine="jax", trace=_trace(0)))
+
+
+def test_unknown_engine_and_mechanism_raise():
+    with pytest.raises(ValueError, match="numpy, jax"):
+        run(Scenario(engine="tpu", trace=_trace(0)))
+    with pytest.raises(ValueError, match="work_conservation"):
+        run(Scenario(trace=_trace(0), mechanisms={"wc": False}))
+    assert "lcof" in MECHANISM_KEYS
+
+
+def test_exactly_one_trace_source():
+    with pytest.raises(ValueError, match="exactly one trace source"):
+        run(Scenario(policy="saath"))
+    with pytest.raises(ValueError, match="exactly one trace source"):
+        run(Scenario(trace=_trace(0), synth={"num_coflows": 4}))
+
+
+def test_scenario_hash_is_stable_and_discriminating():
+    tr = _trace(0)
+    a = Scenario(trace=tr, params=PARAMS)
+    b = Scenario(trace=tr, params=PARAMS)
+    c = Scenario(trace=tr, params=PARAMS, engine="jax")
+    d = Scenario(trace=_trace(1), params=PARAMS)
+    assert a.hash() == b.hash()
+    assert len({a.hash(), c.hash(), d.hash()}) == 3

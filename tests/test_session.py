@@ -1,0 +1,184 @@
+"""SaathSession: online-vs-offline parity, slab lifecycle, wave planning.
+
+The acceptance contract (ISSUE 3): submitting a trace's coflows
+incrementally at their arrival times must reproduce the offline
+`run(scenario)` CCTs within 1% (>= 3 traces), and
+`plan_waves(backend="jax")` must reproduce the numpy wave order
+bitwise on the bridge workload.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Scenario, SaathSession, run
+from repro.core.coflow import Coflow, Flow, Trace
+from repro.core.params import SchedulerParams
+
+PORTS = 6
+PARAMS = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                         growth=4.0, num_queues=5)
+
+
+def _trace(seed: int = 0, n: int = 6) -> Trace:
+    rng = np.random.default_rng(seed)
+    coflows, fid = [], 0
+    for c in range(n):
+        w = int(rng.integers(1, 5))
+        flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                      int(rng.integers(0, PORTS)),
+                      float(rng.uniform(1.0, 15.0))) for i in range(w)]
+        fid += w
+        coflows.append(Coflow(c, float(rng.uniform(0.0, 2.0)), flows))
+    return Trace(num_ports=PORTS, coflows=coflows)
+
+
+def _replay_online(trace: Trace, backend: str, **kw) -> np.ndarray:
+    """Submit the trace's coflows at their arrival times; return CCTs
+    in cid order."""
+    sess = SaathSession(PARAMS, num_ports=PORTS, backend=backend, **kw)
+    ccts = {}
+    for c in sorted(trace.coflows, key=lambda c: (c.arrival, c.cid)):
+        sess.advance(max(c.arrival - sess.now, 0.0))
+        h = sess.submit([c])[0]
+        ccts[h] = c.cid
+        for d in sess.poll():                     # interleaved polling
+            ccts[d.handle] = (ccts[d.handle], d.cct)
+    for d in sess.drain(step=5.0, max_seconds=500.0):
+        ccts[d.handle] = (ccts[d.handle], d.cct)
+    out = np.full(len(trace.coflows), np.nan)
+    for cid, cct in ccts.values():
+        out[cid] = cct
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_session_online_matches_offline_run_jax(seed):
+    """The acceptance gate: incremental jax-slab replay vs offline
+    run() within 1% on three traces."""
+    tr = _trace(seed)
+    offline = run(Scenario(policy="saath", engine="numpy", trace=tr,
+                           params=PARAMS))
+    got = _replay_online(tr, "jax")
+    np.testing.assert_allclose(got, offline.row_cct(), rtol=1e-2,
+                               atol=2 * PARAMS.delta)
+
+
+def test_session_numpy_backend_is_the_exact_oracle():
+    """The numpy session shares integrate_interval with the offline
+    Simulator: incremental replay is exact, not just within 1%."""
+    tr = _trace(3)
+    offline = run(Scenario(policy="saath", engine="numpy", trace=tr,
+                           params=PARAMS))
+    got = _replay_online(tr, "numpy")
+    np.testing.assert_allclose(got, offline.row_cct(), rtol=1e-9)
+
+
+def test_session_slab_grows_geometrically_and_recycles_slots():
+    """Submitting past capacity doubles the slab; polling retires
+    coflows so later submissions reuse freed rows instead of growing."""
+    sess = SaathSession(PARAMS, num_ports=PORTS, backend="jax",
+                        min_coflow_capacity=4, min_flow_capacity=64)
+    rng = np.random.default_rng(7)
+
+    def burst(k, base):
+        cfs = []
+        for i in range(k):
+            w = int(rng.integers(1, 4))
+            flows = [Flow(j, int(rng.integers(0, PORTS)),
+                          int(rng.integers(0, PORTS)),
+                          float(rng.uniform(1.0, 8.0)))
+                     for j in range(w)]
+            cfs.append(Coflow(base + i, sess.now, flows))
+        return sess.submit(cfs)
+
+    burst(6, 0)                       # > 4 -> capacity doubles to 8
+    sess.advance(1.0)
+    assert sess._C_cap == 8
+    done = sess.drain(step=5.0, max_seconds=500.0)
+    assert len(done) == 6
+    cap_after_first = sess._C_cap
+    for round_ in range(3):           # churn: slots must be recycled
+        burst(6, 100 * (round_ + 1))
+        done = sess.drain(step=5.0, max_seconds=500.0)
+        assert len(done) == 6
+        assert all(np.isfinite(d.cct) and d.cct > 0 for d in done)
+    assert sess._C_cap == cap_after_first, "freed rows were not recycled"
+
+
+def test_session_poll_returns_each_coflow_exactly_once():
+    tr = _trace(4)
+    sess = SaathSession(PARAMS, num_ports=PORTS, backend="jax")
+    handles = sess.submit(sorted(tr.coflows, key=lambda c: c.arrival))
+    seen = []
+    for _ in range(200):
+        sess.advance(2.0)
+        seen += [d.handle for d in sess.poll()]
+        if not sess.num_live:
+            break
+    assert sorted(seen) == sorted(handles)
+    assert len(seen) == len(set(seen))
+    assert sess.poll() == []
+
+
+def test_session_rejects_bad_input():
+    sess = SaathSession(PARAMS, num_ports=4, backend="numpy")
+    with pytest.raises(ValueError, match="port out of range"):
+        sess.submit([Coflow(0, 0.0, [Flow(0, 9, 1, 5.0)])])
+    with pytest.raises(ValueError, match="dt >= 0"):
+        sess.advance(-1.0)
+    with pytest.raises(ValueError, match="jax, numpy"):
+        SaathSession(PARAMS, num_ports=4, backend="torch")
+    with pytest.raises(ValueError, match="work_conservation"):
+        SaathSession(PARAMS, num_ports=4, mechanisms={"wc": True})
+
+
+# ---- wave planning (the framework-plane client) -----------------------
+
+
+def _bridge_workload():
+    from repro.runtime.coflow_bridge import CollectiveCoflow
+
+    cfs = [CollectiveCoflow(f"grad/{b}", (48 - 4 * b) << 20,
+                            ("ici:data",), b) for b in range(6)]
+    cfs += [CollectiveCoflow(f"moe_a2a/{l}", 160 << 20, ("ici:model",),
+                             10 + l) for l in (0, 1, 2)]
+    cfs += [CollectiveCoflow("ckpt/upload", 4 << 30, ("dcn", "host"), 20),
+            CollectiveCoflow("kv/migrate", 512 << 20, ("dcn",), 21),
+            CollectiveCoflow("reshard/params", 1 << 30,
+                             ("ici:data", "ici:model"), 22)]
+    return cfs
+
+
+def test_plan_waves_jax_backend_reproduces_numpy_wave_order_bitwise():
+    """The acceptance gate for the framework plane: the session-slab
+    planner and the host oracle emit IDENTICAL wave lists on the bridge
+    workload (grad buckets + MoE a2a + background tenants)."""
+    from repro.runtime.coflow_bridge import plan_waves
+
+    cfs = _bridge_workload()
+    wj = plan_waves(cfs, num_chips=16, backend="jax")
+    wn = plan_waves(cfs, num_chips=16, backend="numpy")
+    assert wj == wn
+    flat = [n for w in wj for n in w]
+    assert sorted(flat) == sorted(c.name for c in cfs)
+    # gradient buckets all contend on ici:data -> strictly serialized
+    grads = [n for n in flat if n.startswith("grad/")]
+    assert grads == [f"grad/{i}" for i in range(6)]
+
+
+@pytest.mark.slow
+def test_online_service_demo():
+    """The Poisson open-loop tenant-mix demo sustains a SaathSession
+    across steps (nightly job; ~1 min)."""
+    import importlib.util
+    import pathlib
+
+    spec = importlib.util.spec_from_file_location(
+        "online_service",
+        pathlib.Path(__file__).parent.parent / "examples" /
+        "online_service.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    stats = mod.main(seconds=0.05, seed=0, backend="jax")
+    assert stats["completed"] >= 10
+    assert stats["unfinished"] == 0
+    assert np.isfinite(stats["avg_cct"]) and stats["avg_cct"] > 0
