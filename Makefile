@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-slow test-all api-smoke bench-smoke bench
+.PHONY: test test-slow test-all api-smoke pool-smoke bench-smoke bench
 
 test:            ## fast tier-1 suite (slow integration tests excluded)
 	$(PY) -m pytest -q
@@ -15,6 +15,9 @@ test-all:        ## everything
 api-smoke:       ## tiny Scenario on both engines + 3-step SaathSession
 	$(PY) -m benchmarks.api_smoke
 
+pool-smoke:      ## 16-session SessionPool fleet vs 16 sequential sessions
+	$(PY) -m benchmarks.pool_throughput
+
 bench-smoke:     ## the quick batched-engine benchmark paths
 	$(PY) -m benchmarks.api_smoke
 	$(PY) -m benchmarks.fig9_speedup --engine=jax
@@ -22,6 +25,7 @@ bench-smoke:     ## the quick batched-engine benchmark paths
 	$(PY) -m benchmarks.fig13_fct_deviation --engine=jax
 	$(PY) -m benchmarks.fig14_sensitivity --engine=jax
 	$(PY) -m benchmarks.table2_coordinator_latency --engine=jax
+	SAATH_POOL_MIN_SPEEDUP=2.0 $(PY) -m benchmarks.pool_throughput --sessions 8 --coflows 12
 
 bench:           ## full quick benchmark suite (numpy reference engine)
 	$(PY) -m benchmarks.run

@@ -104,18 +104,6 @@ class Bench:
         kw.update(overrides)
         return fb_like_trace(**kw)
 
-    def sim(self, policy: str, params: SchedulerParams | None = None,
-            policy_kwargs: dict | None = None, **trace_overrides):
-        """Deprecated shim (one PR): old SimResult-shaped access — use
-        `Bench.run` and the normalized Result instead."""
-        from repro.fabric.engine import SimResult
-
-        res = self.run(policy, params=params,
-                       policy_kwargs=policy_kwargs, **trace_overrides)
-        return SimResult(res.table(0), res.steps, res.wall_seconds,
-                         res.sched_seconds, float(res.makespan[0]))
-
-
 def cli_bench(argv=None) -> "Tuple[Bench, str]":
     """Common driver CLI: --full fabric scale, --engine numpy|jax.
 

@@ -1,0 +1,176 @@
+"""Pool throughput: N concurrent SaathSessions on one slab vs N
+sequential standalone sessions (the ISSUE-4 acceptance gate, in the
+spirit of Table 2's coordinator-cost-under-load measurement).
+
+Every session replays the same-shape (different-seed) online workload:
+all coflows submitted up front, then fixed `--step` advances until the
+session drains. The SEQUENTIAL baseline drives N standalone sessions
+one after another (each its own single-row slab, N dispatch chains per
+step); the POOL drives one `SessionPool` whose `advance` moves all N
+rows with one vmapped dispatch chain per step. Per-session CCTs must
+be bitwise identical between the two — batching changes the dispatch
+count, never the arithmetic — and the pooled fleet must be at least
+``SAATH_POOL_MIN_SPEEDUP`` (default 4.0) times faster end-to-end.
+The amortization scales with fleet width — the 4x gate is calibrated
+for the default 16 sessions; lower the env var for narrower runs (CI
+runs 8 sessions at 2x on shared runners).
+
+Records (benchmarks.common.record -> BENCH_api.json): wall clocks for
+both drives, compile/warmup split, sessions/sec, and the speedup.
+
+    PYTHONPATH=src python -m benchmarks.pool_throughput [--sessions 16]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.api import SaathSession, SessionPool, result_from_completions
+from repro.core.coflow import Coflow, Flow
+from repro.core.params import SchedulerParams
+
+# a serving-style fabric: narrow coflows (collective-sized widths) on
+# a small slab, many advances — the regime where per-dispatch fixed
+# cost dominates per-lane compute, i.e. exactly what batching tenants
+# on one slab amortizes (DESIGN.md §3's op-overhead argument, applied
+# to whole sessions)
+PARAMS = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                         growth=4.0, num_queues=5)
+PORTS = 12
+
+
+def _workload(seed: int, n_coflows: int):
+    rng = np.random.default_rng(seed)
+    cfs, fid = [], 0
+    for c in range(n_coflows):
+        w = int(rng.integers(1, 4))
+        flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                      int(rng.integers(0, PORTS)),
+                      float(rng.uniform(1.0, 12.0))) for i in range(w)]
+        fid += w
+        cfs.append(Coflow(c, float(rng.uniform(0.0, 5.0)), flows))
+    return cfs
+
+
+def _workloads(n_sessions: int, n_coflows: int, seed: int):
+    """One arrival stream per session: same shape, different seeds, so
+    every row does comparable work but takes its own trajectory."""
+    return [_workload(seed + i, n_coflows) for i in range(n_sessions)]
+
+
+def _drive(sessions, advance_all, step: float, max_steps: int = 4000):
+    """Advance until every session drains; returns per-session
+    {handle: (cct, fct-tuple)} dicts plus session 0's raw
+    `CompletedCoflow`s (the representative stream the BENCH record
+    normalizes — no extra replay needed)."""
+    out = [dict() for _ in sessions]
+    raw0 = []
+    for _ in range(max_steps):
+        advance_all(step)
+        live = 0
+        for i, s in enumerate(sessions):
+            done = s.poll()
+            if i == 0:
+                raw0 += done
+            out[i].update({d.handle: (d.cct, tuple(d.fct))
+                           for d in done})
+            live += s.num_live
+        if not live:
+            return out, raw0
+    raise RuntimeError(f"workload failed to drain in {max_steps} steps")
+
+
+def run_sequential(traces, step: float):
+    sessions = [SaathSession(PARAMS, num_ports=PORTS, backend="jax")
+                for _ in traces]
+    for s, tr in zip(sessions, traces):
+        s.submit(sorted(tr, key=lambda c: (c.arrival, c.cid)))
+    t0 = time.perf_counter()
+
+    def advance_all(dt):
+        for s in sessions:
+            s.advance(dt)
+
+    ccts, raw0 = _drive(sessions, advance_all, step)
+    return ccts, raw0, time.perf_counter() - t0
+
+
+def run_pool(traces, step: float):
+    pool = SessionPool(PARAMS, num_ports=PORTS,
+                       max_sessions=len(traces))
+    sessions = [pool.session() for _ in traces]
+    for s, tr in zip(sessions, traces):
+        s.submit(sorted(tr, key=lambda c: (c.arrival, c.cid)))
+    t0 = time.perf_counter()
+    ccts, raw0 = _drive(sessions, pool.advance, step)
+    return ccts, raw0, time.perf_counter() - t0
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=16)
+    ap.add_argument("--coflows", type=int, default=10,
+                    help="coflows per session")
+    ap.add_argument("--step", type=float, default=0.25,
+                    help="virtual seconds per advance (a serving-style "
+                    "fine-grained cadence: a few event steps per tick)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-assert", action="store_true",
+                    help="record numbers without gating on the speedup")
+    args = ap.parse_args(argv)
+
+    traces = _workloads(args.sessions, args.coflows, args.seed)
+
+    # cold pass warms BOTH executables (B=1 and B=N slabs compile
+    # separately); best-of-two warm passes absorbs host noise, like
+    # Scenario(warm_timing=True)
+    _, _, cold_seq = run_sequential(traces, args.step)
+    _, _, cold_pool = run_pool(traces, args.step)
+    seq_cct, _, wall_seq = run_sequential(traces, args.step)
+    pool_cct, comps, wall_pool = run_pool(traces, args.step)
+    c2, _, w2 = run_sequential(traces, args.step)
+    wall_seq = min(wall_seq, w2)
+    p2, _, w2 = run_pool(traces, args.step)
+    wall_pool = min(wall_pool, w2)
+
+    assert pool_cct == seq_cct == c2 == p2, \
+        "pooled sessions diverged from standalone sessions"
+    n_cct = sum(len(d) for d in pool_cct)
+    speedup = wall_seq / wall_pool
+    print(f"# pool_throughput: {args.sessions} sessions x "
+          f"{args.coflows} coflows ({n_cct} CCTs, bitwise-equal "
+          f"pool vs sequential)", file=sys.stderr)
+    print(f"#   sequential {wall_seq:.3f}s (cold {cold_seq:.2f}s) | "
+          f"pool {wall_pool:.3f}s (cold {cold_pool:.2f}s) | "
+          f"speedup {speedup:.2f}x | "
+          f"{args.sessions / wall_pool:.1f} sessions/sec",
+          file=sys.stderr)
+
+    # session 0's completions (captured during the measured pooled
+    # drive) as a normalized Result, so the record carries standard
+    # CCT stats alongside the fleet-level numbers
+    res = result_from_completions(comps, wall_seconds=wall_pool)
+    rec = record(
+        "pool_throughput", res,
+        sessions=args.sessions, coflows_per_session=args.coflows,
+        wall_pool=wall_pool, wall_sequential=wall_seq,
+        compile_pool=max(cold_pool - wall_pool, 0.0),
+        compile_sequential=max(cold_seq - wall_seq, 0.0),
+        sessions_per_sec=args.sessions / wall_pool,
+        speedup=speedup)
+
+    min_speedup = float(os.environ.get("SAATH_POOL_MIN_SPEEDUP", "4.0"))
+    if not args.no_assert:
+        assert speedup >= min_speedup, (
+            f"pooled fleet speedup {speedup:.2f}x < required "
+            f"{min_speedup}x (SAATH_POOL_MIN_SPEEDUP)")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

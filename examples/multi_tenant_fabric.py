@@ -14,8 +14,8 @@ starvation deadlines; compare against naive FIFO issue.
 import numpy as np
 
 from repro.core.coflow import Coflow, Flow, Trace
+from repro.api import Scenario, run
 from repro.core.params import SchedulerParams
-from repro.fabric.engine import simulate
 from repro.fabric.metrics import percentile_speedup
 from repro.runtime.coflow_bridge import CollectiveCoflow, plan_waves
 
@@ -62,9 +62,9 @@ for step in range(40):
 trace = Trace(num_ports=P, coflows=cfs)
 params = SchedulerParams(port_bw=50e9 / 8, delta=1e-3,
                          start_threshold=8 << 20)
-fifo = simulate(trace, "fifo", params)
-saath = simulate(trace, "saath", params)
-s = percentile_speedup(fifo.table.cct, saath.table.cct)
+fifo = run(Scenario(policy="fifo", trace=trace, params=params))
+saath = run(Scenario(policy="saath", trace=trace, params=params))
+s = percentile_speedup(fifo.row_cct(), saath.row_cct())
 print("\n== steady-state fabric: Saath vs FIFO issue order ==")
 print(f"collective-coflow completion speedup: p50={s['p50']:.2f}x "
       f"p90={s['p90']:.2f}x overall={s['overall']:.2f}x")

@@ -1,7 +1,10 @@
 """Online coflow service: a Poisson open-loop tenant mix through one
-long-running `SaathSession` (the ISSUE-3 tentpole demo).
+long-running `SaathSession` (the ISSUE-3 tentpole demo) — and, with
+``--tenants N``, N such mixes through one `SessionPool` slab (the
+ISSUE-4 multi-tenant serving plane).
 
-Three tenants share a pod's fabric, arrivals NOT known up front:
+Three traffic sources share a pod's fabric, arrivals NOT known up
+front:
 
 * a training job: every step, a burst of gradient buckets (ici:data)
   and MoE all-to-all waves (ici:model), staggered by backward-pass
@@ -9,13 +12,15 @@ Three tenants share a pod's fabric, arrivals NOT known up front:
 * checkpoint shard uploads over (dcn, host), Poisson;
 * serving KV-cache migrations over dcn, Poisson.
 
-The session keeps its padded device slab alive across the whole run —
+Each session keeps its padded slab row alive across the whole run —
 submissions land in recycled rows, `advance` re-enters the jitted tick
 scan up to each wall-clock horizon, `poll` retires completions — i.e.
-the coordinator runs as a *service*, not a trace replay.
+the coordinator runs as a *service*, not a trace replay. With N > 1
+tenants the pool advances every tenant's coordinator with ONE vmapped
+dispatch chain per horizon.
 
     PYTHONPATH=src python examples/online_service.py [--seconds 0.2]
-        [--backend jax|numpy] [--seed 0]
+        [--backend jax|numpy] [--seed 0] [--tenants 1]
 """
 from __future__ import annotations
 
@@ -24,7 +29,7 @@ import time
 
 import numpy as np
 
-from repro.api import SaathSession
+from repro.api import SaathSession, SessionPool
 from repro.runtime.coflow_bridge import (RESOURCES, CollectiveCoflow,
                                          bridge_params,
                                          collective_to_coflow)
@@ -64,40 +69,64 @@ def _workload(seconds: float, seed: int):
 
 
 def main(seconds: float = 0.2, seed: int = 0,
-         backend: str = "jax") -> dict:
+         backend: str = "jax", tenants: int = 1) -> dict:
     params = bridge_params()
     P = len(RESOURCES) * NUM_CHIPS
-    sess = SaathSession(params, num_ports=P, backend=backend)
-    events = _workload(seconds, seed)
+    if tenants > 1 and backend != "jax":
+        raise ValueError("multi-tenant pooling is the jax slab's "
+                         "feature; --tenants needs --backend jax")
+    if tenants > 1:
+        pool = SessionPool(params, num_ports=P, max_sessions=tenants)
+        sessions = [pool.session() for _ in range(tenants)]
+        advance_all = pool.advance
+    else:
+        sessions = [SaathSession(params, num_ports=P, backend=backend)]
+        advance_all = lambda dt: sessions[0].advance(dt)  # noqa: E731
+
+    # merge every tenant's open-loop arrivals onto one fleet timeline
+    merged = sorted(
+        (at, ti, c)
+        for ti in range(tenants)
+        for at, c in _workload(seconds, seed + ti))
 
     t0 = time.perf_counter()
     kinds = {}
     done = []
-    for at, c in events:
-        if at > sess.now:
-            sess.advance(at - sess.now)
-        h = sess.submit([collective_to_coflow(c, num_chips=NUM_CHIPS,
-                                              arrival=at)])[0]
-        kinds[h] = c.name.split("/")[0]
-        done += sess.poll()
-    done += sess.drain(step=5 * STEP, max_seconds=60.0)
+    now = 0.0
+    for at, ti, c in merged:
+        if at > now:
+            advance_all(at - now)
+            now = at
+        h = sessions[ti].submit(
+            [collective_to_coflow(c, num_chips=NUM_CHIPS, arrival=at)])[0]
+        kinds[(ti, h)] = c.name.split("/")[0]
+        for s_i, s in enumerate(sessions):
+            done += [(s_i, d) for d in s.poll()]
+    spent = 0.0
+    while any(s.num_live for s in sessions) and spent < 60.0:
+        advance_all(5 * STEP)
+        spent += 5 * STEP
+        for s_i, s in enumerate(sessions):
+            done += [(s_i, d) for d in s.poll()]
     wall = time.perf_counter() - t0
 
     by_kind = {}
-    for d in done:
-        by_kind.setdefault(kinds[d.handle], []).append(d.cct * 1e3)
-    print(f"== online service ({backend}): {len(events)} collectives "
-          f"over {seconds * 1e3:.0f}ms virtual, wall {wall:.2f}s ==")
+    for s_i, d in done:
+        by_kind.setdefault(kinds[(s_i, d.handle)], []).append(d.cct * 1e3)
+    print(f"== online service ({backend}, {tenants} tenant(s)): "
+          f"{len(merged)} collectives over {seconds * 1e3:.0f}ms "
+          f"virtual, wall {wall:.2f}s ==")
     for kind, ccts in sorted(by_kind.items()):
         a = np.asarray(ccts)
         print(f"  {kind:6s} n={a.size:4d} avg={a.mean():7.3f}ms "
               f"p90={np.percentile(a, 90):7.3f}ms")
     if backend == "jax":
-        print(f"  slab: {sess._C_cap} coflow x {sess._F_cap} flow rows "
-              f"(grown once, recycled across "
-              f"{len(events)} submissions)")
-    all_cct = np.asarray([d.cct for d in done])
-    return {"completed": len(done), "unfinished": sess.num_live,
+        print(f"  slab: {len(sessions)} row(s) x {sessions[0]._C_cap} "
+              f"coflow x {sessions[0]._F_cap} flow slots (grown once, "
+              f"recycled across {len(merged)} submissions)")
+    all_cct = np.asarray([d.cct for _, d in done])
+    unfinished = sum(s.num_live for s in sessions)
+    return {"completed": len(done), "unfinished": unfinished,
             "avg_cct": float(all_cct.mean()) if all_cct.size else
             float("nan"), "wall_seconds": wall}
 
@@ -108,5 +137,8 @@ if __name__ == "__main__":
                     help="virtual horizon of the open-loop arrivals")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", choices=("jax", "numpy"), default="jax")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="sessions sharing one SessionPool slab")
     args = ap.parse_args()
-    main(seconds=args.seconds, seed=args.seed, backend=args.backend)
+    main(seconds=args.seconds, seed=args.seed, backend=args.backend,
+         tenants=args.tenants)

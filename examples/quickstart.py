@@ -9,8 +9,8 @@
 """
 import numpy as np
 
+from repro.api import Scenario, run
 from repro.core.params import SchedulerParams
-from repro.fabric.engine import simulate
 from repro.fabric.metrics import percentile_speedup
 from repro.runtime.buckets import Bucket
 from repro.runtime.coflow_bridge import (CollectiveCoflow,
@@ -21,9 +21,9 @@ trace = fb_like_trace(num_coflows=200, num_ports=80, seed=1)
 params = SchedulerParams()
 
 print("== 1. Saath vs Aalo on an FB-like trace ==")
-aalo = simulate(trace, "aalo", params)
-saath = simulate(trace, "saath", params)
-s = percentile_speedup(aalo.table.cct, saath.table.cct)
+aalo = run(Scenario(policy="aalo", trace=trace, params=params))
+saath = run(Scenario(policy="saath", trace=trace, params=params))
+s = percentile_speedup(aalo.row_cct(), saath.row_cct())
 print(f"CCT speedup vs Aalo: p50={s['p50']:.2f}x p90={s['p90']:.2f}x "
       f"(overall {s['overall']:.2f}x)\n")
 
@@ -31,8 +31,9 @@ print("== 2. design ideas one by one ==")
 for name, kw in [("A/N only", dict(lcof=False, per_flow_threshold=False)),
                  ("A/N + P/F", dict(lcof=False, per_flow_threshold=True)),
                  ("full SAATH", {})]:
-    r = simulate(trace, "saath", params, policy_kwargs=kw)
-    s = percentile_speedup(aalo.table.cct, r.table.cct)
+    r = run(Scenario(policy="saath", trace=trace, params=params,
+                     policy_kwargs=kw))
+    s = percentile_speedup(aalo.row_cct(), r.row_cct())
     print(f"{name:12s} p50={s['p50']:.2f}x p90={s['p90']:.2f}x")
 
 print("\n== 3. the same scheduler planning collectives ==")

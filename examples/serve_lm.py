@@ -5,7 +5,7 @@ a KV-cache transformer and an O(1)-state Mamba2 — via the same API.
 """
 import numpy as np
 
-from repro.launch.serve import ServeSession
+from repro.launch.lm_serve import ServeSession
 
 for arch in ("starcoder2-3b", "mamba2-1.3b"):
     sess = ServeSession(arch, smoke=True, batch=2, max_len=64)

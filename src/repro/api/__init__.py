@@ -1,4 +1,4 @@
-"""`repro.api` — the one scheduling front door (DESIGN.md §7).
+"""`repro.api` — the one scheduling front door (DESIGN.md §7/§8).
 
 Declarative experiments::
 
@@ -12,10 +12,20 @@ Online sessions::
     from repro.api import SaathSession
     sess = SaathSession(params, num_ports=24, backend="jax")
     sess.submit(coflows); sess.advance(0.5); done = sess.poll()
+
+Multi-tenant fleets (one slab, one dispatch per step)::
+
+    from repro.api import SessionPool
+    pool = SessionPool(params, num_ports=24, max_sessions=16)
+    tenants = [pool.session() for _ in range(16)]
+    pool.advance(0.5); done = pool.poll()
 """
+from repro.api.pool import SessionPool
 from repro.api.scenario import (MECHANISM_KEYS, Result, Scenario,
-                                resolve_traces, run)
+                                resolve_traces, result_from_completions,
+                                run)
 from repro.api.session import CompletedCoflow, SaathSession
 
 __all__ = ["Scenario", "Result", "run", "resolve_traces",
-           "MECHANISM_KEYS", "SaathSession", "CompletedCoflow"]
+           "result_from_completions", "MECHANISM_KEYS", "SaathSession",
+           "CompletedCoflow", "SessionPool"]

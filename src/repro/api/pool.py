@@ -1,0 +1,406 @@
+"""Multi-tenant serving plane: a fleet of `SaathSession`s on ONE slab.
+
+A `SessionPool` hosts up to `max_sessions` concurrent online sessions
+as ROWS of a single leading-axis-batched `TraceBatch` slab, so one
+dispatch of the jitted `fabric.jax_engine` tick scan advances every
+tenant's coordinator at once (`jax.vmap` over the row axis) instead of
+N sequential scans over N private slabs. This is the paper's global
+coordinator serving many tenants (PAPER.md §5 / Table 2 is about
+per-decision coordinator cost under load): the marginal cost of an
+extra tenant is one more vmapped lane, not one more compiled replica.
+
+Ownership (DESIGN.md §8):
+
+* the POOL owns the device-facing slab: the padded `TraceBatch` (rows
+  recycled via `traces.batch.pack_row`/`blank_row`, flow/coflow
+  capacities shared across rows and grown geometrically) and the
+  `EngineState` mirror (numpy leaves between dispatches, so dirty rows
+  are rewritten in place);
+* each `SaathSession` is a VIEW onto one pool row: it keeps the host
+  truth for its tenant (live `_Entry`s, clock, δ-grid tick, epoch,
+  pending-horizon mirror) and delegates every device interaction —
+  `advance`, `plan_tick`, slab membership — to the pool. A standalone
+  `SaathSession(backend="jax")` is simply the row-0 view of a private
+  single-row pool, so single-session code is the B=1 case of the same
+  machinery.
+
+Rows advance to INDEPENDENT horizons: `jax_engine.session_advance`
+takes a per-row `n_end`, and a lane at (or past) its horizon is an
+exact no-op, so `pool.advance(dt)` moves every tenant together in one
+dispatch chain while `session.advance(dt)` on a single view moves only
+its row (the other lanes no-op). Per-session results are bitwise
+identical to standalone sessions — padding never perturbs a row's
+arithmetic (tests/test_pool.py).
+
+Long-horizon sessions re-base their δ-grid EPOCH on re-pack once the
+row's relative tick exceeds ``REBASE_TICKS``: arrivals, deadlines, and
+completion times are stored relative to the row epoch, so a session
+that has been up for hours keeps full δ resolution in the f32 slab
+(absolute times would lose the grid beyond ~1e6 ticks).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.params import SchedulerParams
+
+# re-base a row's grid epoch at the first re-pack past this relative
+# tick: f32 keeps exact integers to 2^24 and δ-resolution sums well
+# past 2^20, so re-basing at 2^20 leaves a 16x safety margin
+REBASE_TICKS = 1 << 20
+# hard per-dispatch cap on relative ticks — a single advance spanning
+# more than this is split into epochs (each split re-packs and
+# re-bases, so `tickf` arithmetic never leaves the f32-exact range)
+MAX_REL_TICKS = 1 << 22
+
+
+class SessionPool:
+    """An admission-capped fleet of jax-backend `SaathSession`s sharing
+    one device slab.
+
+    All sessions share the pool's `SchedulerParams`, fabric size
+    (`num_ports`), mechanism switches and fidelity — one compiled tick
+    structure serves the whole fleet. `session()` admits a new tenant
+    (raising when the pool is full); `release()` (or
+    `SaathSession.close()`) frees the row for the next tenant.
+    """
+
+    def __init__(self, params: Optional[SchedulerParams] = None, *,
+                 num_ports: int, max_sessions: int = 16,
+                 mechanisms: Optional[dict] = None,
+                 fidelity: str = "flow", kernel: Optional[str] = None,
+                 chunk: int = 32, min_coflow_capacity: int = 16,
+                 min_flow_capacity: int = 64):
+        from repro.api.scenario import MECHANISM_KEYS
+        from repro.fabric import jax_engine
+
+        mech = dict(mechanisms or {})
+        unknown = set(mech) - set(MECHANISM_KEYS)
+        if unknown:
+            raise ValueError(
+                f"unknown mechanism switches {sorted(unknown)}; "
+                f"available: {', '.join(MECHANISM_KEYS)}")
+        params = params or SchedulerParams()
+        if "dynamics_requeue" in mech:
+            params = dataclasses.replace(
+                params, dynamics_requeue=mech["dynamics_requeue"])
+        if "work_conservation" in mech:
+            params = dataclasses.replace(
+                params, work_conservation=mech["work_conservation"])
+        self.params = params
+        self.num_ports = int(num_ports)
+        self.kernel = kernel
+        self.chunk = int(chunk)
+        self.max_sessions = int(max_sessions)
+        if self.max_sessions <= 0:
+            raise ValueError("max_sessions must be positive")
+
+        self._je = jax_engine
+        self._ep = jax_engine.EngineParams.from_scheduler(
+            params,
+            work_conservation=mech.get("work_conservation"),
+            dynamics_requeue=mech.get("dynamics_requeue"),
+            lcof=mech.get("lcof", True),
+            per_flow_threshold=mech.get("per_flow_threshold", True))
+        self._features = jax_engine.features_for(
+            params, fidelity=fidelity,
+            dynamics_requeue=mech.get("dynamics_requeue"),
+            lcof=mech.get("lcof", True),
+            per_flow_threshold=mech.get("per_flow_threshold", True))
+
+        self._C_cap = int(min_coflow_capacity)
+        self._F_cap = int(min_flow_capacity)
+        self._sessions: List[Optional["object"]] = \
+            [None] * self.max_sessions
+        self._free = list(range(self.max_sessions))
+        self._blank_rows: set = set()
+        self._tb = None        # TraceBatch (numpy, B rows)
+        self._state = None     # EngineState with numpy leaves
+
+    # ---- admission -------------------------------------------------------
+
+    @property
+    def num_sessions(self) -> int:
+        return self.max_sessions - len(self._free)
+
+    @property
+    def sessions(self) -> list:
+        return [s for s in self._sessions if s is not None]
+
+    def session(self):
+        """Admit a new tenant session; raises `RuntimeError` when the
+        pool is at its admission cap."""
+        from repro.api.session import SaathSession
+
+        if not self._free:
+            raise RuntimeError(
+                f"SessionPool is full ({self.max_sessions} sessions); "
+                f"release one (or raise max_sessions) to admit more")
+        row = self._free.pop(0)
+        sess = SaathSession(self.params, num_ports=self.num_ports,
+                            backend="jax", kernel=self.kernel,
+                            chunk=self.chunk, _pool=self, _row=row)
+        self._sessions[row] = sess
+        self._blank_rows.discard(row)
+        return sess
+
+    def release(self, sess) -> None:
+        """Free a session's row (dropping any unfinished coflows); the
+        row is recycled for the next admitted tenant."""
+        row = sess._row
+        if row is None or self._sessions[row] is not sess:
+            raise ValueError("session does not belong to this pool")
+        self._sessions[row] = None
+        self._blank_rows.add(row)
+        bisect.insort(self._free, row)
+        sess._row = None
+        sess._pool = None
+
+    def _adopt(self, sess) -> None:
+        """Bind an externally-constructed standalone session as row 0
+        of this (private, single-row) pool."""
+        assert self.max_sessions == 1 and self._free == [0]
+        self._free.clear()
+        self._sessions[0] = sess
+
+    # ---- fleet stepping --------------------------------------------------
+
+    def advance(self, dt: float) -> float:
+        """Move EVERY admitted session's clock by `dt` seconds and
+        schedule all their δ-grid ticks with one vmapped dispatch chain;
+        returns the (common) elapsed fleet time."""
+        if dt < 0:
+            raise ValueError("advance(dt) needs dt >= 0")
+        delta = self.params.delta
+        targets = []
+        for s in self.sessions:
+            s._clock += float(dt)
+            targets.append((s, int(math.floor(s._clock / delta + 1e-9))))
+        self._advance(targets)
+        return float(dt)
+
+    def poll(self) -> List[Tuple[object, object]]:
+        """Completed-since-last-poll coflows across the fleet, as
+        (session, CompletedCoflow) pairs."""
+        out = []
+        for s in self.sessions:
+            out.extend((s, d) for d in s.poll())
+        return out
+
+    # ---- slab machinery (the device-facing half of the row-view
+    # contract; sessions call these with themselves as the row) --------
+
+    def _advance(self, targets) -> None:
+        """Advance the given (session, global n_end) targets; sessions
+        not listed keep their row at its current tick (exact no-ops in
+        the dispatch)."""
+        work = {}
+        for s, n_end in targets:
+            if n_end <= s._tick:
+                continue
+            if not s._live:
+                # nothing on the row: the grid is advanced host-side
+                s._tick = n_end
+                continue
+            work[s._row] = (s, n_end)
+        while work:
+            self._ensure()
+            ne = np.asarray(self._state.tick, np.float32).copy()
+            for r, (s, n_end) in work.items():
+                ne[r] = min(n_end, s._epoch + MAX_REL_TICKS) - s._epoch
+            state, _ = self._je.session_advance(
+                self._state, self._tb, self._ep, n_end=ne,
+                chunk=self.chunk, kernel=self.kernel,
+                features=self._features)
+            self._state = jax.tree_util.tree_map(
+                lambda a: np.array(a), state)
+            nxt = {}
+            for r, (s, n_end) in work.items():
+                self._sync_row(s)
+                if s._tick >= n_end or \
+                        all(e.finished for e in s._live.values()):
+                    continue
+                # the MAX_REL_TICKS split: re-pack (re-basing the
+                # epoch) and keep going toward the real target
+                s._tb_dirty = True
+                nxt[r] = (s, n_end)
+            work = nxt
+
+    def _plan_tick(self, sess) -> np.ndarray:
+        """One wave-planning coordinator tick for ONE session row; the
+        other rows are masked no-ops. Returns the row's admitted mask."""
+        self._ensure()
+        mask = np.zeros(self.max_sessions, bool)
+        mask[sess._row] = True
+        state, admitted = self._je.session_plan_tick(
+            self._state, self._tb, self._ep, kernel=self.kernel,
+            features=self._features, row_mask=mask)
+        self._state = jax.tree_util.tree_map(lambda a: np.array(a),
+                                             state)
+        adm = np.asarray(admitted)[sess._row]
+        self._sync_row(sess)
+        return adm
+
+    def _ensure(self) -> None:
+        """Re-pack dirty rows (and re-blank released ones) into the
+        shared slab, growing the flow/coflow capacities geometrically
+        when any row outgrows them (a growth re-packs every row — the
+        padded shapes are shared, but per-row state is carried through
+        the sessions' host entries, so nothing is lost)."""
+        from repro.traces.batch import blank_row, empty_batch
+
+        need_c = need_f = 0
+        for s in self.sessions:
+            if s._tb_dirty:
+                need_c = max(need_c, len(s._live))
+                need_f = max(need_f, sum(e.size.size
+                                         for e in s._live.values()))
+        grew = False
+        while self._C_cap < need_c:
+            self._C_cap *= 2
+            grew = True
+        while self._F_cap < need_f:
+            self._F_cap *= 2
+            grew = True
+        if self._tb is None or grew:
+            self._tb = empty_batch(self.max_sessions,
+                                   flow_capacity=self._F_cap,
+                                   coflow_capacity=self._C_cap,
+                                   port_capacity=self.num_ports)
+            self._state = self._blank_state()
+            self._blank_rows.clear()
+            for s in self.sessions:
+                s._tb_dirty = True
+        for r in self._blank_rows:
+            blank_row(self._tb, r)
+            self._blank_state_row(r)
+        self._blank_rows.clear()
+        for s in self.sessions:
+            if s._tb_dirty:
+                self._repack_row(s)
+            elif s._state_dirty:
+                self._restate_row(s)
+
+    def _blank_state(self):
+        from repro.core.jax_coordinator import CoordState
+        from repro.fabric.jax_engine import EngineState
+
+        B, C, F = self.max_sessions, self._C_cap, self._F_cap
+        return EngineState(
+            coord=CoordState(np.full((B, C), -1, np.int32),
+                             np.full((B, C), np.inf, np.float32),
+                             np.zeros((B, C), bool)),
+            sent=np.zeros((B, F), np.float32),
+            done=np.ones((B, F), bool),
+            fct=np.zeros((B, F), np.float32),
+            finished=np.ones((B, C), bool),
+            cct=np.full((B, C), np.nan, np.float32),
+            t0=np.zeros((B,), np.float32),
+            tick=np.zeros((B,), np.int32),
+            rate=np.zeros((B, F), np.float32),
+            pend_sent=np.zeros((B, F), np.float32),
+            pend_tick=np.zeros((B,), np.float32),
+            pend_next=np.zeros((B,), np.float32))
+
+    def _blank_state_row(self, r: int) -> None:
+        st = self._state
+        st.coord.queue[r] = -1
+        st.coord.deadline[r] = np.inf
+        st.coord.running[r] = False
+        st.sent[r] = 0.0
+        st.done[r] = True
+        st.fct[r] = 0.0
+        st.finished[r] = True
+        st.cct[r] = np.nan
+        st.t0[r] = 0.0
+        st.tick[r] = 0
+        st.rate[r] = 0.0
+        st.pend_sent[r] = 0.0
+        st.pend_tick[r] = 0.0
+        st.pend_next[r] = 0.0
+
+    def _repack_row(self, s) -> None:
+        from repro.traces.batch import pack_row
+
+        if s._tick - s._epoch >= REBASE_TICKS:
+            # re-base the row's grid epoch: all slab times below are
+            # stored relative to it, restoring δ resolution in f32
+            s._epoch = s._tick
+        table = s._rebuild_table()
+        pack_row(self._tb, s._row, table,
+                 arrival_rank=[e.rank for e in s._slots])
+        s._flow_lo = table.flow_lo.copy()
+        s._flow_hi = table.flow_hi.copy()
+        s._tb_dirty = False
+        self._restate_row(s)
+
+    def _restate_row(self, s) -> None:
+        """Rewrite one row of the EngineState mirror from the session's
+        host entries (the carry that survives re-packs)."""
+        st, r = self._state, s._row
+        epoch_t = s._epoch * self.params.delta
+        self._blank_state_row(r)
+        st.done[r] = ~self._tb.flow_valid[r]
+        st.finished[r] = ~self._tb.coflow_valid[r]
+        for i, e in enumerate(s._slots):
+            lo, hi = s._flow_lo[i], s._flow_hi[i]
+            st.sent[r, lo:hi] = e.sent
+            st.done[r, lo:hi] = e.done
+            st.fct[r, lo:hi] = np.where(
+                e.done, np.nan_to_num(e.fct) - epoch_t, 0.0)
+            st.finished[r, i] = e.finished
+            st.cct[r, i] = e.cct
+            st.coord.queue[r, i] = e.queue
+            st.coord.deadline[r, i] = e.deadline - epoch_t \
+                if np.isfinite(e.deadline) else np.inf
+            st.coord.running[r, i] = e.running
+            st.rate[r, lo:hi] = e.rate
+            st.pend_sent[r, lo:hi] = e.pend_sent
+        st.tick[r] = s._tick - s._epoch
+        if s._pend is not None:
+            st.pend_tick[r] = s._pend[0] - s._epoch
+            st.pend_next[r] = s._pend[1] - s._epoch
+        s._state_dirty = False
+
+    def _sync_row(self, s) -> None:
+        """Mirror one row of the device state back into the session's
+        host entries (absolute f64 times reconstructed from the row
+        epoch)."""
+        st, r = self._state, s._row
+        epoch_t = s._epoch * self.params.delta
+        sent = np.asarray(st.sent[r], np.float64)
+        done = np.asarray(st.done[r])
+        fct = np.asarray(st.fct[r], np.float64)
+        finished = np.asarray(st.finished[r])
+        cct = np.asarray(st.cct[r], np.float64)
+        queue = np.asarray(st.coord.queue[r])
+        deadline = np.asarray(st.coord.deadline[r], np.float64)
+        running = np.asarray(st.coord.running[r])
+        rate = np.asarray(st.rate[r], np.float64)
+        pend_sent = np.asarray(st.pend_sent[r], np.float64)
+        for i, e in enumerate(s._slots):
+            lo, hi = s._flow_lo[i], s._flow_hi[i]
+            e.sent = sent[lo:hi].copy()
+            e.done = done[lo:hi].copy()
+            e.fct = np.where(e.done, fct[lo:hi] + epoch_t, np.nan)
+            e.rate = rate[lo:hi].copy()
+            e.pend_sent = pend_sent[lo:hi].copy()
+            e.finished = bool(finished[i])
+            e.cct = float(cct[i])
+            e.queue = int(queue[i])
+            e.deadline = float(deadline[i] + epoch_t)
+            e.running = bool(running[i])
+        tick_rel = int(st.tick[r])
+        s._tick = s._epoch + tick_rel
+        pn = float(st.pend_next[r])
+        s._pend = (s._epoch + int(st.pend_tick[r]), s._epoch + int(pn)) \
+            if pn > tick_rel else None
+
+
+__all__ = ["SessionPool", "REBASE_TICKS"]

@@ -222,6 +222,34 @@ class Result:
         }
 
 
+def result_from_completions(completions, *, engine: str = "jax",
+                            policy: str = "saath", steps: int = 0,
+                            wall_seconds: float = 0.0) -> Result:
+    """Normalize a stream of online `CompletedCoflow`s (one session /
+    tenant) into the same single-row `Result` the offline engines
+    produce — NaN/padding semantics, `avg_cct`, `makespan`, `summary()`
+    and `benchmarks.common.record` all work unchanged. An empty stream
+    yields the canonical "nothing completed" row (NaN aggregates)."""
+    comps = list(completions)
+    C = len(comps)
+    F = int(sum(d.fct.size for d in comps))
+    cct = np.full((1, max(C, 0)), np.nan)
+    fct = np.full((1, F), np.nan)
+    sent = np.zeros((1, F))
+    lo = 0
+    for i, d in enumerate(comps):
+        n = d.fct.size
+        cct[0, i] = d.cct
+        fct[0, lo:lo + n] = d.fct
+        if d.size is not None:
+            sent[0, lo:lo + n] = d.size
+        lo += n
+    return Result(engine=engine, policy=policy, cct=cct, fct=fct,
+                  sent=sent, num_coflows=np.array([C]),
+                  num_flows=np.array([F]), steps=steps,
+                  wall_seconds=wall_seconds)
+
+
 def _split_mechanisms(sc: Scenario):
     """Validate mechanism names once for both engines."""
     mech = dict(sc.mechanisms or {})
@@ -371,4 +399,4 @@ def _run_jax(sc: Scenario, traces: List[Trace], settings) -> Result:
 
 
 __all__ = ["Scenario", "Result", "run", "resolve_traces",
-           "MECHANISM_KEYS"]
+           "result_from_completions", "MECHANISM_KEYS"]

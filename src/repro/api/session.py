@@ -16,23 +16,28 @@ coordinator as an open-loop service:
   (admitted coflows complete instantly) — the mode
   `runtime.coflow_bridge.plan_waves` is a thin client of.
 
-Two backends share the session contract (DESIGN.md §7):
+Two backends share the session contract (DESIGN.md §7/§8):
 
-* ``backend="jax"`` — the tentpole path: live coflows are packed into a
-  persistent padded device slab (a `TraceBatch` whose capacities only
-  ever grow geometrically, freed rows recycled on re-pack), and
-  `advance` re-enters the jitted `fabric.jax_engine` tick scan with a
-  traced horizon cap, so one compiled chunk executable serves every
-  advance of a long-running session;
+* ``backend="jax"`` — the serving path: the session is a VIEW onto one
+  row of a `repro.api.SessionPool` slab (a standalone session owns a
+  private single-row pool; `SessionPool.session()` hands out rows of a
+  shared multi-tenant slab). The session keeps the host truth — live
+  `_Entry`s, clock, global δ-grid tick, row epoch, and the pending
+  event-horizon mirror — and the pool owns the packed `TraceBatch` +
+  `EngineState` and every jitted dispatch;
 * ``backend="numpy"`` — the event-driven host reference (the parity
   oracle), sharing `fabric.engine.integrate_interval` with the offline
   `Simulator` so the two loops cannot drift.
 
-Incremental replay is exact: the δ grid is pinned at the session epoch
-(t=0), ticks at or past the advance horizon are pure no-ops, and the
-schedule at a tick is only ever evaluated once every arrival at or
-before it has been submitted — so feeding a trace's coflows in at their
-arrival times reproduces the offline `run()` CCTs (tested to 1%).
+Incremental replay is EXACT on both backends: the δ grid is pinned at
+the session epoch, ticks at or past the advance horizon are pure
+no-ops, the schedule at a tick is only ever evaluated once every
+arrival at or before it has been submitted, and a schedule interval a
+horizon cap truncates is RESUMED (stored rates, anchored integration)
+rather than re-evaluated — so feeding a trace's coflows in at their
+arrival times reproduces the offline `run()` trajectory event for
+event. On the jax slab that makes the incremental CCTs bitwise-equal
+to the offline jitted scan (tests/test_session.py).
 """
 from __future__ import annotations
 
@@ -54,6 +59,7 @@ class CompletedCoflow:
     arrival: float
     cct: float              # seconds, arrival-relative
     fct: np.ndarray         # absolute per-flow completion times
+    size: np.ndarray = None  # per-flow bytes (completions moved them all)
 
 
 @dataclasses.dataclass
@@ -69,7 +75,8 @@ class _Entry:
     sent: np.ndarray
     done: np.ndarray
     fct: np.ndarray         # absolute, NaN until done
-    rate: np.ndarray = None  # numpy backend: last schedule's rates
+    rate: np.ndarray = None      # last schedule's per-flow rates
+    pend_sent: np.ndarray = None  # sent at the pending-schedule anchor
     queue: int = -1
     deadline: float = math.inf
     running: bool = False
@@ -83,6 +90,11 @@ class SaathSession:
     `params` are the paper's scheduler knobs; `num_ports` fixes the
     fabric (uniform `params.port_bw` per port). `mechanisms` takes the
     shared ablation switch names (`repro.api.MECHANISM_KEYS`).
+
+    With ``backend="jax"`` the session is a row view onto a
+    `SessionPool` slab (private single-row pool unless constructed via
+    `SessionPool.session()`, in which case `params`/`mechanisms` come
+    from the pool).
     """
 
     def __init__(self, params: Optional[SchedulerParams] = None, *,
@@ -90,7 +102,8 @@ class SaathSession:
                  mechanisms: Optional[dict] = None,
                  fidelity: str = "flow", kernel: Optional[str] = None,
                  chunk: int = 32, min_coflow_capacity: int = 16,
-                 min_flow_capacity: int = 64):
+                 min_flow_capacity: int = 64,
+                 _pool=None, _row: Optional[int] = None):
         if backend not in ("jax", "numpy"):
             raise ValueError(
                 f"unknown backend {backend!r}; available: jax, numpy")
@@ -102,50 +115,55 @@ class SaathSession:
             raise ValueError(
                 f"unknown mechanism switches {sorted(unknown)}; "
                 f"available: {', '.join(MECHANISM_KEYS)}")
-        self.params = params or SchedulerParams()
-        if "dynamics_requeue" in mech:
-            self.params = dataclasses.replace(
-                self.params, dynamics_requeue=mech["dynamics_requeue"])
-        if "work_conservation" in mech:
-            self.params = dataclasses.replace(
-                self.params, work_conservation=mech["work_conservation"])
         self.num_ports = int(num_ports)
         self.backend = backend
         self.kernel = kernel
         self.chunk = int(chunk)
 
         self._clock = 0.0       # continuous session time
-        self._tick = 0          # δ-grid ticks already scheduled
+        self._tick = 0          # global δ-grid ticks already scheduled
+        self._epoch = 0         # δ-grid tick the slab row is based at
         self._seq = 0           # next handle / global FIFO rank
         self._live: Dict[int, _Entry] = {}
         self._slots: List[_Entry] = []      # slab slot order
+        self._flow_lo = self._flow_hi = None
         self._tb_dirty = True   # membership changed -> re-pack
         self._state_dirty = True  # dynamic state changed host-side
+        # pending capped schedule interval, as GLOBAL tick indices
+        # (anchor tick, horizon tick); per-flow anchor rates/sent live
+        # in the entries. numpy keeps continuous times instead.
+        self._pend = None
 
         if backend == "jax":
-            from repro.fabric import jax_engine
+            if _pool is not None:
+                self._pool = _pool
+                self._row = _row
+                self.params = _pool.params
+            else:
+                from repro.api.pool import SessionPool
 
-            self._je = jax_engine
-            self._ep = jax_engine.EngineParams.from_scheduler(
-                self.params,
-                work_conservation=mech.get("work_conservation"),
-                dynamics_requeue=mech.get("dynamics_requeue"),
-                lcof=mech.get("lcof", True),
-                per_flow_threshold=mech.get("per_flow_threshold", True))
-            self._features = jax_engine.features_for(
-                self.params, fidelity=fidelity,
-                dynamics_requeue=mech.get("dynamics_requeue"),
-                lcof=mech.get("lcof", True),
-                per_flow_threshold=mech.get("per_flow_threshold", True))
-            self._C_cap = int(min_coflow_capacity)
-            self._F_cap = int(min_flow_capacity)
-            self._tb = None
-            self._state = None
-            self._flow_lo = self._flow_hi = None
+                pool = SessionPool(
+                    params, num_ports=num_ports, max_sessions=1,
+                    mechanisms=mech, fidelity=fidelity, kernel=kernel,
+                    chunk=chunk,
+                    min_coflow_capacity=min_coflow_capacity,
+                    min_flow_capacity=min_flow_capacity)
+                pool._adopt(self)
+                self._pool = pool
+                self._row = 0
+                self.params = pool.params
         else:
             from repro.core.policies import make_policy
             from repro.fabric.engine import Simulator
 
+            self.params = params or SchedulerParams()
+            if "dynamics_requeue" in mech:
+                self.params = dataclasses.replace(
+                    self.params, dynamics_requeue=mech["dynamics_requeue"])
+            if "work_conservation" in mech:
+                self.params = dataclasses.replace(
+                    self.params,
+                    work_conservation=mech["work_conservation"])
             pol_kw = {k: mech[k] for k in ("lcof", "per_flow_threshold",
                                            "work_conservation")
                       if k in mech}
@@ -169,10 +187,31 @@ class SaathSession:
     def num_live(self) -> int:
         return len(self._live)
 
+    @property
+    def _C_cap(self) -> int:
+        return self._pool._C_cap
+
+    @property
+    def _F_cap(self) -> int:
+        return self._pool._F_cap
+
+    def close(self) -> None:
+        """Release this session's pool row (jax backend; unfinished
+        coflows are dropped). The session is unusable afterwards."""
+        if self.backend == "jax" and self._pool is not None:
+            self._pool.release(self)
+        self._live.clear()
+
+    def _check_open(self) -> None:
+        if self.backend == "jax" and self._pool is None:
+            raise RuntimeError("session was closed (its pool row was "
+                               "released)")
+
     def submit(self, coflows: Sequence[Coflow]) -> List[int]:
         """Register coflows; returns their session handles. A coflow's
         `arrival` below the current clock is clamped to it (the
         coordinator cannot schedule the past)."""
+        self._check_open()
         handles = []
         for cf in coflows:
             src = np.array([f.src for f in cf.flows], np.int32)
@@ -191,7 +230,8 @@ class SaathSession:
                                               self._clock),
                 rank=self._seq, src=src, dst=dst, size=size,
                 sent=np.zeros(w), done=np.zeros(w, bool),
-                fct=np.full(w, np.nan), rate=np.zeros(w))
+                fct=np.full(w, np.nan), rate=np.zeros(w),
+                pend_sent=np.zeros(w))
             self._live[e.handle] = e
             handles.append(e.handle)
             self._seq += 1
@@ -203,10 +243,11 @@ class SaathSession:
         δ-grid tick up to it; returns the new clock."""
         if dt < 0:
             raise ValueError("advance(dt) needs dt >= 0")
+        self._check_open()
         self._clock += float(dt)
         n_end = int(math.floor(self._clock / self.params.delta + 1e-9))
         if self.backend == "jax":
-            self._advance_jax(n_end)
+            self._pool._advance([(self, n_end)])
         else:
             self._advance_numpy(n_end)
         return self._clock
@@ -220,7 +261,8 @@ class SaathSession:
             if e.finished:
                 out.append(CompletedCoflow(handle=h, arrival=e.arrival,
                                            cct=float(e.cct),
-                                           fct=e.fct.copy()))
+                                           fct=e.fct.copy(),
+                                           size=e.size.copy()))
                 del self._live[h]
                 self._tb_dirty = True
         return out
@@ -246,6 +288,7 @@ class SaathSession:
         coflows complete instantly (an SPMD collective is indivisible —
         issuing it IS completing it for planning purposes) and their
         handles are returned; the clock moves one δ."""
+        self._check_open()
         before = self._tick
         admitted = self._planned_admissions()
         # jax backend: session_plan_tick already advanced the device
@@ -269,8 +312,10 @@ class SaathSession:
             e.finished = True
             e.cct = now - e.arrival
         self._state_dirty = True
+        # the stored schedule (and any capped interval of it) is stale
+        self._pend = None
         if self.backend == "numpy":
-            self._pending = None      # the stored schedule is stale now
+            self._pending = None
         if self.backend == "numpy" and self._table is not None \
                 and not self._tb_dirty:
             # mutate the live table in place (no re-pack needed)
@@ -287,10 +332,12 @@ class SaathSession:
 
     def _rebuild_table(self) -> FlowTable:
         """Re-materialize the live coflows (slot order = submission
-        order) as a fresh FlowTable — the shared first step of both
-        backends' re-pack paths."""
+        order) as a fresh FlowTable with arrivals relative to the row
+        epoch — the shared first step of both backends' re-pack paths
+        (the numpy backend's epoch is always 0)."""
         self._slots = list(self._live.values())
-        coflows = [Coflow(cid=i, arrival=e.arrival,
+        epoch_t = self._epoch * self.params.delta
+        coflows = [Coflow(cid=i, arrival=e.arrival - epoch_t,
                           flows=[Flow(0, int(s), int(d), float(z))
                                  for s, d, z in zip(e.src, e.dst,
                                                     e.size)])
@@ -298,103 +345,6 @@ class SaathSession:
         return FlowTable.from_trace(
             Trace(num_ports=self.num_ports, coflows=coflows),
             self.params.port_bw)
-
-    # ---- jax backend: the persistent device slab -------------------------
-
-    def _ensure_slab(self) -> None:
-        import jax.numpy as jnp
-
-        from repro.core import jax_coordinator as jc
-        from repro.fabric.jax_engine import EngineState
-        from repro.traces.batch import pack
-
-        if self._tb_dirty:
-            table = self._rebuild_table()
-            need_c = len(self._slots)
-            need_f = sum(e.size.size for e in self._slots)
-            while self._C_cap < need_c:
-                self._C_cap *= 2
-            while self._F_cap < need_f:
-                self._F_cap *= 2
-            tb = pack([table], flow_capacity=self._F_cap,
-                      coflow_capacity=self._C_cap,
-                      port_capacity=self.num_ports)
-            # FIFO order must be session-global: overwrite the per-pack
-            # arrival argsort with the global submission ranks
-            tb.arrival_rank[0, :need_c] = [e.rank for e in self._slots]
-            self._tb = tb
-            self._flow_lo = table.flow_lo.copy()
-            self._flow_hi = table.flow_hi.copy()
-            self._tb_dirty = False
-            self._state_dirty = True
-
-        if self._state_dirty:
-            tb = self._tb
-            C, F = tb.max_coflows, tb.max_flows
-            sent = np.zeros((1, F), np.float32)
-            done = ~tb.flow_valid.copy()
-            fct = np.zeros((1, F), np.float32)
-            finished = ~tb.coflow_valid.copy()
-            cct = np.full((1, C), np.nan, np.float32)
-            queue = np.full((1, C), -1, np.int32)
-            deadline = np.full((1, C), np.inf, np.float32)
-            running = np.zeros((1, C), bool)
-            for i, e in enumerate(self._slots):
-                lo, hi = self._flow_lo[i], self._flow_hi[i]
-                sent[0, lo:hi] = e.sent
-                done[0, lo:hi] = e.done
-                fct[0, lo:hi] = np.where(e.done,
-                                         np.nan_to_num(e.fct), 0.0)
-                finished[0, i] = e.finished
-                cct[0, i] = e.cct
-                queue[0, i] = e.queue
-                deadline[0, i] = e.deadline
-                running[0, i] = e.running
-            self._state = EngineState(
-                coord=jc.CoordState(jnp.asarray(queue),
-                                    jnp.asarray(deadline),
-                                    jnp.asarray(running)),
-                sent=jnp.asarray(sent), done=jnp.asarray(done),
-                fct=jnp.asarray(fct), finished=jnp.asarray(finished),
-                cct=jnp.asarray(cct),
-                t0=jnp.zeros((1,), jnp.float32),
-                tick=jnp.full((1,), self._tick, jnp.int32))
-            self._state_dirty = False
-
-    def _sync_from_device(self) -> None:
-        s = self._state
-        sent = np.asarray(s.sent, np.float64)[0]
-        done = np.asarray(s.done)[0]
-        fct = np.asarray(s.fct, np.float64)[0]
-        finished = np.asarray(s.finished)[0]
-        cct = np.asarray(s.cct, np.float64)[0]
-        queue = np.asarray(s.coord.queue)[0]
-        deadline = np.asarray(s.coord.deadline, np.float64)[0]
-        running = np.asarray(s.coord.running)[0]
-        for i, e in enumerate(self._slots):
-            lo, hi = self._flow_lo[i], self._flow_hi[i]
-            e.sent = sent[lo:hi].copy()
-            e.done = done[lo:hi].copy()
-            e.fct = np.where(e.done, fct[lo:hi], np.nan)
-            e.finished = bool(finished[i])
-            e.cct = float(cct[i])
-            e.queue = int(queue[i])
-            e.deadline = float(deadline[i])
-            e.running = bool(running[i])
-        self._tick = int(np.asarray(s.tick)[0])
-
-    def _advance_jax(self, n_end: int) -> None:
-        if n_end <= self._tick:
-            return
-        if not self._live:
-            self._tick = n_end
-            return
-        self._ensure_slab()
-        self._state, _ = self._je.session_advance(
-            self._state, self._tb, self._ep, n_end=n_end,
-            chunk=self.chunk, kernel=self.kernel,
-            features=self._features)
-        self._sync_from_device()
 
     # ---- numpy backend: incremental event-driven reference ---------------
 
@@ -518,12 +468,7 @@ class SaathSession:
             return []
         now = self._tick * self.params.delta
         if self.backend == "jax":
-            self._ensure_slab()
-            self._state, admitted = self._je.session_plan_tick(
-                self._state, self._tb, self._ep, kernel=self.kernel,
-                features=self._features)
-            adm = np.asarray(admitted)[0]
-            self._sync_from_device()
+            adm = self._pool._plan_tick(self)
             return [e.handle for i, e in enumerate(self._slots)
                     if adm[i] and not e.finished]
         self._ensure_table()

@@ -235,8 +235,13 @@ def tick_core(state: CoordState, batch: CoflowBatch, now: jax.Array,
     key_q = jnp.where(expired, 0, q)
     key_k = jnp.where(expired | ~lc, 0, k)
     key_st = jnp.where(expired | ~lc, 0, not_running)
-    key_arr = jnp.where(expired, 0, arr_rank)
-    perm = jnp.lexsort((jnp.arange(C), key_arr, key_st, key_k, key_q,
+    # arr_rank stays a live key for EXPIRED coflows too: exact f32
+    # deadline ties (same tick, same queue, same width) must break by a
+    # layout-independent total order — the final arange(C) tie-break is
+    # the slab POSITION, which differs between an offline pack (cid
+    # order) and a session slab (submission order), and would fork an
+    # otherwise bitwise-identical incremental replay.
+    perm = jnp.lexsort((jnp.arange(C), arr_rank, key_st, key_k, key_q,
                         dl_key, primary))
 
     # D1/D2: all-or-none admission with MADD equal rates, processed in

@@ -108,13 +108,20 @@ class Saath(Policy):
         # 'stability' prefers coflows admitted in the previous schedule on
         # exact (queue, contention) ties — local agents follow the current
         # schedule until told otherwise (§5), so ties do not cause churn.
+        # expired deadline TIES break by arrival (then index): same
+        # tick + same queue + same width gives exactly equal deadlines,
+        # and both planes must resolve them by a layout-independent
+        # order — the jitted coordinator's slab position is a session's
+        # submission order, not this table's cid order.
         cids = np.nonzero(active)[0]
         if self.lcof:
-            key = [(0, self._deadline[c], 0, 0, 0, c) if expired[c] else
+            key = [(0, self._deadline[c], 0, 0, table.arrival[c], c)
+                   if expired[c] else
                    (1, q_new[c], k[c], int(~self._running[c]),
                     table.arrival[c], c) for c in cids]
         else:  # FIFO within queue (the A/N-only ablation)
-            key = [(0, self._deadline[c], 0, 0, 0, c) if expired[c] else
+            key = [(0, self._deadline[c], 0, 0, table.arrival[c], c)
+                   if expired[c] else
                    (1, q_new[c], table.arrival[c], 0, 0, c) for c in cids]
         order = cids[sorted(range(len(cids)), key=lambda i: key[i])]
 

@@ -1,7 +1,7 @@
-from repro.fabric.engine import SimResult, Simulator, simulate
+from repro.fabric.engine import SimResult, Simulator
 from repro.fabric.state import FlowTable
 
 # fabric.jax_engine (the batched XLA fleet engine) is imported lazily by
 # its users — importing it here would pull jax into every fabric import.
 
-__all__ = ["FlowTable", "Simulator", "SimResult", "simulate"]
+__all__ = ["FlowTable", "Simulator", "SimResult"]

@@ -182,19 +182,3 @@ class Simulator:
         makespan = float(fin_fct.max()) if fin_fct.size else float("nan")
         return SimResult(table, steps, time.perf_counter() - t0, sched_s,
                          makespan)
-
-
-def simulate(trace, policy_name: str, params: Optional[SchedulerParams] = None,
-             *, policy_kwargs: Optional[dict] = None,
-             max_jump: Optional[float] = None) -> SimResult:
-    """One-call convenience: trace + policy name -> SimResult.
-
-    Deprecated front door (kept as a shim for one PR): new code should
-    go through `repro.api.run(Scenario(...))`, which normalizes results
-    across both engines."""
-    from repro.core.policies import make_policy
-
-    params = params or SchedulerParams()
-    table = FlowTable.from_trace(trace, params.port_bw)
-    policy = make_policy(policy_name, params, **(policy_kwargs or {}))
-    return Simulator(params, max_jump=max_jump).run(table, policy)

@@ -79,15 +79,33 @@ class EngineParams(NamedTuple):
 
 
 class EngineState(NamedTuple):
-    """Per-trace scan carry (all leaves get a leading batch axis)."""
+    """Per-trace scan carry (all leaves get a leading batch axis).
+
+    The four trailing fields exist only in SESSION states (online
+    `repro.api` slabs; `None` — compiled out — for offline replays):
+    they carry the *pending event horizon* of a schedule interval that
+    an advance's `n_end` cap truncated, so the next advance resumes the
+    STORED rates from the STORED anchor instead of re-evaluating the
+    boundary tick — the same discipline the numpy session oracle uses,
+    which is what makes incremental replay bitwise-equal to the offline
+    scan (re-evaluation is a fixed point only until §4.3 dynamics drift
+    moves a queue). Integration is anchor-based: every capped piece of
+    the interval recomputes `sent`/`fct` from (pend_tick, pend_sent),
+    so splitting an interval at arbitrary horizons cannot change a
+    single f32 rounding versus the offline one-shot integration.
+    """
     coord: jc.CoordState
     sent: jax.Array      # (F,) f32 bytes
     done: jax.Array      # (F,) bool
     fct: jax.Array       # (F,) f32 absolute completion time (0 until done)
     finished: jax.Array  # (C,) bool
     cct: jax.Array       # (C,) f32 completion - arrival (nan until done)
-    t0: jax.Array        # () f32 grid origin (first arrival, quantized up)
+    t0: jax.Array        # () f32 grid origin (0; kept for generality)
     tick: jax.Array      # () i32 next tick index
+    rate: Optional[jax.Array] = None       # (F,) f32 pending rates
+    pend_sent: Optional[jax.Array] = None  # (F,) f32 sent at the anchor
+    pend_tick: Optional[jax.Array] = None  # () f32 anchor tick index
+    pend_next: Optional[jax.Array] = None  # () f32 horizon tick (0=none)
 
 
 class EngineResult(NamedTuple):
@@ -115,11 +133,18 @@ class EngineResult(NamedTuple):
 # ---- single-trace tick ---------------------------------------------------
 
 def _init_state(tb: TraceBatch, ep: EngineParams) -> EngineState:
-    """Single-trace state init (arrays here are unbatched rows)."""
+    """Single-trace state init (arrays here are unbatched rows).
+
+    The δ grid is pinned at t=0 for every replay — the same grid the
+    online sessions use — so an incremental session replay and the
+    offline scan see bit-identical `now` values at every tick (an
+    arrival-quantized origin would shift the f32 rounding of
+    `t0 + tick*δ`). Idle ticks before the first arrival cost nothing:
+    the arrival event horizon jumps straight across them.
+    """
     F = tb.cid.shape[0]
     C = tb.arrival.shape[0]
-    first = jnp.min(jnp.where(tb.coflow_valid, tb.arrival, jnp.inf))
-    t0 = jnp.ceil(first / ep.delta - 1e-6) * ep.delta
+    t0 = jnp.float32(0.0)
     return EngineState(
         coord=jc.CoordState(jnp.full((C,), -1, jnp.int32),
                             jnp.full((C,), jnp.inf, jnp.float32),
@@ -135,6 +160,9 @@ def _init_state(tb: TraceBatch, ep: EngineParams) -> EngineState:
 # max ticks one event-jump may skip (idle gaps between arrivals are
 # jumped exactly; this only caps pathological/finished lanes)
 MAX_JUMP_TICKS = 1024.0
+# an idle lane (no live flows) jumps straight to its next arrival in
+# one step; this only caps that jump inside the f32-exact tick range
+IDLE_JUMP_TICKS = float(1 << 22)
 # with the §4.3 dynamics re-queue active the cap MIRRORS
 # fabric.engine.Simulator's default max_jump of 200δ — semantic, not
 # just a guard: the estimated remaining length drifts continuously (no
@@ -168,13 +196,24 @@ def _segment_max(data: jax.Array, tb: TraceBatch) -> jax.Array:
 
 def _views(state: EngineState, tb: TraceBatch, now: jax.Array,
            eps_t: jax.Array, *, per_flow_wc: bool, with_dynamics: bool,
-           with_ablations: bool):
+           with_ablations: bool, active_gate: Optional[jax.Array] = None):
     """One tick's coordinator view of the slab: activation, per-(coflow,
     port) live counts, Eq. 1 m_c, and (when compiled in) the §4.3
     finished-flow-median inputs — shared by the scanned `_tick` and the
-    single-shot session `plan_tick`."""
+    single-shot session `plan_tick`.
+
+    `active_gate` (sessions) is `tick < n_end`: a lane at or past its
+    horizon has its whole step DISCARDED anyway (`_tick`'s no-op
+    select), so deactivating it up front is free — and it zeroes the
+    admission/work-conservation while_loop trip counts, making the
+    trailing no-op ticks of a chunk cost almost nothing. That surplus
+    is what lets one pooled dispatch amortize its fixed cost across
+    many session lanes (DESIGN.md §8).
+    """
     # activation (reference: arrival <= now + eps, eps << δ)
     active = tb.coflow_valid & ~state.finished & (tb.arrival <= now + eps_t)
+    if active_gate is not None:
+        active = active & active_gate
     live = active[tb.cid] & ~state.done & tb.flow_valid
     livef = live.astype(jnp.float32)
 
@@ -207,8 +246,24 @@ def _views(state: EngineState, tb: TraceBatch, now: jax.Array,
         k2 = n_done // 2
         hit1 = (d_s > 0.5) & (drank == k1[cid_s])
         hit2 = (d_s > 0.5) & (drank == k2[cid_s])
-        v1 = _segment_sum(size_s * hit1, tb.flow_lo, tb.flow_hi)
-        v2 = _segment_sum(size_s * hit2, tb.flow_lo, tb.flow_hi)
+
+        # each hit mask selects AT MOST ONE flow per segment, so the
+        # pick is a segmented MAX (exact for any padding/layout — a
+        # cumsum-difference would round by ulp(prefix), making the
+        # median depend on what else shares the slab row, which breaks
+        # the session-vs-offline bitwise contract). perm_size permutes
+        # flows only WITHIN coflow segments, so [flow_lo, flow_hi)
+        # spans are valid in this order too.
+        def pick(data):
+            def comb(a, b):
+                va, ia = a
+                vb, ib = b
+                return jnp.where(ia == ib, jnp.maximum(va, vb), vb), ib
+            v, _ = jax.lax.associative_scan(comb, (data, cid_s))
+            return jnp.where(tb.coflow_valid, v[tb.flow_hi - 1], 0.0)
+
+        v1 = pick(size_s * hit1)
+        v2 = pick(size_s * hit2)
         f_e = 0.5 * (v1 + v2)        # median (0 when nothing finished)
         rem_dyn = jnp.maximum(f_e[tb.cid] - state.sent, 0.0) * livef
         m_dyn = _segment_max(rem_dyn, tb)
@@ -250,16 +305,24 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     is an exact no-op (the whole new state is discarded), so an online
     `SaathSession` can advance to a wall-clock horizon, accept new
     arrivals, and re-enter the scan without ever having scheduled a tick
-    that couldn't yet see them. `None` (offline replay) compiles the cap
-    out.
+    that couldn't yet see them. When the cap truncates a schedule
+    interval, the pending event horizon (rates + anchor) is carried in
+    the state, and the next step RESUMES the stored schedule — stopping
+    early only at a since-submitted arrival's tick, exactly like the
+    numpy session oracle — instead of re-evaluating the boundary tick,
+    so incremental replay is bitwise the offline scan. `None` (offline
+    replay) compiles both the cap and the pending machinery out.
     """
+    session = n_end is not None
     delta = ep.delta
     tickf = state.tick.astype(jnp.float32)
     now = state.t0 + tickf * delta
     eps_t = 1e-3 * delta
+    can = tickf < n_end if session else None
     batch, flows, active, live, livef = _views(
         state, tb, now, eps_t, per_flow_wc=per_flow_wc,
-        with_dynamics=with_dynamics, with_ablations=with_ablations)
+        with_dynamics=with_dynamics, with_ablations=with_ablations,
+        active_gate=can)
     total = batch.total
     coord, out = jc.tick_core(state.coord, batch, now, ep.dp,
                               kernel=kernel, flows=flows)
@@ -305,17 +368,60 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     n_ev = jnp.where(jnp.isfinite(t_ev),
                      jnp.ceil((t_ev - state.t0) / delta - 1e-4),
                      tickf + jump)
-    n_next = jnp.clip(n_ev, tickf + 1.0, tickf + jump)
-    if n_end is not None:
-        n_next = jnp.minimum(n_next, jnp.maximum(n_end, tickf + 1.0))
-    dt = (n_next - tickf) * delta
+    # the jump cap bounds RE-EVALUATION cadence on live state (§4.3
+    # drift; pathological-lane guard). With nothing live there is
+    # nothing to re-evaluate — an idle gap (e.g. the run-up from the
+    # t=0 grid origin to a late first arrival) is jumped in ONE step,
+    # bounded only by the f32-exact tick range.
+    idle_jump = jnp.float32(IDLE_JUMP_TICKS)
+    hi = tickf + jnp.where(jnp.any(live), jnp.float32(jump), idle_jump)
+    n_un = jnp.clip(n_ev, tickf + 1.0, hi)  # uncapped horizon
 
-    # ---- integrate the constant rates over [now, now + dt) -----------
-    adv = r_f * dt
-    fin = served & (adv >= rem - REL_EPS * tb.size)
-    fct = jnp.where(fin, now + rem / jnp.maximum(r_f, 1e-30), state.fct)
+    if not session:
+        n_next = n_un
+        r_use, anchor_t, anchor_tick = r_f, now, tickf
+        anchor_sent, coord_new = state.sent, coord
+    else:
+        cap = jnp.maximum(n_end, tickf + 1.0)
+        # pending-horizon resume: if the previous advance capped a
+        # schedule interval, keep integrating the STORED rates from the
+        # STORED anchor to the stored horizon — or to the δ-quantized
+        # tick of an arrival submitted since the anchor (a discrete
+        # event the offline loop would have stopped at) — instead of
+        # re-evaluating the boundary tick.
+        pend_t = state.t0 + state.pend_tick * delta
+        late = jnp.min(jnp.where(
+            tb.coflow_valid & (tb.arrival > pend_t + eps_t),
+            tb.arrival, inf))
+        late_n = jnp.maximum(jnp.ceil((late - state.t0) / delta - 1e-4),
+                             state.pend_tick + 1.0)
+        stop = jnp.minimum(state.pend_next, late_n)
+        resuming = (state.pend_next > tickf) & (stop > tickf)
+        n_next = jnp.where(resuming, jnp.minimum(stop, cap),
+                           jnp.minimum(n_un, cap))
+        r_use = jnp.where(resuming, state.rate, r_f)
+        anchor_t = jnp.where(resuming, pend_t, now)
+        anchor_tick = jnp.where(resuming, state.pend_tick, tickf)
+        anchor_sent = jnp.where(resuming, state.pend_sent, state.sent)
+        # a resumed interval does NOT re-invoke the coordinator: queue
+        # moves / deadline refreshes happen only at evaluation instants,
+        # exactly as in the offline loop
+        coord_new = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(resuming, a, b), state.coord, coord)
+        served = live & (r_use > 0)
+
+    # ---- integrate the constant rates across the interval, ANCHORED
+    # at the evaluation instant: sent/fct are recomputed from the
+    # anchor, so an interval split by n_end caps integrates to exactly
+    # the same f32 values as the offline single-shot step -------------
+    dt = (n_next - anchor_tick) * delta
+    rem_a = tb.size - anchor_sent
+    adv = r_use * dt
+    fin = served & (adv >= rem_a - REL_EPS * tb.size)
+    fct = jnp.where(fin, anchor_t + rem_a / jnp.maximum(r_use, 1e-30),
+                    state.fct)
     sent = jnp.where(fin, tb.size,
-                     jnp.minimum(tb.size, state.sent + adv))
+                     jnp.minimum(tb.size, anchor_sent + adv))
     done = state.done | fin
 
     # coflow completions: CCT = last FCT - arrival (fct is 0 until a
@@ -326,17 +432,32 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     last_fct = _segment_max(fct * tb.flow_valid, tb)
     cct = jnp.where(newly, last_fct - tb.arrival, state.cct)
 
-    new = EngineState(coord=coord, sent=sent, done=done, fct=fct,
+    if not session:
+        return EngineState(coord=coord, sent=sent, done=done, fct=fct,
+                           finished=state.finished | newly, cct=cct,
+                           t0=state.t0,
+                           tick=state.tick + (n_next - tickf)
+                           .astype(jnp.int32))
+    # pending bookkeeping: cleared once the interval's horizon (or the
+    # arrival stop) is reached; (re)armed when this step's interval was
+    # truncated by the n_end cap. The anchor leaves (rate/pend_sent/
+    # pend_tick) always reflect the interval just integrated, so a
+    # re-armed pending resumes from the original evaluation instant.
+    hit = n_next >= jnp.where(resuming, stop, n_un)
+    pend_next = jnp.where(hit, jnp.float32(0.0),
+                          jnp.where(resuming, state.pend_next, n_un))
+    new = EngineState(coord=coord_new, sent=sent, done=done, fct=fct,
                       finished=state.finished | newly, cct=cct,
                       t0=state.t0, tick=state.tick + (n_next - tickf)
-                      .astype(jnp.int32))
-    if n_end is None:
-        return new
+                      .astype(jnp.int32),
+                      rate=r_use, pend_sent=anchor_sent,
+                      pend_tick=anchor_tick, pend_next=pend_next)
     # at/past the horizon the step must be a PURE no-op: the schedule at
     # tick n_end is evaluated on the NEXT advance, when every arrival
     # submitted at <= n_end*δ is already in the slab — evaluating it now
-    # would bake deadlines/queues that ignore those arrivals.
-    can = tickf < n_end
+    # would bake deadlines/queues that ignore those arrivals. (`can`
+    # also pre-gated activation above, so this discarded step computed
+    # with zero admission/WC loop trips.)
     return jax.tree_util.tree_map(
         lambda a, b: jnp.where(can, a, b), new, state)
 
@@ -347,29 +468,28 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     "chunk", "kernel", "sweep", "features"))
 def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
                *, chunk: int, kernel: Optional[str], sweep: bool,
-               features: tuple,
-               n_end: Optional[jax.Array] = None) -> EngineState:
+               features: tuple) -> EngineState:
     """Scan `chunk` ticks for every trace in the batch (one executable,
     reused across chunks so the host completion loop never recompiles).
     sweep=True maps the EngineParams' leading axis alongside the traces.
     `features` = (per_flow_wc, with_dynamics, with_ablations), the
-    static structure switches threaded to `_tick`. `n_end` (sessions)
-    caps every lane at that tick index — see `_tick`.
+    static structure switches threaded to `_tick`. Offline replays
+    only: sessions go through `_run_session_block`, whose device-side
+    while_loop carries the per-row horizon caps.
     """
     per_flow_wc, with_dynamics, with_ablations = features
+    ep_ax = 0 if sweep else None
 
     def scan_ticks(s, tb_row, ep_row):
         def body(c, _):
             return _tick(c, tb_row, ep_row, kernel,
                          per_flow_wc=per_flow_wc,
                          with_dynamics=with_dynamics,
-                         with_ablations=with_ablations,
-                         n_end=n_end), None
+                         with_ablations=with_ablations), None
         s, _ = jax.lax.scan(body, s, None, length=chunk)
         return s
 
-    return jax.vmap(scan_ticks, in_axes=(0, 0, 0 if sweep else None))(
-        state, tb, ep)
+    return jax.vmap(scan_ticks, in_axes=(0, 0, ep_ax))(state, tb, ep)
 
 
 @functools.partial(jax.jit, static_argnames=("sweep",))
@@ -409,9 +529,10 @@ def simulate_batch(traces: "Sequence | TraceBatch",
                    fidelity: str = "flow") -> EngineResult:
     """Replay a fleet of traces under one parameter setting.
 
-    Deprecated front door (kept as a shim for one PR): new code should
-    go through `repro.api.run(Scenario(..., engine="jax"))`, which owns
-    result normalization and the engine-equivalence contract.
+    Internal engine entry point: the public front door is
+    `repro.api.run(Scenario(..., engine="jax"))`, which owns result
+    normalization and the engine-equivalence contract. Only
+    `repro.api` and the engine's own tests call this directly.
 
     The mechanism switches default to the SchedulerParams fields
     (work_conservation / dynamics_requeue) or full SAATH (lcof /
@@ -446,7 +567,7 @@ def simulate_sweep(trace, params_list: Sequence[SchedulerParams], *,
                    fidelity: str = "flow") -> EngineResult:
     """Replay ONE trace under M parameter settings as one computation.
 
-    Deprecated front door (kept as a shim for one PR): prefer
+    Internal engine entry point: the public front door is
     `repro.api.run(Scenario(..., sweep=...))`.
 
     All settings must share num_queues (K is a static shape) and delta
@@ -527,45 +648,86 @@ def features_for(params: SchedulerParams, *, fidelity: str = "flow",
             not (lcof and per_flow_threshold))
 
 
+@functools.partial(jax.jit, static_argnames=("kernel", "features"))
+def _run_session_block(state: EngineState, tb: TraceBatch,
+                       ep: EngineParams, n_end: jax.Array,
+                       max_steps: jax.Array, *,
+                       kernel: Optional[str], features: tuple):
+    """Advance every session lane to its own `n_end` horizon (or until
+    its real coflows finish) in ONE dispatch: a device-side while_loop
+    over vmapped `_tick` steps runs EXACTLY the event steps the fleet
+    needs — no fixed-chunk padding, no host round-trip per chunk. This
+    is what makes a pooled advance cost one dispatch's fixed overhead
+    for the whole fleet instead of per session (DESIGN.md §8)."""
+    per_flow_wc, with_dynamics, with_ablations = features
+
+    def lanes_open(s):
+        tickf = s.tick.astype(jnp.float32)
+        done = (tickf >= n_end) | jnp.all(s.finished, axis=-1)
+        return ~jnp.all(done)
+
+    def cond(carry):
+        s, steps = carry
+        return lanes_open(s) & (steps < max_steps)
+
+    def body(carry):
+        s, steps = carry
+        s = jax.vmap(
+            lambda srow, tbrow, nerow: _tick(
+                srow, tbrow, ep, kernel, per_flow_wc=per_flow_wc,
+                with_dynamics=with_dynamics,
+                with_ablations=with_ablations, n_end=nerow))(s, tb, n_end)
+        return s, steps + 1
+
+    return jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+
+
 def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
-                    *, n_end: int, chunk: int = 32,
+                    *, n_end, chunk: int = 32,
                     kernel: Optional[str] = None,
                     features: tuple = (True, True, False),
                     max_steps: int = 10_000_000):
-    """Re-enter the jitted tick scan on a live session slab until every
-    lane has reached δ-grid tick `n_end` or finished all its real
-    coflows. The horizon cap is traced (`_tick`'s `n_end`), so one
-    compiled chunk executable serves every advance; ticks at or past the
-    horizon are exact no-ops. Returns (state, event_steps_executed)."""
-    steps = 0
-    ne = jnp.float32(n_end)
-    while True:
-        ticks = np.asarray(state.tick)
-        fin = np.asarray(state.finished).all(axis=-1)
-        if bool(np.all((ticks >= n_end) | fin)):
-            break
-        state = _run_chunk(state, tb, ep, chunk=chunk, kernel=kernel,
-                           sweep=False, features=features, n_end=ne)
-        steps += chunk
-        if steps > max_steps:
-            raise RuntimeError(
-                f"session_advance exceeded {max_steps} event steps "
-                f"before reaching tick {n_end} (check the slab)")
+    """Re-enter the jitted tick loop on a live session slab until every
+    lane has reached its δ-grid tick target or finished all its real
+    coflows. `n_end` is a scalar or a (B,) per-row array — a
+    `SessionPool` advances a whole fleet of sessions, each to its own
+    horizon, with ONE dispatch; lanes already at their horizon are
+    exact no-ops. The caps are traced, so one compiled executable
+    serves every advance of every session. `chunk` is accepted for API
+    compatibility but unused: the device-side while_loop runs exactly
+    the event steps needed. Returns (state, event_steps_executed)."""
+    del chunk
+    ne = jnp.asarray(np.broadcast_to(
+        np.asarray(n_end, np.float32),
+        np.shape(np.asarray(state.tick))).copy())
+    state, steps = _run_session_block(
+        state, tb, ep, ne, jnp.int32(max_steps),
+        kernel=kernel, features=features)
+    steps = int(np.asarray(steps))
+    if steps >= max_steps:
+        raise RuntimeError(
+            f"session_advance exceeded {max_steps} event steps before "
+            f"reaching its tick horizon (check the slab)")
     return state, steps
 
 
 @functools.partial(jax.jit, static_argnames=("kernel", "features"))
 def session_plan_tick(state: EngineState, tb: TraceBatch,
                       ep: EngineParams, *, kernel: Optional[str] = None,
-                      features: tuple = (True, False, False)):
+                      features: tuple = (True, False, False),
+                      row_mask: Optional[jax.Array] = None):
     """One coordinator tick on the slab WITHOUT integrating rates: the
     wave-planning mode `runtime.coflow_bridge.plan_waves` uses (a wave =
     the admitted set of one tick; the caller completes admitted coflows
-    instantly). Returns (state with post-tick coordinator carry and
-    tick+1, admitted (B, C) bool)."""
+    instantly). `row_mask` (B,) selects which sessions of a pooled slab
+    plan this tick — unselected rows are exact no-ops (their state is
+    untouched and they admit nothing). Any pending capped interval of a
+    planning row is discarded: planning re-evaluates every tick.
+    Returns (state with post-tick coordinator carry and tick+1,
+    admitted (B, C) bool)."""
     per_flow_wc, with_dynamics, with_ablations = features
 
-    def one(s, tb_row):
+    def one(s, tb_row, m):
         tickf = s.tick.astype(jnp.float32)
         now = s.t0 + tickf * ep.delta
         eps_t = 1e-3 * ep.delta
@@ -574,33 +736,18 @@ def session_plan_tick(state: EngineState, tb: TraceBatch,
             with_dynamics=with_dynamics, with_ablations=with_ablations)
         coord, out = jc.tick_core(s.coord, batch, now, ep.dp,
                                   kernel=kernel, flows=flows)
-        return s._replace(coord=coord, tick=s.tick + 1), out["admitted"]
+        new = s._replace(coord=coord, tick=s.tick + 1)
+        if s.pend_next is not None:
+            new = new._replace(pend_next=jnp.zeros_like(s.pend_next))
+        new = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(m, a, b), new, s)
+        return new, out["admitted"] & m
 
-    return jax.vmap(one)(state, tb)
-
-
-def run_to_table(trace, params: Optional[SchedulerParams] = None, **kw):
-    """Single-trace convenience: replay through the batched engine and
-    write cct/fct/sent back into a FlowTable (for metrics helpers like
-    `fabric.metrics.bin_speedups` that consume tables).
-
-    Deprecated front door (kept as a shim for one PR): prefer
-    `repro.api.run(...)` and `Result.table()`."""
-    from repro.fabric.state import FlowTable
-
-    params = params or SchedulerParams()
-    table = FlowTable.from_trace(trace, params.port_bw)
-    res = simulate_batch([table], params, **kw)
-    F, C = table.size.shape[0], table.num_coflows
-    table.sent[:] = res.sent[0, :F]
-    table.fct[:] = res.fct[0, :F]
-    table.done[:] = ~np.isnan(res.fct[0, :F])
-    table.cct[:] = res.cct[0, :C]
-    table.finished[:] = res.finished[0, :C]
-    table.active[:] = False
-    return table, res
+    mask = row_mask if row_mask is not None else \
+        jnp.ones(state.tick.shape, bool)
+    return jax.vmap(one)(state, tb, mask)
 
 
-__all__ = ["EngineParams", "EngineState", "EngineResult", "simulate_batch",
-           "simulate_sweep", "run_to_table", "default_max_ticks",
-           "features_for", "session_advance", "session_plan_tick"]
+__all__ = ["EngineParams", "EngineState", "EngineResult",
+           "default_max_ticks", "features_for", "session_advance",
+           "session_plan_tick"]

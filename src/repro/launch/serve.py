@@ -1,89 +1,230 @@
-"""Serving driver: batched prefill + decode with a KV/state cache.
+"""The multi-tenant coflow serving front door (DESIGN.md §8).
 
-The batcher accumulates requests into fixed-shape slots (continuous
-batching simplified to fixed batch + per-slot lengths); prefill fills
-the cache, then greedy decode steps run until max tokens. Multi-tenant
-traffic (the decode steps' collectives + checkpoint uploads + cache
-migrations) is ordered by the Saath planner — see
-examples/multi_tenant_fabric.py.
+`CoflowServer` is the admission-controlled service surface of the
+scheduling plane: tenants register by name, submit coflows, and poll
+completions, while ONE `repro.api.SessionPool` hosts every tenant as a
+row of a single batched device slab — `advance(dt)` moves the whole
+fleet's coordinators with one vmapped dispatch chain, which is what
+keeps the per-decision cost flat as tenant count grows (the property
+PAPER.md §5 / Table 2 measures on the testbed coordinator).
 
-Usage (CPU smoke):
-  python -m repro.launch.serve --arch mamba2-1.3b --requests 4 --tokens 16
+Admission model: `max_tenants` fixes the slab's row count up front
+(the compiled executables are shaped by it); `register` raises
+`AdmissionError` once the cap is reached, and `evict` frees a row —
+dropping the tenant's unfinished coflows — for the next registrant.
+Per-tenant outcomes are extracted as the SAME normalized
+`repro.api.Result` the offline engines produce
+(`api.scenario.result_from_completions`), so `avg_cct`, `makespan`,
+`summary()` and `benchmarks.common.record` work unchanged on live
+serving data.
+
+CLI demo (CPU smoke):
+  PYTHONPATH=src python -m repro.launch.serve --tenants 6 --seconds 0.4
+
+(The LM prefill/decode serving driver formerly here lives in
+`repro.launch.lm_serve`.)
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
-from repro.launch import steps as ST
-from repro.models import lm
+from repro.api import Result, SessionPool, result_from_completions
+from repro.api.session import CompletedCoflow
+from repro.core.coflow import Coflow
+from repro.core.params import SchedulerParams
 
 
-class ServeSession:
-    def __init__(self, arch: str, *, smoke: bool = True, mesh=None,
-                 max_len: int = 128, batch: int = 4, src_len: int = 16):
-        self.cfg = get_smoke_config(arch) if smoke else get_config(arch)
-        self.par = ST.build_parallelism(mesh)
-        self.params, _, self.meta, _ = ST.materialize_model(
-            self.cfg, self.par)
-        self.max_len = max_len
-        self.batch = batch
-        self.src_len = src_len if self.cfg.enc_dec else 0
-        self.prefill_fn = jax.jit(ST.make_prefill_step(self.cfg, self.meta,
-                                                       self.par))
-        self.decode_fn = jax.jit(ST.make_decode_step(self.cfg, self.meta,
-                                                     self.par),
-                                 donate_argnums=(2,))
-
-    def generate(self, prompts: np.ndarray, n_tokens: int,
-                 src_embeds: np.ndarray | None = None):
-        """prompts: (B, P) int32. Greedy decode n_tokens continuations."""
-        B, P = prompts.shape
-        assert B == self.batch
-        cache = lm.init_cache(self.cfg, self.meta, B, self.max_len,
-                              self.par, src_len=self.src_len)
-        batch = {"tokens": jnp.asarray(prompts)}
-        if self.cfg.enc_dec:
-            batch["src_embeds"] = jnp.asarray(src_embeds)
-        logits, cache = self.prefill_fn(self.params, batch, cache)
-        out = []
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        kv_len = P
-        for _ in range(n_tokens):
-            out.append(np.asarray(tok))
-            logits, cache = self.decode_fn(self.params, tok, cache,
-                                           jnp.int32(kv_len))
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(
-                jnp.int32)
-            kv_len += 1
-        return np.concatenate(out, axis=1)
+class AdmissionError(RuntimeError):
+    """The server is at its tenant admission cap."""
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=16)
-    args = ap.parse_args()
-    sess = ServeSession(args.arch, batch=args.requests)
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, sess.cfg.vocab_size,
-                           (args.requests, args.prompt_len)).astype(np.int32)
-    src = rng.normal(size=(args.requests, sess.src_len or 1,
-                           sess.cfg.d_model)).astype(np.float32) \
-        if sess.cfg.enc_dec else None
+class CoflowServer:
+    """Admission-controlled multi-tenant coflow scheduling service.
+
+    All tenants share one fabric (`num_ports` ports at
+    `params.port_bw`) and one scheduler configuration; each tenant owns
+    an isolated `SaathSession` row of the server's `SessionPool` (its
+    coflows never contend with another tenant's row — the pool batches
+    the COMPUTATION, not the fabric).
+
+    Completion history is retained per tenant for the lifetime of its
+    registration (`result()` reports over all of it); eviction drops
+    it. Bounded retention for very long-lived tenants is a ROADMAP
+    item.
+    """
+
+    def __init__(self, params: Optional[SchedulerParams] = None, *,
+                 num_ports: int, max_tenants: int = 16,
+                 mechanisms: Optional[dict] = None,
+                 kernel: Optional[str] = None, chunk: int = 32):
+        self.pool = SessionPool(params, num_ports=num_ports,
+                                max_sessions=max_tenants,
+                                mechanisms=mechanisms, kernel=kernel,
+                                chunk=chunk)
+        self._tenants: Dict[str, object] = {}
+        self._done: Dict[str, List[CompletedCoflow]] = {}
+        self._polled: Dict[str, int] = {}
+        self.rejected = 0
+
+    # ---- admission -------------------------------------------------------
+
+    @property
+    def tenants(self) -> List[str]:
+        return list(self._tenants)
+
+    @property
+    def occupancy(self) -> tuple:
+        return (len(self._tenants), self.pool.max_sessions)
+
+    def register(self, tenant: str) -> None:
+        """Admit a tenant (raises `AdmissionError` at the cap,
+        `ValueError` on a duplicate name)."""
+        if tenant in self._tenants:
+            raise ValueError(f"tenant {tenant!r} is already registered")
+        try:
+            sess = self.pool.session()   # the ONE admission authority
+        except RuntimeError as e:
+            self.rejected += 1
+            used, cap = self.occupancy
+            raise AdmissionError(
+                f"admission cap reached ({used}/{cap} tenants); evict "
+                f"one or raise max_tenants") from e
+        self._tenants[tenant] = sess
+        self._done[tenant] = []
+        self._polled[tenant] = 0
+
+    def evict(self, tenant: str) -> None:
+        """Release a tenant's row (unfinished coflows are dropped)."""
+        sess = self._session(tenant)
+        self.pool.release(sess)
+        del self._tenants[tenant]
+        del self._done[tenant]
+        del self._polled[tenant]
+
+    def _session(self, tenant: str):
+        try:
+            return self._tenants[tenant]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; registered: "
+                f"{sorted(self._tenants)}") from None
+
+    # ---- the tenant-keyed session surface --------------------------------
+
+    def submit(self, tenant: str, coflows: Sequence[Coflow]) -> List[int]:
+        return self._session(tenant).submit(coflows)
+
+    def advance(self, dt: float) -> float:
+        """Advance EVERY tenant's clock by `dt` with one pooled
+        dispatch, harvesting completions into the per-tenant buffers."""
+        self.pool.advance(dt)
+        for tenant, sess in self._tenants.items():
+            self._done[tenant].extend(sess.poll())
+        return dt
+
+    def poll(self, tenant: str) -> List[CompletedCoflow]:
+        """Completions for `tenant` not yet returned by a poll."""
+        sess = self._session(tenant)
+        self._done[tenant].extend(sess.poll())
+        new = self._done[tenant][self._polled[tenant]:]
+        self._polled[tenant] = len(self._done[tenant])
+        return list(new)
+
+    def num_live(self, tenant: str) -> int:
+        return self._session(tenant).num_live
+
+    def result(self, tenant: str) -> Result:
+        """The tenant's completions so far as a normalized
+        `repro.api.Result` (the offline engines' NaN/padding contract:
+        an idle tenant reports NaN aggregates, never 0.0). A pure
+        accessor: it does NOT advance the `poll` cursor."""
+        sess = self._session(tenant)
+        self._done[tenant].extend(sess.poll())
+        return result_from_completions(self._done[tenant],
+                                       engine="jax", policy="saath")
+
+    def stats(self) -> dict:
+        used, cap = self.occupancy
+        return {
+            "tenants": used, "max_tenants": cap,
+            "rejected": self.rejected,
+            "live_coflows": sum(s.num_live
+                                for s in self._tenants.values()),
+            "completed": sum(len(d) for d in self._done.values()),
+            "slab": (self.pool._C_cap, self.pool._F_cap),
+        }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description="multi-tenant coflow serving demo")
+    ap.add_argument("--tenants", type=int, default=6)
+    ap.add_argument("--max-tenants", type=int, default=4,
+                    help="admission cap (< --tenants demonstrates "
+                    "rejection + eviction)")
+    ap.add_argument("--seconds", type=float, default=0.4,
+                    help="virtual horizon per tenant")
+    ap.add_argument("--ports", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.traces.synth import tiny_trace
+
+    params = SchedulerParams(port_bw=1e9, delta=1e-3,
+                             start_threshold=1e6)
+    srv = CoflowServer(params, num_ports=args.ports,
+                       max_tenants=args.max_tenants)
     t0 = time.perf_counter()
-    toks = sess.generate(prompts, args.tokens, src_embeds=src)
-    dt = time.perf_counter() - t0
-    print(f"generated {toks.shape} tokens in {dt:.2f}s "
-          f"({args.requests * args.tokens / dt:.1f} tok/s)")
-    print(toks[:, :12])
+    waiting = [f"tenant/{i}" for i in range(args.tenants)]
+    admitted: List[str] = []
+    pending: Dict[str, list] = {}
+    for i, name in enumerate(list(waiting)):
+        try:
+            srv.register(name)
+        except AdmissionError:
+            continue
+        waiting.remove(name)
+        admitted.append(name)
+        tr = tiny_trace(16, args.ports, seed=args.seed + i, load=0.5)
+        pending[name] = sorted(tr.coflows, key=lambda c: c.arrival)
+
+    steps = 0
+    next_seed = args.seed + args.tenants
+    while admitted or waiting:
+        srv.advance(args.seconds / 8)
+        steps += 1
+        for name in list(admitted):
+            sess = srv._tenants[name]
+            while pending[name] and pending[name][0].arrival <= sess.now:
+                srv.submit(name, [pending[name].pop(0)])
+            if not pending[name] and srv.num_live(name) == 0:
+                res = srv.result(name)
+                print(f"  {name}: {int(res.num_coflows[0])} coflows, "
+                      f"avg_cct={res.avg_cct[0] * 1e3:.2f}ms, "
+                      f"makespan={res.makespan[0] * 1e3:.1f}ms")
+                srv.evict(name)       # frees the row for a waiter
+                admitted.remove(name)
+                if waiting:
+                    nxt = waiting.pop(0)
+                    srv.register(nxt)
+                    admitted.append(nxt)
+                    tr = tiny_trace(16, args.ports, seed=next_seed,
+                                    load=0.5)
+                    next_seed += 1
+                    pending[nxt] = sorted(tr.coflows,
+                                          key=lambda c: c.arrival)
+        if steps > 10000:
+            raise RuntimeError("demo failed to drain")
+    wall = time.perf_counter() - t0
+    out = dict(srv.stats(), wall_seconds=wall, steps=steps)
+    print(f"== served {args.tenants} tenants through a "
+          f"{args.max_tenants}-row slab in {wall:.2f}s "
+          f"({steps} fleet steps; slab {out['slab']}) ==")
+    return out
 
 
 if __name__ == "__main__":

@@ -88,6 +88,122 @@ class TraceBatch(NamedTuple):
         return TraceBatch(*(a[b:b + 1] for a in self))
 
 
+def empty_batch(num_rows: int, *, flow_capacity: int, coflow_capacity: int,
+                port_capacity: int) -> TraceBatch:
+    """An all-padding TraceBatch: every row is a blank slab row (no
+    valid coflows or flows). This is the `SessionPool`'s backing store —
+    rows are written in place with `pack_row` as sessions submit and
+    recycled (re-blanked) as they retire, so the padded shapes (and the
+    compiled engine executables) survive arbitrary membership churn."""
+    B, F = num_rows, flow_capacity
+    C, P = coflow_capacity, port_capacity
+    if B <= 0 or P <= 0 or F < 0 or C < 0:
+        raise ValueError("empty_batch needs positive rows/ports and "
+                         "non-negative flow/coflow capacities")
+    return TraceBatch(
+        cid=np.zeros((B, F), np.int32), src=np.zeros((B, F), np.int32),
+        dst=np.zeros((B, F), np.int32), size=np.ones((B, F), np.float32),
+        flow_valid=np.zeros((B, F), bool),
+        arrival=np.full((B, C), np.inf, np.float32),
+        arrival_rank=np.full((B, C), 2 ** 30, np.int32),
+        width=np.ones((B, C), np.int32),
+        coflow_valid=np.zeros((B, C), bool),
+        flow_lo=np.zeros((B, C), np.int32),
+        flow_hi=np.zeros((B, C), np.int32),
+        bw_send=np.zeros((B, P), np.float32),
+        bw_recv=np.zeros((B, P), np.float32),
+        perm_src=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
+        perm_dst=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
+        lo_src=np.zeros((B, C, P), np.int32),
+        hi_src=np.zeros((B, C, P), np.int32),
+        lo_dst=np.zeros((B, C, P), np.int32),
+        hi_dst=np.zeros((B, C, P), np.int32),
+        perm_size=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
+    )
+
+
+def blank_row(tb: TraceBatch, b: int) -> None:
+    """Reset row `b` to all-padding in place (recycle a freed slab row)."""
+    F = tb.max_flows
+    tb.cid[b] = 0
+    tb.src[b] = 0
+    tb.dst[b] = 0
+    tb.size[b] = 1.0
+    tb.flow_valid[b] = False
+    tb.arrival[b] = np.inf
+    tb.arrival_rank[b] = 2 ** 30
+    tb.width[b] = 1
+    tb.coflow_valid[b] = False
+    tb.flow_lo[b] = 0
+    tb.flow_hi[b] = 0
+    tb.bw_send[b] = 0.0
+    tb.bw_recv[b] = 0.0
+    tb.perm_src[b] = np.arange(F, dtype=np.int32)
+    tb.perm_dst[b] = np.arange(F, dtype=np.int32)
+    tb.lo_src[b] = 0
+    tb.hi_src[b] = 0
+    tb.lo_dst[b] = 0
+    tb.hi_dst[b] = 0
+    tb.perm_size[b] = np.arange(F, dtype=np.int32)
+
+
+def pack_row(tb: TraceBatch, b: int, t: FlowTable, *,
+             arrival_rank=None) -> None:
+    """Write one FlowTable into slab row `b` in place (blanking it
+    first), recomputing the row's host-side permutations/segment
+    layouts. `arrival_rank` overrides the per-row arrival argsort with
+    caller-supplied exact FIFO ranks — an online session's ranks are
+    session-global submission ranks, which must survive re-packs that
+    see only the still-live subset. Raises when the row's capacities
+    cannot hold the table (the caller grows the slab and re-packs)."""
+    f, c = t.size.shape[0], t.num_coflows
+    F, C, P = tb.max_flows, tb.max_coflows, tb.num_ports
+    if f > F or c > C or t.num_ports > P:
+        raise ValueError(
+            f"slab row capacity exceeded: ({f} flows, {c} coflows, "
+            f"{t.num_ports} ports) > ({F}, {C}, {P})")
+    blank_row(tb, b)
+    if c == 0:
+        return
+    tb.cid[b, :f] = t.cid
+    # padded flows get the first padded coflow id — or, when the
+    # trace fills C exactly, the LAST REAL id (the pad run then
+    # contiguously extends that coflow's run). Either way segment
+    # ids form non-repeating contiguous runs, which is all the
+    # engine's segmented reductions need; any gather through a pad
+    # cid must stay masked by flow_valid (pads start done).
+    tb.cid[b, f:] = min(c, C - 1)
+    tb.src[b, :f] = t.src
+    tb.dst[b, :f] = t.dst
+    tb.size[b, :f] = t.size
+    tb.flow_valid[b, :f] = True
+    tb.arrival[b, :c] = t.arrival
+    tb.arrival_rank[b, :c] = np.argsort(
+        np.argsort(t.arrival, kind="stable"), kind="stable") \
+        if arrival_rank is None else arrival_rank
+    tb.width[b, :c] = t.width
+    tb.coflow_valid[b, :c] = True
+    tb.flow_lo[b, :c] = t.flow_lo
+    tb.flow_hi[b, :c] = t.flow_hi
+    tb.bw_send[b, :t.num_ports] = t.bw_send
+    tb.bw_recv[b, :t.num_ports] = t.bw_recv
+    for port, perm_out, lo_out, hi_out in (
+            (t.src, tb.perm_src, tb.lo_src, tb.hi_src),
+            (t.dst, tb.perm_dst, tb.lo_dst, tb.hi_dst)):
+        order = np.lexsort((port, t.cid)).astype(np.int32)
+        perm_out[b, :f] = order
+        keys = t.cid[order].astype(np.int64) * P + port[order]
+        grid = np.arange(C * P, dtype=np.int64)
+        lo_out[b] = np.searchsorted(keys, grid, "left").reshape(C, P)
+        hi_out[b] = np.searchsorted(keys, grid, "right").reshape(C, P)
+    # (cid, valid-first, size) order: pads share the last real cid
+    # when the trace fills C exactly, so the valid key pushes them
+    # BEHIND that coflow's real flows — [flow_lo, flow_hi) stays a
+    # correct segment of real flows in this permutation too.
+    tb.perm_size[b] = np.lexsort(
+        (tb.size[b], ~tb.flow_valid[b], tb.cid[b])).astype(np.int32)
+
+
 def pack(traces: Sequence[Union[Trace, FlowTable]], *,
          port_bw: float = None,
          flow_multiple: int = 64, coflow_multiple: int = 16,
@@ -99,11 +215,12 @@ def pack(traces: Sequence[Union[Trace, FlowTable]], *,
     their own per-port bandwidths). DAG stage dependencies are a
     host-simulator feature and are rejected here.
 
-    The `*_capacity` floors support incremental (session) packing: an
-    online `SaathSession` re-packs its live coflows into a slab whose
+    The `*_capacity` floors support incremental (session) packing: a
+    `SessionPool` re-packs its live coflows into a slab whose
     capacities only ever grow geometrically, so the padded shapes — and
     therefore the compiled engine executables — stay stable across
-    submit/retire churn while freed rows are recycled.
+    submit/retire churn while freed rows are recycled (`pack_row` /
+    `blank_row` are the in-place per-row primitives it uses).
     """
     tables: List[FlowTable] = []
     for t in traces:
@@ -128,65 +245,11 @@ def pack(traces: Sequence[Union[Trace, FlowTable]], *,
             coflow_capacity)
     P = max(max(t.num_ports for t in tables), port_capacity)
 
-    tb = TraceBatch(
-        cid=np.zeros((B, F), np.int32), src=np.zeros((B, F), np.int32),
-        dst=np.zeros((B, F), np.int32), size=np.ones((B, F), np.float32),
-        flow_valid=np.zeros((B, F), bool),
-        arrival=np.full((B, C), np.inf, np.float32),
-        arrival_rank=np.full((B, C), 2 ** 30, np.int32),
-        width=np.ones((B, C), np.int32),
-        coflow_valid=np.zeros((B, C), bool),
-        flow_lo=np.zeros((B, C), np.int32),
-        flow_hi=np.zeros((B, C), np.int32),
-        bw_send=np.zeros((B, P), np.float32),
-        bw_recv=np.zeros((B, P), np.float32),
-        perm_src=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
-        perm_dst=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
-        lo_src=np.zeros((B, C, P), np.int32),
-        hi_src=np.zeros((B, C, P), np.int32),
-        lo_dst=np.zeros((B, C, P), np.int32),
-        hi_dst=np.zeros((B, C, P), np.int32),
-        perm_size=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
-    )
+    tb = empty_batch(B, flow_capacity=F, coflow_capacity=C,
+                     port_capacity=P)
     for b, t in enumerate(tables):
-        f, c = t.size.shape[0], t.num_coflows
-        tb.cid[b, :f] = t.cid
-        # padded flows get the first padded coflow id — or, when the
-        # trace fills C exactly, the LAST REAL id (the pad run then
-        # contiguously extends that coflow's run). Either way segment
-        # ids form non-repeating contiguous runs, which is all the
-        # engine's segmented reductions need; any gather through a pad
-        # cid must stay masked by flow_valid (pads start done).
-        tb.cid[b, f:] = min(c, C - 1)
-        tb.src[b, :f] = t.src
-        tb.dst[b, :f] = t.dst
-        tb.size[b, :f] = t.size
-        tb.flow_valid[b, :f] = True
-        tb.arrival[b, :c] = t.arrival
-        tb.arrival_rank[b, :c] = np.argsort(
-            np.argsort(t.arrival, kind="stable"), kind="stable")
-        tb.width[b, :c] = t.width
-        tb.coflow_valid[b, :c] = True
-        tb.flow_lo[b, :c] = t.flow_lo
-        tb.flow_hi[b, :c] = t.flow_hi
-        tb.bw_send[b, :t.num_ports] = t.bw_send
-        tb.bw_recv[b, :t.num_ports] = t.bw_recv
-        for port, perm_out, lo_out, hi_out in (
-                (t.src, tb.perm_src, tb.lo_src, tb.hi_src),
-                (t.dst, tb.perm_dst, tb.lo_dst, tb.hi_dst)):
-            order = np.lexsort((port, t.cid)).astype(np.int32)
-            perm_out[b, :f] = order
-            keys = t.cid[order].astype(np.int64) * P + port[order]
-            grid = np.arange(C * P, dtype=np.int64)
-            lo_out[b] = np.searchsorted(keys, grid, "left").reshape(C, P)
-            hi_out[b] = np.searchsorted(keys, grid, "right").reshape(C, P)
-        # (cid, valid-first, size) order: pads share the last real cid
-        # when the trace fills C exactly, so the valid key pushes them
-        # BEHIND that coflow's real flows — [flow_lo, flow_hi) stays a
-        # correct segment of real flows in this permutation too.
-        tb.perm_size[b] = np.lexsort(
-            (tb.size[b], ~tb.flow_valid[b], tb.cid[b])).astype(np.int32)
+        pack_row(tb, b, t)
     return tb
 
 
-__all__ = ["TraceBatch", "pack"]
+__all__ = ["TraceBatch", "pack", "pack_row", "blank_row", "empty_batch"]

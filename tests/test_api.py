@@ -90,12 +90,16 @@ def test_empty_replay_reports_nan_not_zero():
     that finished nothing — a unit claim ('zero seconds') the jax
     plane's NaN contradicted. Both planes now agree on NaN, defined
     once in the Result normalizer."""
-    from repro.fabric.engine import simulate
+    from repro.core.policies import make_policy
+    from repro.fabric.engine import Simulator
+    from repro.fabric.state import FlowTable
 
     empty = Trace(num_ports=4, coflows=[])
     with warnings.catch_warnings():
         warnings.simplefilter("error")            # no all-NaN warnings
-        sim = simulate(empty, "saath", PARAMS)
+        sim = Simulator(PARAMS).run(
+            FlowTable.from_trace(empty, PARAMS.port_bw),
+            make_policy("saath", PARAMS))
         assert np.isnan(sim.makespan)
         assert np.isnan(sim.avg_cct)
         res = run(Scenario(engine="numpy", trace=empty, params=PARAMS))

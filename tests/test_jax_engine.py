@@ -195,9 +195,15 @@ def test_sweep_matches_individual_runs():
                                    rtol=1e-5)
 
 
-def test_run_to_table_roundtrip():
+def test_result_table_replaces_run_to_table():
+    """`run_to_table` is gone: the front door's `Result.table()` is the
+    one way to materialize a filled FlowTable from the jax engine."""
+    from repro.api import Scenario, run
+
     tr = _trace("staggered", seed=9)
-    table, res = jax_engine.run_to_table(tr, PARAMS)
+    table = run(Scenario(policy="saath", engine="jax", trace=tr,
+                         params=PARAMS)).table()
     assert table.finished.all() and table.done.all()
     assert np.isfinite(table.cct).all()
     np.testing.assert_allclose(table.sent, table.size, rtol=1e-5)
+    assert not hasattr(jax_engine, "run_to_table")

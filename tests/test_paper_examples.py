@@ -9,8 +9,15 @@ import numpy as np
 import pytest
 
 from repro.core.coflow import Coflow, Flow, Trace
+from repro.api import Scenario, run
 from repro.core.params import SchedulerParams
-from repro.fabric.engine import simulate
+
+
+def simulate(trace, policy, params, policy_kwargs=None):
+    """Worked examples go through the one front door (the old
+    fabric.engine.simulate shim is gone)."""
+    return run(Scenario(policy=policy, engine="numpy", trace=trace,
+                        params=params, policy_kwargs=policy_kwargs))
 
 # 1 byte/s ports; sizes in bytes = durations in seconds.
 PARAMS = SchedulerParams(port_bw=1.0, delta=1e-3,
@@ -33,17 +40,17 @@ def fig17_trace():
 def test_fig17_sjf_suboptimal():
     # SCF (= SJF on total bytes): C1 first -> CCTs 5, 11, 12 (avg 9.33)
     res = simulate(fig17_trace(), "scf", PARAMS)
-    np.testing.assert_allclose(sorted(res.table.cct), [5, 11, 12], atol=0.05)
+    np.testing.assert_allclose(sorted(res.row_cct()), [5, 11, 12], atol=0.05)
     # Saath/LCoF: C2, C3 first (k=1), C1 waits for both ports -> 6, 7, 12
     res = simulate(fig17_trace(), "saath", PARAMS)
-    np.testing.assert_allclose(sorted(res.table.cct), [6, 7, 12], atol=0.05)
-    assert np.nanmean(res.table.cct) < 8.34  # 8.33 vs SJF's 9.33
+    np.testing.assert_allclose(sorted(res.row_cct()), [6, 7, 12], atol=0.05)
+    assert np.nanmean(res.row_cct()) < 8.34  # 8.33 vs SJF's 9.33
 
 
 def test_fig17_aalo_matches_sjf_order():
     # Aalo: all in Q0, FIFO by arrival (C1 first by id) -> 5, 11, 12
     res = simulate(fig17_trace(), "aalo", PARAMS)
-    np.testing.assert_allclose(sorted(res.table.cct), [5, 11, 12], atol=0.05)
+    np.testing.assert_allclose(sorted(res.row_cct()), [5, 11, 12], atol=0.05)
 
 
 def fig8_trace():
@@ -59,11 +66,11 @@ def fig8_trace():
 def test_fig8_lcof_limitation():
     # LCoF schedules the two low-contention 2.5s coflows first: 2.5,2.5,3.5
     res = simulate(fig8_trace(), "saath", PARAMS)
-    np.testing.assert_allclose(sorted(res.table.cct), [2.5, 2.5, 3.5],
+    np.testing.assert_allclose(sorted(res.row_cct()), [2.5, 2.5, 3.5],
                                atol=0.05)
     # total-bytes SCF picks C1 (total 2.0) first: 1, 3.5, 3.5 (the optimum)
     res = simulate(fig8_trace(), "scf", PARAMS)
-    np.testing.assert_allclose(sorted(res.table.cct), [1.0, 3.5, 3.5],
+    np.testing.assert_allclose(sorted(res.row_cct()), [1.0, 3.5, 3.5],
                                atol=0.05)
 
 
@@ -83,7 +90,7 @@ def test_fig4_work_conservation_helps():
     # Without WC, C2 waits for port A entirely: starts at 2, ends at 4.
     # (C2's two flows go to the same receiver Y, so they serialize on Y:
     #  2 + 2 = 4 either way; use distinct receivers to see the pure effect.)
-    assert np.nanmean(wc.table.cct) <= np.nanmean(no_wc.table.cct) + 1e-6
+    assert np.nanmean(wc.row_cct()) <= np.nanmean(no_wc.row_cct()) + 1e-6
 
 
 def fig4b_trace():
@@ -107,8 +114,8 @@ def test_fig4b_work_conservation_strictly_better():
     # A->Y; C2's CCT is driven by its last flow = 4 in both. The win shows
     # up in *other* coflows' slots; here assert WC never hurts and the B
     # port was actually used early.
-    assert np.nanmean(wc.table.cct) <= np.nanmean(no_wc.table.cct) + 1e-6
-    tb = wc.table
+    assert np.nanmean(wc.row_cct()) <= np.nanmean(no_wc.row_cct()) + 1e-6
+    tb = wc.table(0)
     b_flow = 2
     assert tb.fct[b_flow] <= 2.1  # WC streamed it immediately
 
@@ -125,9 +132,9 @@ def test_fig1_out_of_sync_collapse():
     aalo = simulate(tr, "aalo", PARAMS)
     saath = simulate(tr, "saath", PARAMS,
                      policy_kwargs={"work_conservation": False})
-    t = aalo.table
+    t = aalo.table(0)
     drift_aalo = abs(t.fct[1] - t.fct[2])
-    t = saath.table
+    t = saath.table(0)
     drift_saath = abs(t.fct[1] - t.fct[2])
     assert drift_aalo > 2.5          # B flow done at 3, A flow at 6
     assert drift_saath < 0.1         # all-or-none keeps them in lockstep

@@ -1,0 +1,189 @@
+"""SessionPool: K sessions on one slab == K standalone sessions,
+bitwise — plus admission control and the CoflowServer front door.
+
+The acceptance contract (ISSUE 4): a pooled fleet changes the DISPATCH
+structure (one vmapped scan instead of K sequential ones), never the
+arithmetic. Mid-run admission, capacity doubling triggered by one row,
+and a session finishing while others run must all leave every
+session's CCTs/FCTs bitwise-equal to the same session run standalone.
+"""
+import numpy as np
+import pytest
+
+from repro.api import SaathSession, SessionPool
+from repro.core.coflow import Coflow, Flow
+from repro.core.params import SchedulerParams
+
+PORTS = 6
+PARAMS = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                         growth=4.0, num_queues=5)
+
+
+def _coflows(seed: int, n: int, base: int = 0, spread: float = 2.0):
+    rng = np.random.default_rng(seed)
+    cfs, fid = [], 0
+    for c in range(n):
+        w = int(rng.integers(1, 5))
+        flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                      int(rng.integers(0, PORTS)),
+                      float(rng.uniform(1.0, 15.0))) for i in range(w)]
+        fid += w
+        cfs.append(Coflow(base + c, float(rng.uniform(0.0, spread)),
+                          flows))
+    return cfs
+
+
+def _harvest(results, sessions):
+    for i, s in enumerate(sessions):
+        results[i].update({d.handle: (d.cct, tuple(d.fct))
+                           for d in s.poll()})
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_pool_bitwise_equals_standalone_sessions(seed):
+    """The property test: K pooled sessions vs K standalone ones under
+    an adversarial script — session 2 admitted mid-run, session 0
+    doubling the shared coflow capacity with a burst, session 1 tiny so
+    it finishes while the others still run — produce bitwise-identical
+    per-session CCTs and FCTs. The script is advance-cadence-identical
+    on both sides (same dt sequence from each session's birth)."""
+    workloads = [_coflows(seed, 6), _coflows(seed + 50, 2, spread=0.5),
+                 _coflows(seed + 100, 5)]
+    burst = _coflows(seed + 200, 20, base=500, spread=1.0)
+
+    def script(make_session, advance_all):
+        # phases: [s0, s1] run; s2 admitted after 3 steps; s0 bursts
+        # past the 16-row coflow capacity after 5 steps
+        sessions = [make_session(), make_session()]
+        results = [dict(), dict(), dict()]
+        for s, w in zip(sessions, workloads[:2]):
+            s.submit(sorted(w, key=lambda c: (c.arrival, c.cid)))
+        s1_drained_at = None
+        for step in range(200):
+            if step == 3:
+                s2 = make_session()
+                s2.submit(sorted(workloads[2],
+                                 key=lambda c: (c.arrival, c.cid)))
+                sessions.append(s2)
+            if step == 5:
+                sessions[0].submit(
+                    sorted(burst, key=lambda c: (c.arrival, c.cid)))
+            advance_all(sessions, 0.9)
+            _harvest(results, sessions)
+            if s1_drained_at is None and not sessions[1].num_live:
+                s1_drained_at = step
+            if not any(s.num_live for s in sessions):
+                assert s1_drained_at < step, \
+                    "script expects session 1 to finish early"
+                return results
+        raise RuntimeError("script failed to drain")
+
+    pool = SessionPool(PARAMS, num_ports=PORTS, max_sessions=4)
+
+    def pool_advance(sessions, dt):
+        pool.advance(dt)  # ONE dispatch chain for every row
+
+    pooled = script(pool.session, pool_advance)
+    assert pool._C_cap >= 26                     # the burst doubled it
+
+    def standalone_advance(sessions, dt):
+        for s in sessions:
+            s.advance(dt)
+
+    solo = script(
+        lambda: SaathSession(PARAMS, num_ports=PORTS, backend="jax"),
+        standalone_advance)
+    assert pooled == solo
+
+
+def test_pool_admission_cap_and_row_recycling():
+    pool = SessionPool(PARAMS, num_ports=PORTS, max_sessions=2)
+    a, b = pool.session(), pool.session()
+    assert pool.num_sessions == 2
+    with pytest.raises(RuntimeError, match="full"):
+        pool.session()
+    a.submit(_coflows(3, 2))
+    pool.advance(0.5)
+    pool.release(a)                  # frees row 0 (drops a's coflows)
+    with pytest.raises(RuntimeError, match="closed"):
+        a.advance(0.1)
+    c = pool.session()               # recycled row
+    assert c._row == 0 and pool.num_sessions == 2
+    c.submit(_coflows(4, 2))
+    done = []
+    for _ in range(100):
+        pool.advance(1.0)
+        done += c.poll()
+        if not c.num_live:
+            break
+    assert len(done) == 2 and all(np.isfinite(d.cct) for d in done)
+    assert b.num_live == 0           # b never submitted; clock moved
+    assert b.now > 0
+
+
+def test_pool_idle_sessions_do_not_block_the_fleet():
+    pool = SessionPool(PARAMS, num_ports=PORTS, max_sessions=3)
+    idle = pool.session()
+    busy = pool.session()
+    busy.submit(_coflows(7, 3))
+    done = []
+    for _ in range(100):
+        pool.advance(1.0)
+        done += busy.poll()
+        if not busy.num_live:
+            break
+    assert len(done) == 3
+    assert idle.num_live == 0 and idle.now == busy.now
+
+
+def test_single_session_advance_noops_other_rows():
+    """`advance` on ONE pooled view moves only its row; the others'
+    coordinators stay frozen at their own horizons."""
+    pool = SessionPool(PARAMS, num_ports=PORTS, max_sessions=2)
+    a, b = pool.session(), pool.session()
+    a.submit(_coflows(9, 3))
+    b.submit(_coflows(10, 3))
+    a.advance(200.0)
+    assert a.now == 200.0 and b.now == 0.0
+    done_a = a.poll()
+    assert len(done_a) == 3          # a drained alone
+    assert not b.poll()              # b never ticked
+    b.advance(200.0)
+    assert len(b.poll()) == 3
+
+
+# ---- the serving front door (launch.serve.CoflowServer) ----------------
+
+
+def test_coflow_server_admission_results_and_eviction():
+    from repro.launch.serve import AdmissionError, CoflowServer
+
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=2)
+    srv.register("alice")
+    srv.register("bob")
+    with pytest.raises(ValueError, match="already registered"):
+        srv.register("alice")
+    with pytest.raises(AdmissionError, match="admission cap"):
+        srv.register("carol")
+    assert srv.rejected == 1
+    with pytest.raises(KeyError, match="unknown tenant"):
+        srv.submit("carol", _coflows(1, 1))
+
+    srv.submit("alice", _coflows(20, 3))
+    srv.submit("bob", _coflows(21, 2))
+    for _ in range(100):
+        srv.advance(1.0)
+        if not (srv.num_live("alice") or srv.num_live("bob")):
+            break
+    res = srv.result("alice")                # normalized per-tenant
+    assert int(res.num_coflows[0]) == 3
+    assert len(srv.poll("alice")) == 3       # result() is a pure
+    assert srv.poll("alice") == []           # accessor; poll is once-each
+    assert np.isfinite(res.avg_cct[0]) and np.isfinite(res.makespan[0])
+    idle = srv.result("bob")
+    assert int(idle.num_coflows[0]) == 2
+
+    srv.evict("alice")
+    srv.register("carol")                    # the freed row
+    assert sorted(srv.tenants) == ["bob", "carol"]
+    assert np.isnan(srv.result("carol").avg_cct[0])   # nothing yet

@@ -1,10 +1,13 @@
 """SaathSession: online-vs-offline parity, slab lifecycle, wave planning.
 
-The acceptance contract (ISSUE 3): submitting a trace's coflows
-incrementally at their arrival times must reproduce the offline
-`run(scenario)` CCTs within 1% (>= 3 traces), and
+The acceptance contract (ISSUE 4, tightened from ISSUE 3's 1%):
+submitting a trace's coflows incrementally at their arrival times must
+reproduce the offline jax `run(scenario)` CCTs BITWISE (>= 3 traces) —
+the pending event horizon carried through `EngineState` makes resume
+re-evaluation-free, exactly like the numpy oracle — and
 `plan_waves(backend="jax")` must reproduce the numpy wave order
-bitwise on the bridge workload.
+bitwise on the bridge workload. Long-horizon sessions re-base the slab
+epoch so f32 arrivals keep δ resolution (regression-tested here).
 """
 import numpy as np
 import pytest
@@ -51,14 +54,21 @@ def _replay_online(trace: Trace, backend: str, **kw) -> np.ndarray:
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_session_online_matches_offline_run_jax(seed):
-    """The acceptance gate: incremental jax-slab replay vs offline
-    run() within 1% on three traces."""
+def test_session_online_matches_offline_run_jax_bitwise(seed):
+    """The acceptance gate: incremental jax-slab replay is BITWISE the
+    offline jitted run() — no tolerance. The resume-drift fix
+    (EngineState's pending event horizon + anchored integration) and
+    the t=0 grid origin make every evaluation instant, every f32
+    rounding, and every §4.3 re-queue identical to the offline scan."""
     tr = _trace(seed)
-    offline = run(Scenario(policy="saath", engine="numpy", trace=tr,
+    offline = run(Scenario(policy="saath", engine="jax", trace=tr,
                            params=PARAMS))
     got = _replay_online(tr, "jax")
-    np.testing.assert_allclose(got, offline.row_cct(), rtol=1e-2,
+    np.testing.assert_array_equal(got, offline.row_cct())
+    # the cross-engine contract still holds through the same replay
+    oracle = run(Scenario(policy="saath", engine="numpy", trace=tr,
+                          params=PARAMS))
+    np.testing.assert_allclose(got, oracle.row_cct(), rtol=1e-2,
                                atol=2 * PARAMS.delta)
 
 
@@ -117,6 +127,52 @@ def test_session_poll_returns_each_coflow_exactly_once():
     assert sorted(seen) == sorted(handles)
     assert len(seen) == len(set(seen))
     assert sess.poll() == []
+
+
+def test_session_long_horizon_keeps_delta_resolution():
+    """Regression (ISSUE 4): slab arrivals/times are f32, so a session
+    hours into virtual time used to lose δ resolution (at t=2e6 ticks
+    the absolute f32 grid is ~0.002s coarse vs δ=0.01). Re-basing the
+    row epoch on re-pack stores offsets instead, so a late workload
+    must replay bitwise-identically to the same workload at t=0."""
+    from repro.api.pool import REBASE_TICKS
+
+    t_off = 2.0 * REBASE_TICKS * PARAMS.delta   # 2^21 ticks ~ 21000s
+    rng = np.random.default_rng(11)
+
+    def workload(base):
+        # binary-exact relative arrivals/sizes: the absolute f64 sums
+        # below REBASE are exact, so any mismatch is the f32 slab's
+        cfs, fid = [], 0
+        for c in range(5):
+            w = int(rng.integers(1, 4))
+            flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                          int(rng.integers(0, PORTS)),
+                          float(rng.integers(4, 60) * 0.25))
+                     for i in range(w)]
+            fid += w
+            cfs.append(Coflow(c, base + 0.25 * int(rng.integers(0, 8)),
+                              flows))
+        return cfs
+
+    state = rng.bit_generator.state
+    base_cfs = workload(0.0)
+    rng.bit_generator.state = state              # identical draws
+    late_cfs = workload(t_off)
+
+    sess0 = SaathSession(PARAMS, num_ports=PORTS, backend="jax")
+    sess0.submit(base_cfs)
+    want = {d.handle: (d.cct, tuple(d.fct - 0.0))
+            for d in sess0.drain(step=5.0, max_seconds=500.0)}
+
+    late = SaathSession(PARAMS, num_ports=PORTS, backend="jax")
+    late.advance(t_off)                          # idle for ~6 hours
+    assert late._epoch == 0                      # nothing packed yet
+    late.submit(late_cfs)
+    got = {d.handle: (d.cct, tuple(np.asarray(d.fct) - t_off))
+           for d in late.drain(step=5.0, max_seconds=500.0)}
+    assert late._epoch >= REBASE_TICKS           # the fix engaged
+    assert got == want, "long-horizon session lost δ resolution"
 
 
 def test_session_rejects_bad_input():

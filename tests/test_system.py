@@ -2,19 +2,25 @@
 claims, and the framework bridge on top of the same coordinator."""
 import numpy as np
 
+from repro.api import Scenario, run
 from repro.core.params import SchedulerParams
-from repro.fabric.engine import simulate
 from repro.fabric.metrics import percentile_speedup
 from repro.traces import tiny_trace
+
+
+def _run(trace, policy, params):
+    return run(Scenario(policy=policy, engine="numpy", trace=trace,
+                        params=params))
 
 
 def test_end_to_end_saath_beats_aalo_tail():
     tr = tiny_trace(60, 24, seed=5)
     p = SchedulerParams()
-    aalo = simulate(tr, "aalo", p)
-    saath = simulate(tr, "saath", p)
-    assert saath.table.finished.all() and aalo.table.finished.all()
-    s = percentile_speedup(aalo.table.cct, saath.table.cct)
+    aalo = _run(tr, "aalo", p)
+    saath = _run(tr, "saath", p)
+    assert np.isfinite(saath.row_cct()).all()
+    assert np.isfinite(aalo.row_cct()).all()
+    s = percentile_speedup(aalo.row_cct(), saath.row_cct())
     # the paper's effect is in the tail; median should not regress much
     assert s["p90"] > 1.0, s
     assert s["p50"] > 0.8, s
@@ -23,10 +29,10 @@ def test_end_to_end_saath_beats_aalo_tail():
 def test_online_saath_tracks_offline_varys():
     tr = tiny_trace(60, 24, seed=6)
     p = SchedulerParams()
-    varys = simulate(tr, "varys-sebf", p)   # clairvoyant
-    saath = simulate(tr, "saath", p)        # online
-    a = float(np.nanmean(varys.table.cct))
-    b = float(np.nanmean(saath.table.cct))
+    varys = _run(tr, "varys-sebf", p)   # clairvoyant
+    saath = _run(tr, "saath", p)        # online
+    a = float(varys.avg_cct[0])
+    b = float(saath.avg_cct[0])
     assert b <= 2.0 * a, (a, b)  # online within 2x of clairvoyant avg
 
 
@@ -36,5 +42,5 @@ def test_all_policies_agree_on_total_work():
     tr = tiny_trace(30, 12, seed=7)
     total = sum(f.size for c in tr.coflows for f in c.flows)
     for pol in ("saath", "saath-jax", "aalo", "uc-tcp", "varys-sebf"):
-        res = simulate(tr, pol, SchedulerParams())
-        assert abs(float(res.table.sent.sum()) - total) < 1e-6 * total
+        res = _run(tr, pol, SchedulerParams())
+        assert abs(float(res.sent.sum()) - total) < 1e-6 * total
