@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-slow test-all api-smoke pool-smoke bench-smoke bench
+.PHONY: test test-slow test-all coverage pool-fuzz api-smoke pool-smoke bench-smoke bench
 
 test:            ## fast tier-1 suite (slow integration tests excluded)
 	$(PY) -m pytest -q
@@ -11,6 +11,13 @@ test-slow:       ## only the @pytest.mark.slow integration tests
 
 test-all:        ## everything
 	$(PY) -m pytest -q -m ""
+
+coverage:        ## fast suite + coverage gate on the serving/engine modules (needs pytest-cov)
+	$(PY) -m pytest -q --cov=repro.api --cov=repro.fabric \
+	  --cov-report=term-missing --cov-fail-under=75
+
+pool-fuzz:       ## deeper pool/serve property fuzz (more interleaving examples)
+	SAATH_FUZZ_EXAMPLES=20 $(PY) -m pytest -q tests/test_pool_fuzz.py tests/test_serve.py tests/test_pool.py
 
 api-smoke:       ## tiny Scenario on both engines + 3-step SaathSession
 	$(PY) -m benchmarks.api_smoke

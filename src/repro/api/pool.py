@@ -11,18 +11,37 @@ extra tenant is one more vmapped lane, not one more compiled replica.
 
 Ownership (DESIGN.md §8):
 
-* the POOL owns the device-facing slab: the padded `TraceBatch` (rows
-  recycled via `traces.batch.pack_row`/`blank_row`, flow/coflow
-  capacities shared across rows and grown geometrically) and the
-  `EngineState` mirror (numpy leaves between dispatches, so dirty rows
-  are rewritten in place);
+* the POOL owns the device-facing slab, and since ISSUE 5 the
+  authoritative `TraceBatch` + `EngineState` leaves LIVE ON DEVICE
+  between dispatches. Membership/state changes (`submit`, `poll`
+  retirement, `release`, `complete`) mark rows dirty, and `_ensure`
+  applies them as DIRTY-ROW SCATTER updates (`jax_engine.scatter_rows`
+  over host-staged `traces.batch.pack_row` rows) — a clean row never
+  re-crosses the host-device boundary. Numpy mirrors survive only as
+  the lazily-materialized debug/oracle view (`host_view()`) and the
+  per-row host entries sessions carry;
 * each `SaathSession` is a VIEW onto one pool row: it keeps the host
   truth for its tenant (live `_Entry`s, clock, δ-grid tick, epoch,
   pending-horizon mirror) and delegates every device interaction —
-  `advance`, `plan_tick`, slab membership — to the pool. A standalone
-  `SaathSession(backend="jax")` is simply the row-0 view of a private
-  single-row pool, so single-session code is the B=1 case of the same
-  machinery.
+  `advance`, `plan_tick`, slab membership — to the pool. After a
+  dispatch the row's host entries are STALE until someone looks
+  (`poll`, `snapshot`, a re-pack): `_materialize` then gathers exactly
+  the stale rows back (`jax_engine.gather_rows`) in one dispatch. A
+  standalone `SaathSession(backend="jax")` is simply the row-0 view of
+  a private single-row pool, so single-session code is the B=1 case of
+  the same machinery.
+
+Per-tenant scheduler parameters: every slab row carries its OWN
+`EngineParams` (thresholds, δ, deadline factor, traced wc/requeue/
+lcof/per-flow switches) — `session(params=..., mechanisms=...)` admits
+a tenant under its own configuration, and the stacked (B,)-leaf
+`EngineParams` rides the same single while_loop dispatch
+(`jax_engine.session_advance` vmaps the parameter rows exactly like
+`simulate_sweep` does for offline grids). The one compiled-shape
+constraint is `num_queues` (K): all tenants must share the pool's K.
+The STATIC structure switches (`features_for`) are OR-combined across
+admitted rows, mirroring `simulate_sweep`'s "dynamics compiled in when
+ANY setting re-queues" rule.
 
 Rows advance to INDEPENDENT horizons: `jax_engine.session_advance`
 takes a per-row `n_end`, and a lane at (or past) its horizon is an
@@ -30,13 +49,20 @@ exact no-op, so `pool.advance(dt)` moves every tenant together in one
 dispatch chain while `session.advance(dt)` on a single view moves only
 its row (the other lanes no-op). Per-session results are bitwise
 identical to standalone sessions — padding never perturbs a row's
-arithmetic (tests/test_pool.py).
+arithmetic (tests/test_pool.py, tests/test_pool_fuzz.py).
 
 Long-horizon sessions re-base their δ-grid EPOCH on re-pack once the
 row's relative tick exceeds ``REBASE_TICKS``: arrivals, deadlines, and
 completion times are stored relative to the row epoch, so a session
 that has been up for hours keeps full δ resolution in the f32 slab
-(absolute times would lose the grid beyond ~1e6 ticks).
+(absolute times would lose the grid beyond ~1e6 ticks). The epoch is
+strictly PER ROW — an old tenant re-basing never perturbs a young
+neighbor's grid (tests/test_pool.py).
+
+`pool.io` counts every host-device crossing (row scatters/gathers,
+full rebuild uploads, the tiny per-dispatch control reads), which is
+how `benchmarks/pool_throughput.py` proves clean-row advances upload
+nothing.
 """
 from __future__ import annotations
 
@@ -46,6 +72,7 @@ import math
 from typing import List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.params import SchedulerParams
@@ -60,15 +87,23 @@ REBASE_TICKS = 1 << 20
 MAX_REL_TICKS = 1 << 22
 
 
+def _tree_nbytes(tree) -> int:
+    return int(sum(np.asarray(leaf).nbytes
+                   for leaf in jax.tree_util.tree_leaves(tree)))
+
+
 class SessionPool:
     """An admission-capped fleet of jax-backend `SaathSession`s sharing
-    one device slab.
+    one device-resident slab.
 
-    All sessions share the pool's `SchedulerParams`, fabric size
-    (`num_ports`), mechanism switches and fidelity — one compiled tick
-    structure serves the whole fleet. `session()` admits a new tenant
-    (raising when the pool is full); `release()` (or
-    `SaathSession.close()`) frees the row for the next tenant.
+    All sessions share the pool's fabric size (`num_ports`), fidelity,
+    and queue count K — one compiled tick structure serves the whole
+    fleet — but each admitted tenant may bring its own
+    `SchedulerParams`/mechanism switches (`session(params=...,
+    mechanisms=...)`); rows without overrides run the pool defaults.
+    `session()` admits a new tenant (raising when the pool is full);
+    `release()` (or `SaathSession.close()`) frees the row for the next
+    tenant.
     """
 
     def __init__(self, params: Optional[SchedulerParams] = None, *,
@@ -77,42 +112,19 @@ class SessionPool:
                  fidelity: str = "flow", kernel: Optional[str] = None,
                  chunk: int = 32, min_coflow_capacity: int = 16,
                  min_flow_capacity: int = 64):
-        from repro.api.scenario import MECHANISM_KEYS
         from repro.fabric import jax_engine
 
-        mech = dict(mechanisms or {})
-        unknown = set(mech) - set(MECHANISM_KEYS)
-        if unknown:
-            raise ValueError(
-                f"unknown mechanism switches {sorted(unknown)}; "
-                f"available: {', '.join(MECHANISM_KEYS)}")
-        params = params or SchedulerParams()
-        if "dynamics_requeue" in mech:
-            params = dataclasses.replace(
-                params, dynamics_requeue=mech["dynamics_requeue"])
-        if "work_conservation" in mech:
-            params = dataclasses.replace(
-                params, work_conservation=mech["work_conservation"])
-        self.params = params
+        self._je = jax_engine
         self.num_ports = int(num_ports)
         self.kernel = kernel
         self.chunk = int(chunk)
         self.max_sessions = int(max_sessions)
         if self.max_sessions <= 0:
             raise ValueError("max_sessions must be positive")
+        self._fidelity = fidelity
 
-        self._je = jax_engine
-        self._ep = jax_engine.EngineParams.from_scheduler(
-            params,
-            work_conservation=mech.get("work_conservation"),
-            dynamics_requeue=mech.get("dynamics_requeue"),
-            lcof=mech.get("lcof", True),
-            per_flow_threshold=mech.get("per_flow_threshold", True))
-        self._features = jax_engine.features_for(
-            params, fidelity=fidelity,
-            dynamics_requeue=mech.get("dynamics_requeue"),
-            lcof=mech.get("lcof", True),
-            per_flow_threshold=mech.get("per_flow_threshold", True))
+        self.params, self._ep, self._base_features = \
+            self._resolve(params or SchedulerParams(), mechanisms)
 
         self._C_cap = int(min_coflow_capacity)
         self._F_cap = int(min_flow_capacity)
@@ -120,8 +132,47 @@ class SessionPool:
             [None] * self.max_sessions
         self._free = list(range(self.max_sessions))
         self._blank_rows: set = set()
-        self._tb = None        # TraceBatch (numpy, B rows)
-        self._state = None     # EngineState with numpy leaves
+        self._tb = None        # TraceBatch, DEVICE leaves (authoritative)
+        self._state = None     # EngineState, DEVICE leaves (authoritative)
+        self._scratch = None   # 1-row numpy TraceBatch packing stage
+        # tiny host control mirrors, refreshed from each dispatch's
+        # status download: per-row relative tick (the no-op horizon for
+        # unworked rows) and per-coflow finished flags (so poll only
+        # gathers rows that completed something new)
+        self._ticks = None     # (B,) np.int32
+        self._fin = None       # (B, C) np.bool_
+        # per-row scheduler parameters (stacked at dispatch time)
+        self._row_ep = [self._ep] * self.max_sessions
+        self._row_feat = [self._base_features] * self.max_sessions
+        self._ep_stack = None          # stacked (B,)-leaf EngineParams
+        self._features_now = self._base_features
+        # host<->device transfer accounting (benchmarks assert on this)
+        self.io = dict(full_uploads=0, row_uploads=0, row_downloads=0,
+                       upload_bytes=0, download_bytes=0, ctl_bytes=0,
+                       dispatches=0)
+
+    def _resolve(self, params: Optional[SchedulerParams],
+                 mechanisms: Optional[dict]) -> tuple:
+        """Validate one tenant's (params, mechanisms) against the pool's
+        compiled structure; returns (params, EngineParams, features)."""
+        from repro.api.scenario import check_mechanisms
+
+        mech = check_mechanisms(mechanisms)
+        p = (params or self.params).with_mechanisms(mech)
+        if hasattr(self, "params") and \
+                p.num_queues != self.params.num_queues:
+            raise ValueError(
+                f"per-tenant params must share the pool's num_queues "
+                f"(K={self.params.num_queues} is a compiled shape); "
+                f"got K={p.num_queues}")
+        lcof = mech.get("lcof", True)
+        per_flow = mech.get("per_flow_threshold", True)
+        ep = self._je.EngineParams.from_scheduler(
+            p, lcof=lcof, per_flow_threshold=per_flow)
+        feat = self._je.features_for(
+            p, fidelity=self._fidelity, lcof=lcof,
+            per_flow_threshold=per_flow)
+        return p, ep, feat
 
     # ---- admission -------------------------------------------------------
 
@@ -133,21 +184,28 @@ class SessionPool:
     def sessions(self) -> list:
         return [s for s in self._sessions if s is not None]
 
-    def session(self):
-        """Admit a new tenant session; raises `RuntimeError` when the
-        pool is at its admission cap."""
+    def session(self, params: Optional[SchedulerParams] = None,
+                mechanisms: Optional[dict] = None):
+        """Admit a new tenant session — with its OWN scheduler
+        parameters/mechanism switches when given (pool defaults
+        otherwise); raises `RuntimeError` when the pool is at its
+        admission cap."""
         from repro.api.session import SaathSession
 
         if not self._free:
             raise RuntimeError(
                 f"SessionPool is full ({self.max_sessions} sessions); "
                 f"release one (or raise max_sessions) to admit more")
+        p, ep, feat = self._resolve(params, mechanisms)
         row = self._free.pop(0)
-        sess = SaathSession(self.params, num_ports=self.num_ports,
+        sess = SaathSession(p, num_ports=self.num_ports,
                             backend="jax", kernel=self.kernel,
                             chunk=self.chunk, _pool=self, _row=row)
         self._sessions[row] = sess
         self._blank_rows.discard(row)
+        self._row_ep[row] = ep
+        self._row_feat[row] = feat
+        self._ep_stack = None
         return sess
 
     def release(self, sess) -> None:
@@ -161,6 +219,11 @@ class SessionPool:
         bisect.insort(self._free, row)
         sess._row = None
         sess._pool = None
+        sess._host_stale = False
+        sess._new_done = False
+        self._row_ep[row] = self._ep
+        self._row_feat[row] = self._base_features
+        self._ep_stack = None
 
     def _adopt(self, sess) -> None:
         """Bind an externally-constructed standalone session as row 0
@@ -173,21 +236,23 @@ class SessionPool:
 
     def advance(self, dt: float) -> float:
         """Move EVERY admitted session's clock by `dt` seconds and
-        schedule all their δ-grid ticks with one vmapped dispatch chain;
-        returns the (common) elapsed fleet time."""
+        schedule all their δ-grid ticks with one vmapped dispatch chain
+        (each row on its own δ grid); returns the (common) elapsed
+        fleet time."""
         if dt < 0:
             raise ValueError("advance(dt) needs dt >= 0")
-        delta = self.params.delta
         targets = []
         for s in self.sessions:
             s._clock += float(dt)
-            targets.append((s, int(math.floor(s._clock / delta + 1e-9))))
+            targets.append(
+                (s, int(math.floor(s._clock / s.params.delta + 1e-9))))
         self._advance(targets)
         return float(dt)
 
     def poll(self) -> List[Tuple[object, object]]:
         """Completed-since-last-poll coflows across the fleet, as
         (session, CompletedCoflow) pairs."""
+        self._materialize(completions_only=True)
         out = []
         for s in self.sessions:
             out.extend((s, d) for d in s.poll())
@@ -211,25 +276,31 @@ class SessionPool:
             work[s._row] = (s, n_end)
         while work:
             self._ensure()
-            ne = np.asarray(self._state.tick, np.float32).copy()
+            ne = self._ticks.astype(np.float32)
             for r, (s, n_end) in work.items():
                 ne[r] = min(n_end, s._epoch + MAX_REL_TICKS) - s._epoch
             state, _ = self._je.session_advance(
-                self._state, self._tb, self._ep, n_end=ne,
+                self._state, self._tb, self._ep_stack, n_end=ne,
                 chunk=self.chunk, kernel=self.kernel,
-                features=self._features)
-            self._state = jax.tree_util.tree_map(
-                lambda a: np.array(a), state)
+                features=self._features_now)
+            self._state = state          # stays device-resident
+            self.io["dispatches"] += 1
+            tick_h = np.array(state.tick)
+            fin_h = np.array(state.finished)
+            self.io["ctl_bytes"] += tick_h.nbytes + fin_h.nbytes
             nxt = {}
             for r, (s, n_end) in work.items():
-                self._sync_row(s)
-                if s._tick >= n_end or \
-                        all(e.finished for e in s._live.values()):
+                s._tick = s._epoch + int(tick_h[r])
+                s._host_stale = True
+                if (fin_h[r] != self._fin[r]).any():
+                    s._new_done = True   # poll must gather this row
+                if s._tick >= n_end or bool(fin_h[r].all()):
                     continue
                 # the MAX_REL_TICKS split: re-pack (re-basing the
                 # epoch) and keep going toward the real target
                 s._tb_dirty = True
                 nxt[r] = (s, n_end)
+            self._ticks, self._fin = tick_h, fin_h
             work = nxt
 
     def _plan_tick(self, sess) -> np.ndarray:
@@ -239,22 +310,24 @@ class SessionPool:
         mask = np.zeros(self.max_sessions, bool)
         mask[sess._row] = True
         state, admitted = self._je.session_plan_tick(
-            self._state, self._tb, self._ep, kernel=self.kernel,
-            features=self._features, row_mask=mask)
-        self._state = jax.tree_util.tree_map(lambda a: np.array(a),
-                                             state)
-        adm = np.asarray(admitted)[sess._row]
-        self._sync_row(sess)
-        return adm
+            self._state, self._tb, self._ep_stack, kernel=self.kernel,
+            features=self._features_now, row_mask=mask)
+        self._state = state
+        self.io["dispatches"] += 1
+        adm_all = np.asarray(admitted)
+        self.io["ctl_bytes"] += adm_all.nbytes
+        sess._host_stale = True
+        self._materialize([sess])
+        return adm_all[sess._row]
 
     def _ensure(self) -> None:
-        """Re-pack dirty rows (and re-blank released ones) into the
-        shared slab, growing the flow/coflow capacities geometrically
-        when any row outgrows them (a growth re-packs every row — the
-        padded shapes are shared, but per-row state is carried through
-        the sessions' host entries, so nothing is lost)."""
-        from repro.traces.batch import blank_row, empty_batch
-
+        """Flush host-side changes to the device slab: released rows are
+        re-blanked and dirty rows re-packed, both as ROW SCATTERS
+        (`jax_engine.scatter_rows`) — clean rows never re-upload. A
+        capacity growth (any row outgrowing the shared flow/coflow
+        capacities, grown geometrically) is the one full-slab rebuild
+        path; per-row state is carried through the sessions' host
+        entries, so nothing is lost."""
         need_c = need_f = 0
         for s in self.sessions:
             if s._tb_dirty:
@@ -269,63 +342,105 @@ class SessionPool:
             self._F_cap *= 2
             grew = True
         if self._tb is None or grew:
-            self._tb = empty_batch(self.max_sessions,
-                                   flow_capacity=self._F_cap,
-                                   coflow_capacity=self._C_cap,
-                                   port_capacity=self.num_ports)
-            self._state = self._blank_state()
-            self._blank_rows.clear()
-            for s in self.sessions:
-                s._tb_dirty = True
-        for r in self._blank_rows:
-            blank_row(self._tb, r)
-            self._blank_state_row(r)
+            self._rebuild()
+        else:
+            self._scatter_dirty()
+        if self._ep_stack is None:
+            self._ep_stack = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *self._row_ep)
+            feats = [self._base_features] + \
+                [self._row_feat[s._row] for s in self.sessions]
+            self._features_now = tuple(
+                any(f[i] for f in feats) for i in range(3))
+
+    def _scatter_dirty(self) -> None:
+        from repro.traces.batch import row_of, stack_rows
+
+        dirty = [s for s in self.sessions
+                 if s._tb_dirty or s._state_dirty]
+        if not dirty and not self._blank_rows:
+            return
+        # re-packing reads the host entries: sync the dirty rows first
+        self._materialize(dirty)
+        tb_rows, st_rows = [], []
+        for r in sorted(self._blank_rows):
+            self._blank_scratch()
+            tb_rows.append((r, row_of(self._scratch, 0)))
+            st_rows.append((r, self._blank_state_row()))
+        self._blank_rows.clear()
+        for s in dirty:
+            if s._tb_dirty:
+                self._pack_row_np(self._scratch_tb(), 0, s)
+                tb_rows.append((s._row, row_of(self._scratch, 0)))
+            st_rows.append((s._row, self._state_row(s)))
+            s._state_dirty = False
+        for r, row in st_rows:
+            self._ticks[r] = int(row.tick)
+            self._fin[r] = row.finished
+        st_idx = np.array([r for r, _ in st_rows], np.int32)
+        st_payload = jax.tree_util.tree_map(
+            lambda *xs: np.stack(xs), *[p for _, p in st_rows])
+        self.io["upload_bytes"] += _tree_nbytes(st_payload)
+        if tb_rows:
+            # one fused scatter dispatch covers both trees
+            tb_idx = np.array([r for r, _ in tb_rows], np.int32)
+            tb_payload = stack_rows([p for _, p in tb_rows])
+            self.io["row_uploads"] += len(tb_rows)
+            self.io["upload_bytes"] += _tree_nbytes(tb_payload)
+            self._tb, self._state = self._je.scatter_rows(
+                (self._tb, self._state), (tb_idx, st_idx),
+                (tb_payload, st_payload))
+        else:
+            self._state = self._je.scatter_rows(self._state, st_idx,
+                                                st_payload)
+
+    def _scratch_tb(self):
+        from repro.traces.batch import empty_batch
+
+        if self._scratch is None:
+            self._scratch = empty_batch(
+                1, flow_capacity=self._F_cap,
+                coflow_capacity=self._C_cap,
+                port_capacity=self.num_ports)
+        return self._scratch
+
+    def _blank_scratch(self):
+        from repro.traces.batch import blank_row
+
+        blank_row(self._scratch_tb(), 0)
+
+    def _rebuild(self) -> None:
+        """Full-slab rebuild (first build, or a capacity growth): pack
+        every row host-side and upload the whole slab once — the ONLY
+        path that moves full mirrors to the device."""
+        from repro.traces.batch import empty_batch
+
+        self._materialize()
+        self._scratch = None
+        tb = empty_batch(self.max_sessions,
+                         flow_capacity=self._F_cap,
+                         coflow_capacity=self._C_cap,
+                         port_capacity=self.num_ports)
+        rows = [self._blank_state_row()
+                for _ in range(self.max_sessions)]
         self._blank_rows.clear()
         for s in self.sessions:
-            if s._tb_dirty:
-                self._repack_row(s)
-            elif s._state_dirty:
-                self._restate_row(s)
+            s._tb_dirty = True
+            self._pack_row_np(tb, s._row, s)
+            rows[s._row] = self._state_row(s)
+            s._state_dirty = False
+        state = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *rows)
+        self.io["full_uploads"] += 1
+        self.io["upload_bytes"] += _tree_nbytes(tb) + _tree_nbytes(state)
+        self._tb = jax.device_put(tb)
+        self._state = jax.device_put(state)
+        self._ticks = state.tick.copy()
+        self._fin = state.finished.copy()
 
-    def _blank_state(self):
-        from repro.core.jax_coordinator import CoordState
-        from repro.fabric.jax_engine import EngineState
-
-        B, C, F = self.max_sessions, self._C_cap, self._F_cap
-        return EngineState(
-            coord=CoordState(np.full((B, C), -1, np.int32),
-                             np.full((B, C), np.inf, np.float32),
-                             np.zeros((B, C), bool)),
-            sent=np.zeros((B, F), np.float32),
-            done=np.ones((B, F), bool),
-            fct=np.zeros((B, F), np.float32),
-            finished=np.ones((B, C), bool),
-            cct=np.full((B, C), np.nan, np.float32),
-            t0=np.zeros((B,), np.float32),
-            tick=np.zeros((B,), np.int32),
-            rate=np.zeros((B, F), np.float32),
-            pend_sent=np.zeros((B, F), np.float32),
-            pend_tick=np.zeros((B,), np.float32),
-            pend_next=np.zeros((B,), np.float32))
-
-    def _blank_state_row(self, r: int) -> None:
-        st = self._state
-        st.coord.queue[r] = -1
-        st.coord.deadline[r] = np.inf
-        st.coord.running[r] = False
-        st.sent[r] = 0.0
-        st.done[r] = True
-        st.fct[r] = 0.0
-        st.finished[r] = True
-        st.cct[r] = np.nan
-        st.t0[r] = 0.0
-        st.tick[r] = 0
-        st.rate[r] = 0.0
-        st.pend_sent[r] = 0.0
-        st.pend_tick[r] = 0.0
-        st.pend_next[r] = 0.0
-
-    def _repack_row(self, s) -> None:
+    def _pack_row_np(self, tb, r: int, s) -> None:
+        """Pack one session's live coflows into row `r` of a NUMPY
+        TraceBatch (the 1-row scratch for scatters, the full slab for
+        rebuilds), re-basing the row's grid epoch when due."""
         from repro.traces.batch import pack_row
 
         if s._tick - s._epoch >= REBASE_TICKS:
@@ -333,57 +448,106 @@ class SessionPool:
             # stored relative to it, restoring δ resolution in f32
             s._epoch = s._tick
         table = s._rebuild_table()
-        pack_row(self._tb, s._row, table,
+        pack_row(tb, r, table,
                  arrival_rank=[e.rank for e in s._slots])
         s._flow_lo = table.flow_lo.copy()
         s._flow_hi = table.flow_hi.copy()
         s._tb_dirty = False
-        self._restate_row(s)
 
-    def _restate_row(self, s) -> None:
-        """Rewrite one row of the EngineState mirror from the session's
-        host entries (the carry that survives re-packs)."""
-        st, r = self._state, s._row
-        epoch_t = s._epoch * self.params.delta
-        self._blank_state_row(r)
-        st.done[r] = ~self._tb.flow_valid[r]
-        st.finished[r] = ~self._tb.coflow_valid[r]
+    def _blank_state_row(self):
+        from repro.core.jax_coordinator import CoordState
+        from repro.fabric.jax_engine import EngineState
+
+        C, F = self._C_cap, self._F_cap
+        return EngineState(
+            coord=CoordState(np.full((C,), -1, np.int32),
+                             np.full((C,), np.inf, np.float32),
+                             np.zeros((C,), bool)),
+            sent=np.zeros((F,), np.float32),
+            done=np.ones((F,), bool),
+            fct=np.zeros((F,), np.float32),
+            finished=np.ones((C,), bool),
+            cct=np.full((C,), np.nan, np.float32),
+            t0=np.float32(0.0),
+            tick=np.int32(0),
+            rate=np.zeros((F,), np.float32),
+            pend_sent=np.zeros((F,), np.float32),
+            pend_tick=np.float32(0.0),
+            pend_next=np.float32(0.0))
+
+    def _state_row(self, s):
+        """One row of engine state rebuilt from the session's host
+        entries (the carry that survives re-packs), as unbatched numpy
+        arrays ready to scatter. Pads (and retired slots) stay at the
+        blank-row identity: done/finished, zero rates."""
+        row = self._blank_state_row()
+        epoch_t = s._epoch * s.params.delta
         for i, e in enumerate(s._slots):
             lo, hi = s._flow_lo[i], s._flow_hi[i]
-            st.sent[r, lo:hi] = e.sent
-            st.done[r, lo:hi] = e.done
-            st.fct[r, lo:hi] = np.where(
+            row.sent[lo:hi] = e.sent
+            row.done[lo:hi] = e.done
+            row.fct[lo:hi] = np.where(
                 e.done, np.nan_to_num(e.fct) - epoch_t, 0.0)
-            st.finished[r, i] = e.finished
-            st.cct[r, i] = e.cct
-            st.coord.queue[r, i] = e.queue
-            st.coord.deadline[r, i] = e.deadline - epoch_t \
+            row.finished[i] = e.finished
+            row.cct[i] = e.cct
+            row.coord.queue[i] = e.queue
+            row.coord.deadline[i] = e.deadline - epoch_t \
                 if np.isfinite(e.deadline) else np.inf
-            st.coord.running[r, i] = e.running
-            st.rate[r, lo:hi] = e.rate
-            st.pend_sent[r, lo:hi] = e.pend_sent
-        st.tick[r] = s._tick - s._epoch
+            row.coord.running[i] = e.running
+            row.rate[lo:hi] = e.rate
+            row.pend_sent[lo:hi] = e.pend_sent
+        row = row._replace(tick=np.int32(s._tick - s._epoch))
         if s._pend is not None:
-            st.pend_tick[r] = s._pend[0] - s._epoch
-            st.pend_next[r] = s._pend[1] - s._epoch
-        s._state_dirty = False
+            row = row._replace(
+                pend_tick=np.float32(s._pend[0] - s._epoch),
+                pend_next=np.float32(s._pend[1] - s._epoch))
+        return row
 
-    def _sync_row(self, s) -> None:
-        """Mirror one row of the device state back into the session's
-        host entries (absolute f64 times reconstructed from the row
+    def _materialize(self, sessions=None,
+                     completions_only: bool = False) -> None:
+        """Gather STALE rows of the device state back into their
+        sessions' host entries — one `gather_rows` dispatch for the
+        whole stale set (absolute f64 times reconstructed from the row
+        epochs). Clean host mirrors cost nothing; this is the lazy
+        half of the device-resident contract. `sessions` restricts the
+        sync to the rows a caller actually inspects (a snapshot of one
+        tenant never downloads its neighbors); `completions_only`
+        (the poll fast path) syncs only rows whose dispatch-status
+        mirror shows NEW completions — a row that merely progressed
+        stays stale (and free) until a re-pack or snapshot needs it."""
+        if self._state is None:
+            return
+        stale = [s for s in (self.sessions if sessions is None
+                             else sessions)
+                 if s._host_stale
+                 and (s._new_done or not completions_only)]
+        if not stale:
+            return
+        idx = np.array([s._row for s in stale], np.int32)
+        rows = self._je.gather_rows(self._state, idx)
+        host = jax.tree_util.tree_map(np.asarray, rows)
+        self.io["row_downloads"] += len(stale)
+        self.io["download_bytes"] += _tree_nbytes(host)
+        for j, s in enumerate(stale):
+            self._sync_row(s, host, j)
+            s._host_stale = False
+            s._new_done = False
+
+    def _sync_row(self, s, st, j: int) -> None:
+        """Mirror row `j` of the gathered host state into session `s`'s
+        entries (absolute f64 times reconstructed from the row
         epoch)."""
-        st, r = self._state, s._row
-        epoch_t = s._epoch * self.params.delta
-        sent = np.asarray(st.sent[r], np.float64)
-        done = np.asarray(st.done[r])
-        fct = np.asarray(st.fct[r], np.float64)
-        finished = np.asarray(st.finished[r])
-        cct = np.asarray(st.cct[r], np.float64)
-        queue = np.asarray(st.coord.queue[r])
-        deadline = np.asarray(st.coord.deadline[r], np.float64)
-        running = np.asarray(st.coord.running[r])
-        rate = np.asarray(st.rate[r], np.float64)
-        pend_sent = np.asarray(st.pend_sent[r], np.float64)
+        epoch_t = s._epoch * s.params.delta
+        sent = np.asarray(st.sent[j], np.float64)
+        done = np.asarray(st.done[j])
+        fct = np.asarray(st.fct[j], np.float64)
+        finished = np.asarray(st.finished[j])
+        cct = np.asarray(st.cct[j], np.float64)
+        queue = np.asarray(st.coord.queue[j])
+        deadline = np.asarray(st.coord.deadline[j], np.float64)
+        running = np.asarray(st.coord.running[j])
+        rate = np.asarray(st.rate[j], np.float64)
+        pend_sent = np.asarray(st.pend_sent[j], np.float64)
         for i, e in enumerate(s._slots):
             lo, hi = s._flow_lo[i], s._flow_hi[i]
             e.sent = sent[lo:hi].copy()
@@ -396,11 +560,24 @@ class SessionPool:
             e.queue = int(queue[i])
             e.deadline = float(deadline[i] + epoch_t)
             e.running = bool(running[i])
-        tick_rel = int(st.tick[r])
+        tick_rel = int(st.tick[j])
         s._tick = s._epoch + tick_rel
-        pn = float(st.pend_next[r])
-        s._pend = (s._epoch + int(st.pend_tick[r]), s._epoch + int(pn)) \
+        self._ticks[s._row] = tick_rel        # keep the ctl mirror true
+        pn = float(st.pend_next[j])
+        s._pend = (s._epoch + int(st.pend_tick[j]), s._epoch + int(pn)) \
             if pn > tick_rel else None
+
+    # ---- debug/oracle view ----------------------------------------------
+
+    def host_view(self) -> tuple:
+        """Materialize NUMPY copies of the device slab as
+        (TraceBatch, EngineState) — the lazily-built debug/oracle view
+        (the device arrays stay authoritative; mutating the copies has
+        no effect). Returns (None, None) before the first dispatch."""
+        if self._tb is None:
+            return None, None
+        return (jax.tree_util.tree_map(np.asarray, self._tb),
+                jax.tree_util.tree_map(np.asarray, self._state))
 
 
 __all__ = ["SessionPool", "REBASE_TICKS"]

@@ -250,15 +250,22 @@ def result_from_completions(completions, *, engine: str = "jax",
                   wall_seconds=wall_seconds)
 
 
-def _split_mechanisms(sc: Scenario):
-    """Validate mechanism names once for both engines."""
-    mech = dict(sc.mechanisms or {})
+def check_mechanisms(mechanisms: "Mapping | None") -> dict:
+    """The ONE validator for mechanism-switch names — shared by
+    `Scenario` routing, `SessionPool`, and `SaathSession`. Returns a
+    plain dict copy; raises on unknown keys."""
+    mech = dict(mechanisms or {})
     unknown = set(mech) - set(MECHANISM_KEYS)
     if unknown:
         raise ValueError(
             f"unknown mechanism switches {sorted(unknown)}; "
             f"available: {', '.join(MECHANISM_KEYS)}")
     return mech
+
+
+def _split_mechanisms(sc: Scenario):
+    """Validate mechanism names once for both engines."""
+    return check_mechanisms(sc.mechanisms)
 
 
 def run(scenario: Scenario) -> Result:
@@ -399,4 +406,5 @@ def _run_jax(sc: Scenario, traces: List[Trace], settings) -> Result:
 
 
 __all__ = ["Scenario", "Result", "run", "resolve_traces",
-           "result_from_completions", "MECHANISM_KEYS"]
+           "result_from_completions", "MECHANISM_KEYS",
+           "check_mechanisms"]

@@ -107,14 +107,9 @@ class SaathSession:
         if backend not in ("jax", "numpy"):
             raise ValueError(
                 f"unknown backend {backend!r}; available: jax, numpy")
-        from repro.api.scenario import MECHANISM_KEYS
+        from repro.api.scenario import check_mechanisms
 
-        mech = dict(mechanisms or {})
-        unknown = set(mech) - set(MECHANISM_KEYS)
-        if unknown:
-            raise ValueError(
-                f"unknown mechanism switches {sorted(unknown)}; "
-                f"available: {', '.join(MECHANISM_KEYS)}")
+        mech = check_mechanisms(mechanisms)
         self.num_ports = int(num_ports)
         self.backend = backend
         self.kernel = kernel
@@ -129,6 +124,8 @@ class SaathSession:
         self._flow_lo = self._flow_hi = None
         self._tb_dirty = True   # membership changed -> re-pack
         self._state_dirty = True  # dynamic state changed host-side
+        self._host_stale = False  # device row ahead of the host entries
+        self._new_done = False  # device row holds unseen completions
         # pending capped schedule interval, as GLOBAL tick indices
         # (anchor tick, horizon tick); per-flow anchor rates/sent live
         # in the entries. numpy keeps continuous times instead.
@@ -138,7 +135,11 @@ class SaathSession:
             if _pool is not None:
                 self._pool = _pool
                 self._row = _row
-                self.params = _pool.params
+                # pool.session() resolves per-tenant params/mechanisms
+                # and passes the merged result; plain adoption falls
+                # back to the pool defaults
+                self.params = params if params is not None \
+                    else _pool.params
             else:
                 from repro.api.pool import SessionPool
 
@@ -156,14 +157,8 @@ class SaathSession:
             from repro.core.policies import make_policy
             from repro.fabric.engine import Simulator
 
-            self.params = params or SchedulerParams()
-            if "dynamics_requeue" in mech:
-                self.params = dataclasses.replace(
-                    self.params, dynamics_requeue=mech["dynamics_requeue"])
-            if "work_conservation" in mech:
-                self.params = dataclasses.replace(
-                    self.params,
-                    work_conservation=mech["work_conservation"])
+            self.params = (params or SchedulerParams()) \
+                .with_mechanisms(mech)
             pol_kw = {k: mech[k] for k in ("lcof", "per_flow_threshold",
                                            "work_conservation")
                       if k in mech}
@@ -253,8 +248,17 @@ class SaathSession:
         return self._clock
 
     def poll(self) -> List[CompletedCoflow]:
-        """Completed-since-last-poll coflows; retiring them frees their
-        slab rows for recycling at the next re-pack."""
+        """Completed-since-last-poll coflows. Retired slots are
+        reclaimed LAZILY: a finished coflow left packed is a masked
+        no-op to the engine (exactly like an offline replay, whose pack
+        keeps completed coflows resident), so the slab is only
+        re-packed when the next `submit` actually changes membership —
+        polling never dirties a row. On the jax backend this is also a
+        lazy materialization point: the device row is only gathered
+        back to the host when someone looks (and only rows with NEW
+        completions are gathered at all)."""
+        if self.backend == "jax" and self._pool is not None:
+            self._pool._materialize(completions_only=True)
         out = []
         for h in list(self._live):
             e = self._live[h]
@@ -264,7 +268,6 @@ class SaathSession:
                                            fct=e.fct.copy(),
                                            size=e.size.copy()))
                 del self._live[h]
-                self._tb_dirty = True
         return out
 
     def drain(self, max_seconds: float = 3600.0,
@@ -298,9 +301,27 @@ class SaathSession:
         self.complete(admitted)
         return admitted
 
+    def snapshot(self) -> Dict[int, dict]:
+        """Per-live-coflow scheduler view, keyed by handle: the queue
+        the coordinator placed it in, its starvation deadline, whether
+        it is admitted (`running`), finished, and its bytes sent. On
+        the jax backend this materializes the device row lazily (and
+        only THIS session's row)."""
+        if self.backend == "jax" and self._pool is not None:
+            self._check_open()
+            self._pool._materialize([self])
+        return {h: {"queue": e.queue, "deadline": e.deadline,
+                    "running": e.running, "finished": e.finished,
+                    "sent": float(np.sum(e.sent))}
+                for h, e in self._live.items()}
+
     def complete(self, handles: Sequence[int]) -> None:
         """Force-complete coflows at the current clock (wave planning /
         external cancellation)."""
+        if self.backend == "jax" and self._pool is not None:
+            # the untouched entries must be fresh before the row's
+            # state is rebuilt from them at the next re-pack
+            self._pool._materialize([self])
         now = self._clock
         for h in handles:
             e = self._live[h]

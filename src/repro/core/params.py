@@ -35,6 +35,23 @@ class SchedulerParams:
             t *= self.growth
         return out
 
+    def with_mechanisms(self, mechanisms: "dict | None"
+                        ) -> "SchedulerParams":
+        """A copy with the mechanism switches that live ON the params
+        (work_conservation / dynamics_requeue) overridden from a shared
+        `repro.api.MECHANISM_KEYS`-style dict; lcof /
+        per_flow_threshold are engine/policy arguments, not params
+        fields, and are ignored here."""
+        mech = dict(mechanisms or {})
+        out = self
+        if "dynamics_requeue" in mech:
+            out = dataclasses.replace(
+                out, dynamics_requeue=mech["dynamics_requeue"])
+        if "work_conservation" in mech:
+            out = dataclasses.replace(
+                out, work_conservation=mech["work_conservation"])
+        return out
+
     @property
     def min_rate(self) -> float:
         return self.port_bw * self.min_rate_frac

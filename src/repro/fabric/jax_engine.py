@@ -631,6 +631,38 @@ def _drive(tb: TraceBatch, ep: EngineParams, delta: float,
 
 # ---- online session support (repro.api.SaathSession) ---------------------
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_rows(tree, idx, rows):
+    """Write stacked row updates into a device-resident slab pytree.
+
+    `tree` is any leading-axis-batched pytree (a `TraceBatch` or a
+    session `EngineState`), `idx` a (k,) int array of row indices and
+    `rows` a structurally-identical pytree whose leaves carry the k
+    updated rows stacked on axis 0. Passing a PLAIN tuple of trees
+    with matching tuples of idx/rows scatters them all in ONE fused
+    dispatch (the `SessionPool` updates its TraceBatch and EngineState
+    together this way). This is the pool's dirty-row upload path: only
+    the rows whose membership/state changed cross the host-device
+    boundary; clean rows never re-upload (DESIGN.md §8). The input
+    tree is DONATED — XLA updates the slab buffers in place, so a
+    scatter costs O(dirty rows), not O(slab); callers must rebind."""
+    if type(tree) is tuple:       # NamedTuple slabs are leaves-bearing
+        return tuple(
+            jax.tree_util.tree_map(
+                lambda a, u, i=i: a.at[i].set(u), t, r)
+            for t, i, r in zip(tree, idx, rows))
+    return jax.tree_util.tree_map(lambda a, u: a.at[idx].set(u),
+                                  tree, rows)
+
+
+@jax.jit
+def gather_rows(tree, idx: jax.Array):
+    """Slice rows `idx` out of a device-resident slab pytree (stacked on
+    axis 0) — the download half of the `SessionPool` row contract: the
+    host mirrors only the rows a caller actually inspects."""
+    return jax.tree_util.tree_map(lambda a: a[idx], tree)
+
+
 def features_for(params: SchedulerParams, *, fidelity: str = "flow",
                  work_conservation: "bool | None" = None,
                  dynamics_requeue: "bool | None" = None,
@@ -658,7 +690,12 @@ def _run_session_block(state: EngineState, tb: TraceBatch,
     over vmapped `_tick` steps runs EXACTLY the event steps the fleet
     needs — no fixed-chunk padding, no host round-trip per chunk. This
     is what makes a pooled advance cost one dispatch's fixed overhead
-    for the whole fleet instead of per session (DESIGN.md §8)."""
+    for the whole fleet instead of per session (DESIGN.md §8).
+
+    `ep` carries a leading ROW axis on every leaf (the `SessionPool`
+    stacks one `EngineParams` per slab row), so a heterogeneous
+    multi-tenant fleet — per-row thresholds, δ, deadline factors,
+    traced mechanism switches — still rides one while_loop dispatch."""
     per_flow_wc, with_dynamics, with_ablations = features
 
     def lanes_open(s):
@@ -673,10 +710,11 @@ def _run_session_block(state: EngineState, tb: TraceBatch,
     def body(carry):
         s, steps = carry
         s = jax.vmap(
-            lambda srow, tbrow, nerow: _tick(
-                srow, tbrow, ep, kernel, per_flow_wc=per_flow_wc,
+            lambda srow, tbrow, nerow, eprow: _tick(
+                srow, tbrow, eprow, kernel, per_flow_wc=per_flow_wc,
                 with_dynamics=with_dynamics,
-                with_ablations=with_ablations, n_end=nerow))(s, tb, n_end)
+                with_ablations=with_ablations, n_end=nerow))(
+                    s, tb, n_end, ep)
         return s, steps + 1
 
     return jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
@@ -692,14 +730,16 @@ def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
     coflows. `n_end` is a scalar or a (B,) per-row array — a
     `SessionPool` advances a whole fleet of sessions, each to its own
     horizon, with ONE dispatch; lanes already at their horizon are
-    exact no-ops. The caps are traced, so one compiled executable
+    exact no-ops. `ep` must carry a leading (B,) row axis on every
+    leaf (stack identical rows for a homogeneous fleet): each tenant
+    row schedules under its OWN thresholds/δ/mechanism switches inside
+    the one dispatch. The caps are traced, so one compiled executable
     serves every advance of every session. `chunk` is accepted for API
     compatibility but unused: the device-side while_loop runs exactly
     the event steps needed. Returns (state, event_steps_executed)."""
     del chunk
     ne = jnp.asarray(np.broadcast_to(
-        np.asarray(n_end, np.float32),
-        np.shape(np.asarray(state.tick))).copy())
+        np.asarray(n_end, np.float32), state.tick.shape).copy())
     state, steps = _run_session_block(
         state, tb, ep, ne, jnp.int32(max_steps),
         kernel=kernel, features=features)
@@ -723,18 +763,19 @@ def session_plan_tick(state: EngineState, tb: TraceBatch,
     plan this tick — unselected rows are exact no-ops (their state is
     untouched and they admit nothing). Any pending capped interval of a
     planning row is discarded: planning re-evaluates every tick.
-    Returns (state with post-tick coordinator carry and tick+1,
-    admitted (B, C) bool)."""
+    `ep` carries a leading (B,) row axis (per-tenant parameters, like
+    `session_advance`). Returns (state with post-tick coordinator
+    carry and tick+1, admitted (B, C) bool)."""
     per_flow_wc, with_dynamics, with_ablations = features
 
-    def one(s, tb_row, m):
+    def one(s, tb_row, m, ep_row):
         tickf = s.tick.astype(jnp.float32)
-        now = s.t0 + tickf * ep.delta
-        eps_t = 1e-3 * ep.delta
+        now = s.t0 + tickf * ep_row.delta
+        eps_t = 1e-3 * ep_row.delta
         batch, flows, _, _, _ = _views(
             s, tb_row, now, eps_t, per_flow_wc=per_flow_wc,
             with_dynamics=with_dynamics, with_ablations=with_ablations)
-        coord, out = jc.tick_core(s.coord, batch, now, ep.dp,
+        coord, out = jc.tick_core(s.coord, batch, now, ep_row.dp,
                                   kernel=kernel, flows=flows)
         new = s._replace(coord=coord, tick=s.tick + 1)
         if s.pend_next is not None:
@@ -745,9 +786,9 @@ def session_plan_tick(state: EngineState, tb: TraceBatch,
 
     mask = row_mask if row_mask is not None else \
         jnp.ones(state.tick.shape, bool)
-    return jax.vmap(one)(state, tb, mask)
+    return jax.vmap(one)(state, tb, mask, ep)
 
 
 __all__ = ["EngineParams", "EngineState", "EngineResult",
            "default_max_ticks", "features_for", "session_advance",
-           "session_plan_tick"]
+           "session_plan_tick", "scatter_rows", "gather_rows"]

@@ -3,20 +3,32 @@
 `CoflowServer` is the admission-controlled service surface of the
 scheduling plane: tenants register by name, submit coflows, and poll
 completions, while ONE `repro.api.SessionPool` hosts every tenant as a
-row of a single batched device slab — `advance(dt)` moves the whole
-fleet's coordinators with one vmapped dispatch chain, which is what
-keeps the per-decision cost flat as tenant count grows (the property
-PAPER.md §5 / Table 2 measures on the testbed coordinator).
+row of a single batched device-resident slab — `advance(dt)` moves the
+whole fleet's coordinators with one vmapped dispatch chain, which is
+what keeps the per-decision cost flat as tenant count grows (the
+property PAPER.md §5 / Table 2 measures on the testbed coordinator).
 
 Admission model: `max_tenants` fixes the slab's row count up front
 (the compiled executables are shaped by it); `register` raises
 `AdmissionError` once the cap is reached, and `evict` frees a row —
 dropping the tenant's unfinished coflows — for the next registrant.
-Per-tenant outcomes are extracted as the SAME normalized
-`repro.api.Result` the offline engines produce
+Tenants may register with their OWN `SchedulerParams`/mechanism
+switches (`register(name, params=..., mechanisms=...)`): the pool
+stacks one parameter row per tenant, so a heterogeneous fleet still
+rides one dispatch. Per-tenant outcomes are extracted as the SAME
+normalized `repro.api.Result` the offline engines produce
 (`api.scenario.result_from_completions`), so `avg_cct`, `makespan`,
 `summary()` and `benchmarks.common.record` work unchanged on live
 serving data.
+
+Completion retention is BOUNDED: every harvested completion is folded
+into the tenant's incremental `TenantAggregates` (exact lifetime
+count / mean CCT / makespan, O(1) memory), and the raw
+`CompletedCoflow` records are TRIMMED once `poll` returns them (plus a
+`history_limit` backstop for tenants that never poll). `result()`
+therefore reports exact lifetime aggregates forever, while its
+per-coflow arrays cover the retained (not-yet-polled) window — a
+long-lived tenant no longer grows the server without bound.
 
 CLI demo (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --tenants 6 --seconds 0.4
@@ -27,6 +39,8 @@ CLI demo (CPU smoke):
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -42,32 +56,105 @@ class AdmissionError(RuntimeError):
     """The server is at its tenant admission cap."""
 
 
+@dataclasses.dataclass
+class TenantAggregates:
+    """Exact lifetime completion statistics, folded incrementally as
+    completions are harvested (O(1) memory however long the tenant
+    lives — the fix for the unbounded per-tenant history)."""
+    coflows: int = 0
+    flows: int = 0
+    bytes: float = 0.0
+    cct_sum: float = 0.0
+    last_fct: float = -math.inf     # max absolute flow completion time
+    trimmed: int = 0                # records dropped by history_limit
+
+    def fold(self, comps: Sequence[CompletedCoflow]) -> None:
+        for d in comps:
+            self.coflows += 1
+            self.flows += int(d.fct.size)
+            if d.size is not None:
+                self.bytes += float(np.sum(d.size))
+            self.cct_sum += float(d.cct)
+            if d.fct.size:
+                self.last_fct = max(self.last_fct,
+                                    float(np.max(d.fct)))
+
+    @property
+    def avg_cct(self) -> float:
+        return self.cct_sum / self.coflows if self.coflows \
+            else float("nan")
+
+    @property
+    def makespan(self) -> float:
+        return self.last_fct if self.coflows else float("nan")
+
+
+@dataclasses.dataclass
+class TenantResult(Result):
+    """A tenant's normalized `Result` whose summary statistics come
+    from the EXACT lifetime aggregates while the per-coflow arrays
+    cover only the retained (not-yet-polled) completion window —
+    `row_cct()`/percentiles see the window, `avg_cct`/`makespan`/
+    `num_coflows` the whole registration."""
+    agg: Optional[TenantAggregates] = None
+
+    @property
+    def avg_cct(self) -> np.ndarray:
+        if self.agg is None:
+            return Result.avg_cct.fget(self)
+        return np.array([self.agg.avg_cct])
+
+    @property
+    def makespan(self) -> np.ndarray:
+        if self.agg is None:
+            return Result.makespan.fget(self)
+        return np.array([self.agg.makespan])
+
+    @staticmethod
+    def from_window(window: Sequence[CompletedCoflow],
+                    agg: TenantAggregates) -> "TenantResult":
+        """Build from the retained completion window + the lifetime
+        aggregates (counts lifted to the lifetime totals; the arrays
+        may be shorter after trimming)."""
+        base = result_from_completions(window, engine="jax",
+                                       policy="saath")
+        out = TenantResult(
+            **{f.name: getattr(base, f.name)
+               for f in dataclasses.fields(Result)},
+            agg=agg if agg.coflows else None)
+        if agg.coflows:
+            out.num_coflows = np.array([agg.coflows])
+            out.num_flows = np.array([agg.flows])
+        return out
+
+
 class CoflowServer:
     """Admission-controlled multi-tenant coflow scheduling service.
 
-    All tenants share one fabric (`num_ports` ports at
-    `params.port_bw`) and one scheduler configuration; each tenant owns
-    an isolated `SaathSession` row of the server's `SessionPool` (its
-    coflows never contend with another tenant's row — the pool batches
-    the COMPUTATION, not the fabric).
+    All tenants share one fabric (`num_ports` ports) and one compiled
+    tick structure; each tenant owns an isolated `SaathSession` row of
+    the server's `SessionPool` — optionally under its own scheduler
+    parameters — and its coflows never contend with another tenant's
+    row (the pool batches the COMPUTATION, not the fabric).
 
-    Completion history is retained per tenant for the lifetime of its
-    registration (`result()` reports over all of it); eviction drops
-    it. Bounded retention for very long-lived tenants is a ROADMAP
-    item.
+    `history_limit` bounds the raw completions retained per tenant
+    between polls (aggregates stay exact past it; overflow is counted
+    in `aggregates(tenant).trimmed`).
     """
 
     def __init__(self, params: Optional[SchedulerParams] = None, *,
                  num_ports: int, max_tenants: int = 16,
                  mechanisms: Optional[dict] = None,
-                 kernel: Optional[str] = None, chunk: int = 32):
+                 kernel: Optional[str] = None, chunk: int = 32,
+                 history_limit: int = 4096):
         self.pool = SessionPool(params, num_ports=num_ports,
                                 max_sessions=max_tenants,
                                 mechanisms=mechanisms, kernel=kernel,
                                 chunk=chunk)
+        self.history_limit = int(history_limit)
         self._tenants: Dict[str, object] = {}
-        self._done: Dict[str, List[CompletedCoflow]] = {}
-        self._polled: Dict[str, int] = {}
+        self._pending: Dict[str, List[CompletedCoflow]] = {}
+        self._agg: Dict[str, TenantAggregates] = {}
         self.rejected = 0
 
     # ---- admission -------------------------------------------------------
@@ -80,13 +167,22 @@ class CoflowServer:
     def occupancy(self) -> tuple:
         return (len(self._tenants), self.pool.max_sessions)
 
-    def register(self, tenant: str) -> None:
+    def register(self, tenant: str,
+                 params: Optional[SchedulerParams] = None,
+                 mechanisms: Optional[dict] = None) -> None:
         """Admit a tenant (raises `AdmissionError` at the cap,
-        `ValueError` on a duplicate name)."""
+        `ValueError` on a duplicate name), optionally under its own
+        `SchedulerParams`/mechanism switches — the tenant's slab row
+        then schedules with those thresholds/δ/switches inside the
+        same fleet dispatch."""
         if tenant in self._tenants:
             raise ValueError(f"tenant {tenant!r} is already registered")
         try:
-            sess = self.pool.session()   # the ONE admission authority
+            # the ONE admission authority (a full pool raises before
+            # per-tenant params are even looked at; bad params raise
+            # ValueError, which propagates untouched)
+            sess = self.pool.session(params=params,
+                                     mechanisms=mechanisms)
         except RuntimeError as e:
             self.rejected += 1
             used, cap = self.occupancy
@@ -94,16 +190,16 @@ class CoflowServer:
                 f"admission cap reached ({used}/{cap} tenants); evict "
                 f"one or raise max_tenants") from e
         self._tenants[tenant] = sess
-        self._done[tenant] = []
-        self._polled[tenant] = 0
+        self._pending[tenant] = []
+        self._agg[tenant] = TenantAggregates()
 
     def evict(self, tenant: str) -> None:
         """Release a tenant's row (unfinished coflows are dropped)."""
         sess = self._session(tenant)
         self.pool.release(sess)
         del self._tenants[tenant]
-        del self._done[tenant]
-        del self._polled[tenant]
+        del self._pending[tenant]
+        del self._agg[tenant]
 
     def _session(self, tenant: str):
         try:
@@ -118,34 +214,61 @@ class CoflowServer:
     def submit(self, tenant: str, coflows: Sequence[Coflow]) -> List[int]:
         return self._session(tenant).submit(coflows)
 
+    def _harvest(self, tenant: str) -> None:
+        """Drain the session's fresh completions into the tenant's
+        bounded pending buffer, folding the exact aggregates first."""
+        done = self._tenants[tenant].poll()
+        if not done:
+            return
+        agg = self._agg[tenant]
+        agg.fold(done)
+        pend = self._pending[tenant]
+        pend.extend(done)
+        if len(pend) > self.history_limit:
+            drop = len(pend) - self.history_limit
+            del pend[:drop]
+            agg.trimmed += drop
+
     def advance(self, dt: float) -> float:
         """Advance EVERY tenant's clock by `dt` with one pooled
         dispatch, harvesting completions into the per-tenant buffers."""
         self.pool.advance(dt)
-        for tenant, sess in self._tenants.items():
-            self._done[tenant].extend(sess.poll())
+        for tenant in self._tenants:
+            self._harvest(tenant)
         return dt
 
     def poll(self, tenant: str) -> List[CompletedCoflow]:
-        """Completions for `tenant` not yet returned by a poll."""
-        sess = self._session(tenant)
-        self._done[tenant].extend(sess.poll())
-        new = self._done[tenant][self._polled[tenant]:]
-        self._polled[tenant] = len(self._done[tenant])
-        return list(new)
+        """Completions for `tenant` not yet returned by a poll. This is
+        the TRIM point: returned records leave the server (their
+        statistics live on in `aggregates(tenant)`)."""
+        self._session(tenant)
+        self._harvest(tenant)
+        out = self._pending[tenant]
+        self._pending[tenant] = []
+        return out
 
     def num_live(self, tenant: str) -> int:
         return self._session(tenant).num_live
 
+    def aggregates(self, tenant: str) -> TenantAggregates:
+        """The tenant's exact lifetime completion statistics (stable
+        across polls/trimming; O(1) memory)."""
+        self._session(tenant)
+        self._harvest(tenant)
+        return self._agg[tenant]
+
     def result(self, tenant: str) -> Result:
-        """The tenant's completions so far as a normalized
-        `repro.api.Result` (the offline engines' NaN/padding contract:
-        an idle tenant reports NaN aggregates, never 0.0). A pure
-        accessor: it does NOT advance the `poll` cursor."""
-        sess = self._session(tenant)
-        self._done[tenant].extend(sess.poll())
-        return result_from_completions(self._done[tenant],
-                                       engine="jax", policy="saath")
+        """The tenant's completions as a normalized `repro.api.Result`
+        (the offline engines' NaN/padding contract: an idle tenant
+        reports NaN aggregates, never 0.0). A pure accessor: it does
+        NOT advance the `poll` cursor. `avg_cct`/`makespan`/
+        `num_coflows` are exact over the tenant's WHOLE registration
+        (incremental aggregates); the per-coflow arrays cover the
+        retained not-yet-polled window."""
+        self._session(tenant)
+        self._harvest(tenant)
+        return TenantResult.from_window(self._pending[tenant],
+                                        self._agg[tenant])
 
     def stats(self) -> dict:
         used, cap = self.occupancy
@@ -154,7 +277,8 @@ class CoflowServer:
             "rejected": self.rejected,
             "live_coflows": sum(s.num_live
                                 for s in self._tenants.values()),
-            "completed": sum(len(d) for d in self._done.values()),
+            "completed": sum(a.coflows for a in self._agg.values()),
+            "retained": sum(len(p) for p in self._pending.values()),
             "slab": (self.pool._C_cap, self.pool._F_cap),
         }
 

@@ -204,6 +204,22 @@ def pack_row(tb: TraceBatch, b: int, t: FlowTable, *,
         (tb.size[b], ~tb.flow_valid[b], tb.cid[b])).astype(np.int32)
 
 
+def row_of(tb: TraceBatch, b: int) -> tuple:
+    """Copies of row `b`'s leaves WITHOUT the batch axis — the unit the
+    `SessionPool`'s dirty-row scatter path stages host-side (pack into a
+    1-row scratch with `pack_row`, slice with `row_of`, stack the dirty
+    set with `stack_rows`, scatter once)."""
+    return tuple(np.array(a[b]) for a in tb)
+
+
+def stack_rows(rows: Sequence[tuple]) -> TraceBatch:
+    """Stack `row_of` tuples into a (k, ...) TraceBatch update payload
+    (the host-side half of `jax_engine.scatter_rows`)."""
+    if not rows:
+        raise ValueError("stack_rows needs at least one row")
+    return TraceBatch(*(np.stack(cols) for cols in zip(*rows)))
+
+
 def pack(traces: Sequence[Union[Trace, FlowTable]], *,
          port_bw: float = None,
          flow_multiple: int = 64, coflow_multiple: int = 16,
@@ -252,4 +268,5 @@ def pack(traces: Sequence[Union[Trace, FlowTable]], *,
     return tb
 
 
-__all__ = ["TraceBatch", "pack", "pack_row", "blank_row", "empty_batch"]
+__all__ = ["TraceBatch", "pack", "pack_row", "blank_row", "empty_batch",
+           "row_of", "stack_rows"]

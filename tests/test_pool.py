@@ -7,6 +7,8 @@ arithmetic. Mid-run admission, capacity doubling triggered by one row,
 and a session finishing while others run must all leave every
 session's CCTs/FCTs bitwise-equal to the same session run standalone.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -150,6 +152,142 @@ def test_single_session_advance_noops_other_rows():
     assert not b.poll()              # b never ticked
     b.advance(200.0)
     assert len(b.poll()) == 3
+
+
+def test_pool_device_resident_clean_rows_never_reupload():
+    """The ISSUE-5 tentpole contract: after the first (full) upload,
+    advances over clean rows move ZERO slab bytes host->device; only
+    rows whose membership/state changed are scattered, and host
+    mirrors materialize lazily (on poll), not per advance."""
+    pool = SessionPool(PARAMS, num_ports=PORTS, max_sessions=3)
+    a, b = pool.session(), pool.session()
+    # big flows so nothing completes during the probe advances
+    a.submit([Coflow(0, 0.0, [Flow(0, 0, 1, 500.0)])])
+    b.submit([Coflow(0, 0.0, [Flow(0, 2, 3, 500.0)])])
+    pool.advance(1.0)                     # first _ensure: ONE full upload
+    io = pool.io
+    assert io["full_uploads"] == 1
+    base_rows, base_bytes = io["row_uploads"], io["upload_bytes"]
+    downloads = io["row_downloads"]
+    for _ in range(5):
+        pool.advance(1.0)                 # clean rows: nothing uploads
+    assert io["full_uploads"] == 1
+    assert io["row_uploads"] == base_rows
+    assert io["upload_bytes"] == base_bytes
+    assert io["row_downloads"] == downloads   # nobody looked: no gathers
+    a.submit([Coflow(1, a.now, [Flow(1, 1, 2, 500.0)])])  # dirty ONE row
+    pool.advance(1.0)
+    assert io["full_uploads"] == 1            # still no full mirror
+    assert io["row_uploads"] == base_rows + 1  # just a's row scattered
+    # nothing completed: polling gathers NOTHING (the completions-only
+    # fast path), while a snapshot forces the lazy row materialization
+    downloads = io["row_downloads"]
+    assert a.poll() == [] and b.poll() == []
+    assert io["row_downloads"] == downloads
+    assert a.snapshot()[0]["sent"] > 0
+    assert io["row_downloads"] > downloads    # ...via row gathers
+    tb, st = pool.host_view()                 # the lazy debug view
+    assert isinstance(tb.size, np.ndarray)
+    assert int(np.asarray(st.tick).max()) > 0
+
+
+def test_pool_epoch_rebase_is_per_row():
+    """Regression (ISSUE 5): the f32 epoch re-base is strictly PER ROW.
+    One row ages past REBASE_TICKS and re-bases on its next re-pack
+    while its neighbor stays young at epoch 0 — both rows must keep
+    full δ resolution (a slab-global re-base would drag the young
+    row's times negative and fork its trajectory)."""
+    from repro.api.pool import REBASE_TICKS
+
+    t_off = 2.0 * REBASE_TICKS * PARAMS.delta   # 2^21 ticks ~ 21000s
+    rng = np.random.default_rng(17)
+
+    def workload(base):
+        # binary-exact relative arrivals/sizes (0.25-grained): any
+        # mismatch is a lost-resolution f32 slab artifact
+        cfs, fid = [], 0
+        for c in range(5):
+            w = int(rng.integers(1, 4))
+            flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                          int(rng.integers(0, PORTS)),
+                          float(rng.integers(4, 60) * 0.25))
+                     for i in range(w)]
+            fid += w
+            cfs.append(Coflow(c, base + 0.25 * int(rng.integers(0, 8)),
+                              flows))
+        return cfs
+
+    state = rng.bit_generator.state
+    base_cfs = workload(0.0)
+    rng.bit_generator.state = state              # identical draws
+    late_cfs = workload(t_off)
+
+    ref = SaathSession(PARAMS, num_ports=PORTS, backend="jax")
+    ref.submit(base_cfs)
+    want = {d.handle: (d.cct, tuple(d.fct))
+            for d in ref.drain(step=5.0, max_seconds=500.0)}
+
+    pool = SessionPool(PARAMS, num_ports=PORTS, max_sessions=2)
+    old, young = pool.session(), pool.session()
+    old.advance(t_off)                  # only old's row ages
+    old.submit(late_cfs)
+    young.submit(base_cfs)              # young stays on the t=0 grid
+    got_old, got_young = {}, {}
+    for _ in range(200):
+        pool.advance(5.0)
+        got_old.update({d.handle: (d.cct, tuple(np.asarray(d.fct)
+                                                - t_off))
+                        for d in old.poll()})
+        got_young.update({d.handle: (d.cct, tuple(d.fct))
+                          for d in young.poll()})
+        if not (old.num_live or young.num_live):
+            break
+    assert not (old.num_live or young.num_live)
+    assert old._epoch >= REBASE_TICKS, "the old row never re-based"
+    assert young._epoch == 0, "re-basing leaked onto the young row"
+    assert got_old == want, "old row lost δ resolution"
+    assert got_young == want, "young row's grid was perturbed"
+
+
+def test_pool_heterogeneous_params_bitwise_vs_standalone():
+    """Three tenants under THREE different SchedulerParams (pool
+    default, huge start_threshold, 2x δ) on one slab: every tenant's
+    completions are bitwise those of a standalone session running its
+    own params — heterogeneity changes the stacked parameter rows,
+    never the arithmetic."""
+    slow = dataclasses.replace(PARAMS, start_threshold=1e9)
+    coarse = dataclasses.replace(PARAMS, delta=2e-2)
+    trio = [PARAMS, slow, coarse]
+    workloads = [_coflows(30 + i, 4) for i in range(3)]
+
+    def drive(sessions, advance_all):
+        results = [dict(), dict(), dict()]
+        for s, w in zip(sessions, workloads):
+            s.submit(sorted(w, key=lambda c: (c.arrival, c.cid)))
+        for _ in range(200):
+            advance_all(sessions, 0.9)
+            _harvest(results, sessions)
+            if not any(s.num_live for s in sessions):
+                return results
+        raise RuntimeError("failed to drain")
+
+    pool = SessionPool(PARAMS, num_ports=PORTS, max_sessions=3)
+    pooled_sessions = [pool.session(params=p) for p in trio]
+    pooled = drive(pooled_sessions, lambda s, dt: pool.advance(dt))
+
+    solo_sessions = [SaathSession(p, num_ports=PORTS, backend="jax")
+                     for p in trio]
+
+    def seq_advance(sessions, dt):
+        for s in sessions:
+            s.advance(dt)
+
+    solo = drive(solo_sessions, seq_advance)
+    assert pooled == solo
+    # and the slow tenant really ran its own thresholds: its queue
+    # never left 0 (nothing reaches 1e9 bytes)
+    assert all(v["queue"] <= 0 for v in
+               pooled_sessions[1].snapshot().values())
 
 
 # ---- the serving front door (launch.serve.CoflowServer) ----------------

@@ -1,0 +1,182 @@
+"""CoflowServer blitz (ISSUE 5): admission at the compiled row cap,
+evict-then-reregister row recycling, per-tenant `Result` isolation
+under interleaved advances, heterogeneous per-tenant params in one
+dispatch, and the trim-on-poll bounded-history fix.
+
+(The original admission/eviction smoke lives in tests/test_pool.py;
+this module is the serving-plane deep-dive.)
+"""
+import numpy as np
+import pytest
+
+from repro.core.coflow import Coflow, Flow
+from repro.core.params import SchedulerParams
+from repro.launch.serve import (AdmissionError, CoflowServer,
+                                TenantAggregates, TenantResult)
+
+PORTS = 6
+PARAMS = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                         growth=4.0, num_queues=5)
+
+
+def _coflows(seed: int, n: int, base: int = 0, spread: float = 2.0):
+    rng = np.random.default_rng(seed)
+    cfs, fid = [], 0
+    for c in range(n):
+        w = int(rng.integers(1, 5))
+        flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                      int(rng.integers(0, PORTS)),
+                      float(rng.uniform(1.0, 15.0))) for i in range(w)]
+        fid += w
+        cfs.append(Coflow(base + c, float(rng.uniform(0.0, spread)),
+                          flows))
+    return sorted(cfs, key=lambda c: (c.arrival, c.cid))
+
+
+def _drain(srv, tenants, max_steps=200, step=1.0):
+    for _ in range(max_steps):
+        srv.advance(step)
+        if not any(srv.num_live(t) for t in tenants):
+            return
+    raise RuntimeError("server failed to drain")
+
+
+def test_server_evict_then_reregister_recycles_the_row():
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=2)
+    srv.register("a")
+    srv.register("b")
+    with pytest.raises(AdmissionError):
+        srv.register("c")
+    srv.submit("a", _coflows(0, 2))
+    srv.submit("b", _coflows(1, 2))
+    srv.advance(0.5)                      # a/b mid-flight
+    srv.evict("a")                        # drops a's unfinished work
+    srv.register("c")                     # the freed row, recycled
+    assert srv.occupancy == (2, 2)
+    srv.submit("c", _coflows(2, 3))
+    _drain(srv, ["b", "c"])
+    assert len(srv.poll("c")) == 3
+    assert len(srv.poll("b")) == 2        # b rode through the churn
+    with pytest.raises(KeyError, match="unknown tenant"):
+        srv.poll("a")
+    # a second evict/register cycle on the same row still works
+    srv.evict("c")
+    srv.register("d")
+    srv.submit("d", _coflows(3, 1))
+    _drain(srv, ["b", "d"])
+    assert len(srv.poll("d")) == 1
+
+
+def test_server_per_tenant_result_isolation_under_interleaving():
+    """Tenants submitting and completing at interleaved times never see
+    each other's completions, counts, or aggregates."""
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=3)
+    for t in ("x", "y", "z"):
+        srv.register(t)
+    srv.submit("x", _coflows(10, 3))
+    srv.submit("y", _coflows(11, 2))
+    srv.advance(2.0)
+    srv.submit("z", _coflows(12, 4))      # z starts late
+    srv.advance(2.0)
+    srv.submit("x", _coflows(13, 2, base=100))  # x tops up mid-run
+    _drain(srv, ["x", "y", "z"])
+
+    res = {t: srv.result(t) for t in ("x", "y", "z")}
+    assert int(res["x"].num_coflows[0]) == 5
+    assert int(res["y"].num_coflows[0]) == 2
+    assert int(res["z"].num_coflows[0]) == 4
+    for t in ("x", "y", "z"):
+        assert np.isfinite(res[t].avg_cct[0])
+        assert np.isfinite(res[t].makespan[0])
+    # polls are per-tenant streams: each completion appears exactly
+    # once, under its own tenant
+    polls = {t: srv.poll(t) for t in ("x", "y", "z")}
+    assert [len(polls[t]) for t in ("x", "y", "z")] == [5, 2, 4]
+    assert all(srv.poll(t) == [] for t in ("x", "y", "z"))
+    # aggregates survive the poll trim, arrays shrink to the window
+    for t, n in (("x", 5), ("y", 2), ("z", 4)):
+        after = srv.result(t)
+        assert int(after.num_coflows[0]) == n
+        np.testing.assert_allclose(after.avg_cct, res[t].avg_cct)
+        np.testing.assert_allclose(after.makespan, res[t].makespan)
+
+
+def test_server_heterogeneous_tenant_params_in_one_dispatch():
+    """Two tenants with different thresholds, identical traces, one
+    fleet dispatch: the fast-demotion tenant's coflow moves down the
+    queues while the huge-threshold tenant's stays in queue 0."""
+    slow = SchedulerParams(port_bw=1.0, delta=1e-2,
+                           start_threshold=1e9, growth=4.0,
+                           num_queues=5)
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=2)
+    srv.register("fast")                      # pool defaults: S = 4.0
+    srv.register("slow", params=slow)         # S = 1e9: never demoted
+    wl = [Coflow(0, 0.0, [Flow(0, 0, 1, 12.0)])]
+    h_fast = srv.submit("fast", wl)[0]
+    h_slow = srv.submit("slow", wl)[0]
+    d0 = srv.pool.io["dispatches"]
+    srv.advance(6.0)       # ~6 bytes sent: past 4.0, far below 1e9
+    assert srv.pool.io["dispatches"] == d0 + 1   # ONE fleet dispatch
+    q_fast = srv._tenants["fast"].snapshot()[h_fast]["queue"]
+    q_slow = srv._tenants["slow"].snapshot()[h_slow]["queue"]
+    assert q_fast >= 1, "fast tenant should have been demoted"
+    assert q_slow == 0, "slow tenant must still be in queue 0"
+    _drain(srv, ["fast", "slow"])
+    assert len(srv.poll("fast")) == 1 and len(srv.poll("slow")) == 1
+
+
+def test_server_rejects_incompatible_tenant_params():
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=2)
+    with pytest.raises(ValueError, match="num_queues"):
+        srv.register("bad", params=SchedulerParams(num_queues=3))
+    assert srv.occupancy == (0, 2)            # nothing was admitted
+    srv.register("ok")                        # the row is still free
+    with pytest.raises(ValueError, match="mechanism"):
+        srv.register("worse", mechanisms={"wc": True})
+
+
+def test_server_trim_on_poll_keeps_aggregates_stable_and_memory_bounded():
+    """The ISSUE-5 bugfix: per-tenant history is folded into O(1)
+    incremental aggregates and trimmed on poll (with a history_limit
+    backstop), so a long-lived tenant's aggregates stay exact while
+    the server's retained buffers stay bounded."""
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=1,
+                       history_limit=8)
+    srv.register("t")
+    total = 0
+    for round_ in range(4):
+        srv.submit("t", _coflows(50 + round_, 3, base=10 * round_))
+        _drain(srv, ["t"])
+        total += 3
+        got = srv.poll("t")
+        assert len(got) == 3                  # every completion, once
+        assert srv.stats()["retained"] == 0   # trim-on-poll
+        agg = srv.aggregates("t")
+        assert agg.coflows == total           # lifetime count survives
+        assert agg.trimmed == 0
+    res1 = srv.result("t")
+    res2 = srv.result("t")                    # a second look: stable
+    assert int(res1.num_coflows[0]) == total
+    np.testing.assert_allclose(res1.avg_cct, res2.avg_cct)
+    np.testing.assert_allclose(res1.makespan, res2.makespan)
+    assert np.isfinite(res1.avg_cct[0]) and res1.avg_cct[0] > 0
+    assert isinstance(res1, TenantResult)
+
+    # a tenant that NEVER polls: the history_limit backstop bounds the
+    # retained records; the aggregates keep exact lifetime counts
+    for round_ in range(4):
+        srv.submit("t", _coflows(90 + round_, 3, base=100 + 10 * round_))
+        _drain(srv, ["t"])
+        total += 3
+    assert srv.stats()["retained"] <= 8
+    agg = srv.aggregates("t")
+    assert agg.coflows == total
+    assert agg.trimmed == 12 - 8
+    assert isinstance(agg, TenantAggregates)
+    # the retained-window Result still reports the exact lifetime
+    # aggregates (trimming shrank only its arrays)
+    res = srv.result("t")
+    assert int(res.num_coflows[0]) == total
+    assert res.cct.shape[1] <= 8
+    expect = agg.cct_sum / agg.coflows
+    np.testing.assert_allclose(res.avg_cct[0], expect)
