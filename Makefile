@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-slow test-all coverage pool-fuzz api-smoke pool-smoke bench-smoke bench
+.PHONY: test test-slow test-all coverage pool-fuzz api-smoke pool-smoke pool-sharded bench-smoke bench
 
 test:            ## fast tier-1 suite (slow integration tests excluded)
 	$(PY) -m pytest -q
@@ -24,6 +24,14 @@ api-smoke:       ## tiny Scenario on both engines + 3-step SaathSession
 
 pool-smoke:      ## 16-session SessionPool fleet vs 16 sequential sessions
 	$(PY) -m benchmarks.pool_throughput
+
+pool-sharded:    ## sharded slab + serving suites and benchmark on 8 forced host devices
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	  $(PY) -m pytest -q tests/test_pool_sharded.py tests/test_pool.py \
+	    tests/test_serve.py tests/test_pool_fuzz.py
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	  SAATH_POOL_MIN_SPEEDUP=2.0 \
+	  $(PY) -m benchmarks.pool_throughput --sessions 32 --shards 4
 
 bench-smoke:     ## the quick batched-engine benchmark paths
 	$(PY) -m benchmarks.api_smoke

@@ -22,9 +22,15 @@ dirty-row scatters — and `pool.io`'s transfer accounting is printed
 and recorded so the host-traffic trajectory is tracked across PRs.
 
 Records (benchmarks.common.record -> BENCH_api.json): wall clocks for
-both drives, compile/warmup split, sessions/sec, and the speedup.
+both drives, compile/warmup split, sessions/sec, the speedup, and the
+shard/async-dispatch configuration.
 
     PYTHONPATH=src python -m benchmarks.pool_throughput [--sessions 16]
+    PYTHONPATH=src python -m benchmarks.pool_throughput --shards 4
+
+`--shards N` drives the pooled fleet on an N-device sharded slab (the
+ISSUE-6 pmap dispatch path); on CPU the forced host devices are set up
+automatically when XLA_FLAGS isn't already pinned by the caller.
 """
 from __future__ import annotations
 
@@ -32,6 +38,16 @@ import argparse
 import os
 import sys
 import time
+
+if __name__ == "__main__" and "--shards" in sys.argv \
+        and "XLA_FLAGS" not in os.environ:
+    # jax locks the device count at first initialization (triggered by
+    # the repro.api import below) — a sharded run must force the host
+    # devices BEFORE that
+    _n = int(sys.argv[sys.argv.index("--shards") + 1])
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={_n}"
 
 import numpy as np
 
@@ -106,9 +122,11 @@ def run_sequential(traces, step: float):
     return ccts, raw0, time.perf_counter() - t0
 
 
-def run_pool(traces, step: float):
+def run_pool(traces, step: float, shards: int = 1,
+             async_dispatch: bool = True):
     pool = SessionPool(PARAMS, num_ports=PORTS,
-                       max_sessions=len(traces))
+                       max_sessions=len(traces), shards=shards,
+                       async_dispatch=async_dispatch)
     sessions = [pool.session() for _ in traces]
     for s, tr in zip(sessions, traces):
         s.submit(sorted(tr, key=lambda c: (c.arrival, c.cid)))
@@ -126,22 +144,43 @@ def main(argv=None) -> dict:
                     help="virtual seconds per advance (a serving-style "
                     "fine-grained cadence: a few event steps per tick)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the pooled slab's row axis across "
+                    "this many devices (pmap dispatch path)")
+    ap.add_argument("--blocking", action="store_true",
+                    help="disable async double-buffered dispatch")
     ap.add_argument("--no-assert", action="store_true",
                     help="record numbers without gating on the speedup")
     args = ap.parse_args(argv)
+
+    if args.shards > 1:
+        import jax
+
+        if jax.device_count() < args.shards:
+            ap.error(
+                f"--shards {args.shards} needs {args.shards} devices "
+                f"but jax sees {jax.device_count()}; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count="
+                f"{args.shards} before python starts (it is set "
+                f"automatically only when XLA_FLAGS was unset)")
+        if args.sessions % args.shards:
+            ap.error("--sessions must be a multiple of --shards")
 
     traces = _workloads(args.sessions, args.coflows, args.seed)
 
     # cold pass warms BOTH executables (B=1 and B=N slabs compile
     # separately); best-of-two warm passes absorbs host noise, like
     # Scenario(warm_timing=True)
+    pool_kw = dict(shards=args.shards,
+                   async_dispatch=not args.blocking)
     _, _, cold_seq = run_sequential(traces, args.step)
-    _, _, cold_pool, _ = run_pool(traces, args.step)
+    _, _, cold_pool, _ = run_pool(traces, args.step, **pool_kw)
     seq_cct, _, wall_seq = run_sequential(traces, args.step)
-    pool_cct, comps, wall_pool, io = run_pool(traces, args.step)
+    pool_cct, comps, wall_pool, io = run_pool(traces, args.step,
+                                              **pool_kw)
     c2, _, w2 = run_sequential(traces, args.step)
     wall_seq = min(wall_seq, w2)
-    p2, _, w2, _ = run_pool(traces, args.step)
+    p2, _, w2, _ = run_pool(traces, args.step, **pool_kw)
     wall_pool = min(wall_pool, w2)
 
     assert pool_cct == seq_cct == c2 == p2, \
@@ -157,9 +196,11 @@ def main(argv=None) -> dict:
             f"expected one full slab upload, saw {io['full_uploads']}"
     n_cct = sum(len(d) for d in pool_cct)
     speedup = wall_seq / wall_pool
+    mode = f"{args.shards} shard(s), " \
+        f"{'blocking' if args.blocking else 'async'} dispatch"
     print(f"# pool_throughput: {args.sessions} sessions x "
           f"{args.coflows} coflows ({n_cct} CCTs, bitwise-equal "
-          f"pool vs sequential)", file=sys.stderr)
+          f"pool vs sequential; {mode})", file=sys.stderr)
     print(f"#   sequential {wall_seq:.3f}s (cold {cold_seq:.2f}s) | "
           f"pool {wall_pool:.3f}s (cold {cold_pool:.2f}s) | "
           f"speedup {speedup:.2f}x | "
@@ -184,6 +225,9 @@ def main(argv=None) -> dict:
         compile_sequential=max(cold_seq - wall_seq, 0.0),
         sessions_per_sec=args.sessions / wall_pool,
         speedup=speedup,
+        shards=args.shards,
+        async_dispatch=not args.blocking,
+        ctl_bytes=io["ctl_bytes"],
         full_uploads=io["full_uploads"],
         row_uploads=io["row_uploads"],
         upload_mb=io["upload_bytes"] / 1e6,

@@ -20,12 +20,28 @@ tenants the pool advances every tenant's coordinator with ONE vmapped
 dispatch chain per horizon.
 
     PYTHONPATH=src python examples/online_service.py [--seconds 0.2]
-        [--backend jax|numpy] [--seed 0] [--tenants 1]
+        [--backend jax|numpy] [--seed 0] [--tenants 1] [--shards 1]
+
+``--shards N`` partitions the pool's row axis across N devices (the
+ISSUE-6 pmap dispatch path); on CPU the forced host devices are set
+up automatically when XLA_FLAGS isn't already pinned by the caller.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+if __name__ == "__main__" and "--shards" in sys.argv \
+        and "XLA_FLAGS" not in os.environ:
+    # jax locks the device count at first initialization (triggered
+    # by the repro.api import below) — a sharded run must force the
+    # host devices BEFORE that
+    _n = int(sys.argv[sys.argv.index("--shards") + 1])
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={_n}"
 
 import numpy as np
 
@@ -69,14 +85,19 @@ def _workload(seconds: float, seed: int):
 
 
 def main(seconds: float = 0.2, seed: int = 0,
-         backend: str = "jax", tenants: int = 1) -> dict:
+         backend: str = "jax", tenants: int = 1,
+         shards: int = 1) -> dict:
     params = bridge_params()
     P = len(RESOURCES) * NUM_CHIPS
     if tenants > 1 and backend != "jax":
         raise ValueError("multi-tenant pooling is the jax slab's "
                          "feature; --tenants needs --backend jax")
+    if shards > 1 and tenants <= 1:
+        raise ValueError("--shards partitions the pooled slab; it "
+                         "needs --tenants > 1")
     if tenants > 1:
-        pool = SessionPool(params, num_ports=P, max_sessions=tenants)
+        pool = SessionPool(params, num_ports=P, max_sessions=tenants,
+                           shards=shards)
         sessions = [pool.session() for _ in range(tenants)]
         advance_all = pool.advance
     else:
@@ -139,6 +160,10 @@ if __name__ == "__main__":
     ap.add_argument("--backend", choices=("jax", "numpy"), default="jax")
     ap.add_argument("--tenants", type=int, default=1,
                     help="sessions sharing one SessionPool slab")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the pooled slab's row axis across "
+                    "this many devices (needs --tenants > 1, a "
+                    "multiple of --shards)")
     args = ap.parse_args()
     main(seconds=args.seconds, seed=args.seed, backend=args.backend,
-         tenants=args.tenants)
+         tenants=args.tenants, shards=args.shards)

@@ -20,7 +20,7 @@ Multi-tenant fleets (one slab, one dispatch per step)::
     tenants = [pool.session() for _ in range(16)]
     pool.advance(0.5); done = pool.poll()
 """
-from repro.api.pool import SessionPool
+from repro.api.pool import PoolFullError, SessionPool
 from repro.api.scenario import (MECHANISM_KEYS, Result, Scenario,
                                 resolve_traces, result_from_completions,
                                 run)
@@ -28,4 +28,4 @@ from repro.api.session import CompletedCoflow, SaathSession
 
 __all__ = ["Scenario", "Result", "run", "resolve_traces",
            "result_from_completions", "MECHANISM_KEYS", "SaathSession",
-           "CompletedCoflow", "SessionPool"]
+           "CompletedCoflow", "SessionPool", "PoolFullError"]

@@ -59,9 +59,46 @@ that has been up for hours keeps full δ resolution in the f32 slab
 strictly PER ROW — an old tenant re-basing never perturbs a young
 neighbor's grid (tests/test_pool.py).
 
+Sharded slab (ISSUE 6): ``SessionPool(..., shards=N)`` partitions the
+row axis across N devices on a 1-D "rows" mesh
+(`jax_engine.row_mesh`): the slab is kept in a FOLDED dispatch layout
+— every leaf reshaped ``(B, ...) -> (N, B/N, ...)`` with shard i
+resident on device i — and `session_advance` `pmap`s the shard axis,
+so each device runs its OWN while_loop over its rows and terminates
+independently (pmap compiles the exact single-slab program per
+device — no GSPMD partitioner, hence no partitioner-inserted
+collectives, which would deadlock divergent per-shard loops on the
+CPU backend). The dirty-row scatter stage keeps ONE QUEUE PER SHARD
+(a dirty row only funnels an update through its owning shard). Rows
+are independent sessions — there is no cross-shard communication
+inside the loop — so an N-shard pool is bitwise-identical to the
+1-shard pool (tests/test_pool_sharded.py). CPU CI gets N host devices
+via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+Async double-buffered dispatch (ISSUE 6, default ON): `advance` ENQUEUES
+the fleet dispatch and returns without downloading the tiny control
+mirrors — the device (tick, finished) handles are parked as the
+pool's deferred ctl and consumed lazily (`_sync_ctl`) at the next
+poll / snapshot / re-pack / `host_view` point. Chained advances
+overwrite the parked ctl, so a burst of K advances costs K dispatches
+but ONE control download. This is safe because ticks only grow and a
+lane at (or past) the horizon a dispatch hands it is an exact no-op:
+a STALE tick mirror used as an untargeted row's horizon can only
+UNDER-ask, never perturb. ``async_dispatch=False`` restores the
+blocking per-dispatch download.
+
+Opt-in pinned features: ``SessionPool(..., features=(pfw, dyn, abl))``
+freezes the compiled structure switches up front, so a heterogeneous
+tenant joining mid-flight NEVER recompiles the fleet executable —
+admission validates that the tenant's required features are compiled
+in (the same OR-superset rule `_ensure` applies dynamically: the
+traced per-row parameter switches make compiled-in machinery
+semantics-preserving for rows that don't use it).
+
 `pool.io` counts every host-device crossing (row scatters/gathers,
-full rebuild uploads, the tiny per-dispatch control reads), which is
-how `benchmarks/pool_throughput.py` proves clean-row advances upload
+full rebuild uploads, the tiny control reads — deferred, under async
+dispatch, to the next sync point), which is how
+`benchmarks/pool_throughput.py` proves clean-row advances upload
 nothing.
 """
 from __future__ import annotations
@@ -92,6 +129,14 @@ def _tree_nbytes(tree) -> int:
                    for leaf in jax.tree_util.tree_leaves(tree)))
 
 
+class PoolFullError(RuntimeError):
+    """The pool is at its admission cap (`max_sessions` live rows).
+
+    The ONE failure `CoflowServer.register` translates into an
+    `AdmissionError`; any other pool/session fault propagates untouched
+    (it is a bug or a bad configuration, not an admission decision)."""
+
+
 class SessionPool:
     """An admission-capped fleet of jax-backend `SaathSession`s sharing
     one device-resident slab.
@@ -111,7 +156,9 @@ class SessionPool:
                  mechanisms: Optional[dict] = None,
                  fidelity: str = "flow", kernel: Optional[str] = None,
                  chunk: int = 32, min_coflow_capacity: int = 16,
-                 min_flow_capacity: int = 64):
+                 min_flow_capacity: int = 64, shards: int = 1,
+                 async_dispatch: bool = True,
+                 features: Optional[tuple] = None):
         from repro.fabric import jax_engine
 
         self._je = jax_engine
@@ -122,6 +169,31 @@ class SessionPool:
         if self.max_sessions <= 0:
             raise ValueError("max_sessions must be positive")
         self._fidelity = fidelity
+        self.shards = int(shards)
+        if self.shards > 1:
+            if self.max_sessions % self.shards:
+                raise ValueError(
+                    f"max_sessions ({self.max_sessions}) must be a "
+                    f"multiple of shards ({self.shards}): the row axis "
+                    f"is partitioned evenly across the mesh")
+            self._mesh = jax_engine.row_mesh(self.shards)
+            self._sharding = jax.sharding.NamedSharding(
+                self._mesh, jax.sharding.PartitionSpec("rows"))
+        else:
+            if self.shards < 1:
+                raise ValueError("shards must be >= 1")
+            self._mesh = None
+            self._sharding = None
+        self._async = bool(async_dispatch)
+        if features is not None and (len(features) != 3
+                                     or not all(isinstance(b, (bool,
+                                                               np.bool_))
+                                                for b in features)):
+            raise ValueError(
+                "features must be a 3-tuple of bools "
+                "(per_flow_wc, with_dynamics, with_ablations)")
+        self._pinned = tuple(bool(b) for b in features) \
+            if features is not None else None
 
         self.params, self._ep, self._base_features = \
             self._resolve(params or SchedulerParams(), mechanisms)
@@ -133,7 +205,14 @@ class SessionPool:
         self._free = list(range(self.max_sessions))
         self._blank_rows: set = set()
         self._tb = None        # TraceBatch, DEVICE leaves (authoritative)
-        self._state = None     # EngineState, DEVICE leaves (authoritative)
+        # EngineState, DEVICE leaves (authoritative). A sharded pool
+        # stores it in DISPATCH LAYOUT — folded (shards, B/shards, ...)
+        # with shard i on device i — so the pmap chain consumes and
+        # produces it with ZERO per-dispatch reshapes; sync points
+        # unfold on demand (`_state_flat`)
+        self._state = None
+        self._tb_disp = None   # folded view of _tb (dispatch cache)
+        self._ep_disp = None   # folded view of _ep_stack
         self._scratch = None   # 1-row numpy TraceBatch packing stage
         # tiny host control mirrors, refreshed from each dispatch's
         # status download: per-row relative tick (the no-op horizon for
@@ -145,7 +224,15 @@ class SessionPool:
         self._row_ep = [self._ep] * self.max_sessions
         self._row_feat = [self._base_features] * self.max_sessions
         self._ep_stack = None          # stacked (B,)-leaf EngineParams
-        self._features_now = self._base_features
+        self._features_now = self._pinned or self._base_features
+        # async dispatch chain: the parked device ctl handles of the
+        # most recent dispatch, plus the rows awaiting its download
+        self._ctl = None               # (tick_dev, fin_dev) | None
+        self._pend_rows: dict = {}     # row -> (session, global n_end)
+        # sessions whose `_new_done` is set: the O(1) index behind the
+        # completion bitmap, so a poll over a clean fleet never walks
+        # the roster (B per-session polls per step must not cost B^2)
+        self._fresh: set = set()
         # host<->device transfer accounting (benchmarks assert on this)
         self.io = dict(full_uploads=0, row_uploads=0, row_downloads=0,
                        upload_bytes=0, download_bytes=0, ctl_bytes=0,
@@ -172,6 +259,15 @@ class SessionPool:
         feat = self._je.features_for(
             p, fidelity=self._fidelity, lcof=lcof,
             per_flow_threshold=per_flow)
+        if self._pinned is not None:
+            names = ("per_flow_wc", "with_dynamics", "with_ablations")
+            for i, name in enumerate(names):
+                if feat[i] and not self._pinned[i]:
+                    raise ValueError(
+                        f"tenant needs compiled feature {name!r} but "
+                        f"the pool pinned features={self._pinned} at "
+                        f"construction; pin a superset (pinning is "
+                        f"what keeps admission recompile-free)")
         return p, ep, feat
 
     # ---- admission -------------------------------------------------------
@@ -188,12 +284,12 @@ class SessionPool:
                 mechanisms: Optional[dict] = None):
         """Admit a new tenant session — with its OWN scheduler
         parameters/mechanism switches when given (pool defaults
-        otherwise); raises `RuntimeError` when the pool is at its
-        admission cap."""
+        otherwise); raises `PoolFullError` (a `RuntimeError`) when the
+        pool is at its admission cap."""
         from repro.api.session import SaathSession
 
         if not self._free:
-            raise RuntimeError(
+            raise PoolFullError(
                 f"SessionPool is full ({self.max_sessions} sessions); "
                 f"release one (or raise max_sessions) to admit more")
         p, ep, feat = self._resolve(params, mechanisms)
@@ -221,6 +317,11 @@ class SessionPool:
         sess._pool = None
         sess._host_stale = False
         sess._new_done = False
+        sess._host_done = False
+        self._fresh.discard(sess)
+        # any parked ctl entry for the freed row is disarmed by the
+        # session-identity check in `_sync_ctl` (the row re-blanks — a
+        # scatter, which syncs first — before its next reuse)
         self._row_ep[row] = self._ep
         self._row_feat[row] = self._base_features
         self._ep_stack = None
@@ -258,8 +359,31 @@ class SessionPool:
             out.extend((s, d) for d in s.poll())
         return out
 
+    def completed_sessions(self) -> list:
+        """The fleet's NEW-COMPLETION BITMAP, as the sessions it names:
+        rows whose last dispatch finished something not yet drained by
+        a poll, plus rows with host-side force-completes
+        (`SaathSession.complete`). This is the harvest index the
+        `CoflowServer` advance loop walks — a clean tenant costs ZERO
+        host work per fleet step (no per-session `poll()` probe). A
+        sync point of the async dispatch contract (consumes the
+        deferred ctl download)."""
+        self._sync_ctl()
+        return [s for s in self.sessions
+                if s._new_done or s._host_done]
+
     # ---- slab machinery (the device-facing half of the row-view
     # contract; sessions call these with themselves as the row) --------
+
+    def _target_tick(self, s) -> int:
+        """The session's effective tick target: its last synced tick,
+        or the horizon of a still-parked async dispatch (whichever is
+        later) — the skip test must not re-dispatch a row already
+        enqueued to (or past) the asked-for horizon."""
+        pend = self._pend_rows.get(s._row)
+        if pend is not None and pend[0] is s:
+            return max(s._tick, pend[1])
+        return s._tick
 
     def _advance(self, targets) -> None:
         """Advance the given (session, global n_end) targets; sessions
@@ -267,26 +391,38 @@ class SessionPool:
         the dispatch)."""
         work = {}
         for s, n_end in targets:
-            if n_end <= s._tick:
+            if n_end <= self._target_tick(s):
                 continue
             if not s._live:
                 # nothing on the row: the grid is advanced host-side
                 s._tick = n_end
                 continue
             work[s._row] = (s, n_end)
+        if not work:
+            return
+        if self._async and all(n_end - s._epoch <= MAX_REL_TICKS
+                               for s, n_end in work.values()):
+            self._dispatch_async(work)
+            return
+        # blocking path: giant horizon jumps need the MAX_REL_TICKS
+        # split loop (each leg re-packs and re-bases the epoch), whose
+        # decisions read the fresh ctl — flush any parked one first
+        self._sync_ctl()
         while work:
             self._ensure()
             ne = self._ticks.astype(np.float32)
             for r, (s, n_end) in work.items():
                 ne[r] = min(n_end, s._epoch + MAX_REL_TICKS) - s._epoch
+            tb, ep = self._dispatch_slab()
             state, _ = self._je.session_advance(
-                self._state, self._tb, self._ep_stack, n_end=ne,
+                self._state, tb, ep, n_end=ne,
                 chunk=self.chunk, kernel=self.kernel,
-                features=self._features_now)
+                features=self._features_now, mesh=self._mesh)
             self._state = state          # stays device-resident
             self.io["dispatches"] += 1
-            tick_h = np.array(state.tick)
+            tick_h = np.array(state.tick).reshape(-1)
             fin_h = np.array(state.finished)
+            fin_h = fin_h.reshape(-1, fin_h.shape[-1])
             self.io["ctl_bytes"] += tick_h.nbytes + fin_h.nbytes
             nxt = {}
             for r, (s, n_end) in work.items():
@@ -294,6 +430,7 @@ class SessionPool:
                 s._host_stale = True
                 if (fin_h[r] != self._fin[r]).any():
                     s._new_done = True   # poll must gather this row
+                    self._fresh.add(s)
                 if s._tick >= n_end or bool(fin_h[r].all()):
                     continue
                 # the MAX_REL_TICKS split: re-pack (re-basing the
@@ -303,6 +440,65 @@ class SessionPool:
             self._ticks, self._fin = tick_h, fin_h
             work = nxt
 
+    def _dispatch_async(self, work) -> None:
+        """The double-buffered fast path: enqueue the fleet dispatch
+        and RETURN — no control download, no host sync. The device
+        (tick, finished) handles are parked as the deferred ctl; a
+        chain of advances overwrites the parked pair (ticks only grow,
+        so only the LAST dispatch's ctl matters) and the download
+        happens once, at the next sync point (`_sync_ctl`). Untargeted
+        rows ride on the possibly-STALE tick mirror as their horizon:
+        a stale mirror can only under-ask, and a lane at or past its
+        horizon is an exact no-op, so staleness never perturbs a row."""
+        self._ensure()
+        ne = self._ticks.astype(np.float32)
+        for r, (s, n_end) in work.items():
+            ne[r] = n_end - s._epoch     # caller checked the rel cap
+        tb, ep = self._dispatch_slab()
+        state, _ = self._je.session_advance(
+            self._state, tb, ep, n_end=ne,
+            chunk=self.chunk, kernel=self.kernel,
+            features=self._features_now, mesh=self._mesh, block=False)
+        self._state = state              # stays device-resident
+        self.io["dispatches"] += 1
+        self._ctl = (state.tick, state.finished)
+        for r, (s, n_end) in work.items():
+            s._host_stale = True
+            self._pend_rows[r] = (s, n_end)
+
+    def _sync_ctl(self) -> None:
+        """Consume the deferred control download of the async dispatch
+        chain: ONE host transfer of the tiny (tick, finished) mirrors
+        covers every dispatch enqueued since the last sync. MUST run
+        before anything reads or writes the host ctl mirrors — poll's
+        completion scan, snapshot gathers, dirty-row scatters and
+        rebuilds (which overwrite mirror rows), `host_view` — so a
+        stale parked ctl can never clobber fresher mirror writes."""
+        if self._ctl is None:
+            return
+        tick_dev, fin_dev = self._ctl
+        self._ctl = None
+        tick_h = np.array(tick_dev).reshape(-1)
+        fin_h = np.array(fin_dev)
+        fin_h = fin_h.reshape(-1, fin_h.shape[-1])
+        self.io["ctl_bytes"] += tick_h.nbytes + fin_h.nbytes
+        pend, self._pend_rows = self._pend_rows, {}
+        short = []
+        for r, (s, n_end) in pend.items():
+            if s._row != r or self._sessions[r] is not s:
+                continue          # released (maybe recycled) row
+            s._tick = s._epoch + int(tick_h[r])
+            if (fin_h[r] != self._fin[r]).any():
+                s._new_done = True   # poll must gather this row
+                self._fresh.add(s)
+            if s._tick < n_end and not bool(fin_h[r].all()):
+                short.append((r, s._tick, n_end))
+        self._ticks, self._fin = tick_h, fin_h
+        if short:
+            raise RuntimeError(
+                f"async session_advance stopped short of its horizon "
+                f"on rows {short} (step budget exhausted?)")
+
     def _plan_tick(self, sess) -> np.ndarray:
         """One wave-planning coordinator tick for ONE session row; the
         other rows are masked no-ops. Returns the row's admitted mask."""
@@ -310,9 +506,10 @@ class SessionPool:
         mask = np.zeros(self.max_sessions, bool)
         mask[sess._row] = True
         state, admitted = self._je.session_plan_tick(
-            self._state, self._tb, self._ep_stack, kernel=self.kernel,
+            self._state_flat(), self._tb, self._ep_stack,
+            kernel=self.kernel,
             features=self._features_now, row_mask=mask)
-        self._state = state
+        self._state = self._fold_state(state)
         self.io["dispatches"] += 1
         adm_all = np.asarray(admitted)
         self.io["ctl_bytes"] += adm_all.nbytes
@@ -346,12 +543,17 @@ class SessionPool:
         else:
             self._scatter_dirty()
         if self._ep_stack is None:
-            self._ep_stack = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *self._row_ep)
-            feats = [self._base_features] + \
-                [self._row_feat[s._row] for s in self.sessions]
-            self._features_now = tuple(
-                any(f[i] for f in feats) for i in range(3))
+            self._ep_stack = self._place(jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *self._row_ep))
+            self._ep_disp = None
+            if self._pinned is None:
+                feats = [self._base_features] + \
+                    [self._row_feat[s._row] for s in self.sessions]
+                self._features_now = tuple(
+                    any(f[i] for f in feats) for i in range(3))
+            # pinned features stay pinned: admission already validated
+            # every tenant against them, so membership churn can never
+            # change the compiled structure (no recompiles)
 
     def _scatter_dirty(self) -> None:
         from repro.traces.batch import row_of, stack_rows
@@ -377,22 +579,40 @@ class SessionPool:
         for r, row in st_rows:
             self._ticks[r] = int(row.tick)
             self._fin[r] = row.finished
-        st_idx = np.array([r for r, _ in st_rows], np.int32)
-        st_payload = jax.tree_util.tree_map(
-            lambda *xs: np.stack(xs), *[p for _, p in st_rows])
-        self.io["upload_bytes"] += _tree_nbytes(st_payload)
-        if tb_rows:
-            # one fused scatter dispatch covers both trees
-            tb_idx = np.array([r for r, _ in tb_rows], np.int32)
-            tb_payload = stack_rows([p for _, p in tb_rows])
-            self.io["row_uploads"] += len(tb_rows)
-            self.io["upload_bytes"] += _tree_nbytes(tb_payload)
-            self._tb, self._state = self._je.scatter_rows(
-                (self._tb, self._state), (tb_idx, st_idx),
-                (tb_payload, st_payload))
-        else:
-            self._state = self._je.scatter_rows(self._state, st_idx,
-                                                st_payload)
+        # ONE SCATTER QUEUE PER SHARD: staged rows funnel through their
+        # owning shard's fused scatter (the unsharded pool keeps the
+        # single fused call — exactly the pre-shard dispatch shape)
+        per = self.max_sessions // self.shards
+        buckets: dict = {}
+        for r, row in tb_rows:
+            buckets.setdefault(r // per, ([], []))[0].append((r, row))
+        for r, row in st_rows:
+            buckets.setdefault(r // per, ([], []))[1].append((r, row))
+        st = self._state_flat()
+        for sh in sorted(buckets):
+            tb_g, st_g = buckets[sh]
+            st_idx = np.array([r for r, _ in st_g], np.int32)
+            st_payload = jax.tree_util.tree_map(
+                lambda *xs: np.stack(xs), *[p for _, p in st_g])
+            self.io["upload_bytes"] += _tree_nbytes(st_payload)
+            if tb_g:
+                # one fused scatter dispatch covers both trees
+                tb_idx = np.array([r for r, _ in tb_g], np.int32)
+                tb_payload = stack_rows([p for _, p in tb_g])
+                self.io["row_uploads"] += len(tb_g)
+                self.io["upload_bytes"] += _tree_nbytes(tb_payload)
+                self._tb, st = self._je.scatter_rows(
+                    (self._tb, st), (tb_idx, st_idx),
+                    (tb_payload, st_payload))
+            else:
+                st = self._je.scatter_rows(st, st_idx, st_payload)
+        if self._sharding is not None:
+            # keep the slab pinned to its row sharding between
+            # dispatches (a no-op when the scatter preserved it) and
+            # drop the folded dispatch cache the scatter invalidated
+            self._tb = self._place(self._tb)
+            self._tb_disp = None
+        self._state = self._fold_state(st)
 
     def _scratch_tb(self):
         from repro.traces.batch import empty_batch
@@ -432,10 +652,71 @@ class SessionPool:
         state = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *rows)
         self.io["full_uploads"] += 1
         self.io["upload_bytes"] += _tree_nbytes(tb) + _tree_nbytes(state)
-        self._tb = jax.device_put(tb)
-        self._state = jax.device_put(state)
+        # the upload pins the row sharding: each shard receives exactly
+        # its own rows (sharding=None -> default single-device slab);
+        # the state uploads directly in dispatch layout (the fold is a
+        # free host-side numpy reshape)
+        self._tb = jax.device_put(tb, self._sharding)
+        self._tb_disp = None
+        self._state = jax.device_put(self._fold(state), self._sharding)
         self._ticks = state.tick.copy()
         self._fin = state.finished.copy()
+
+    def _place(self, tree):
+        """Re-pin a slab tree to the pool's row sharding (identity for
+        an unsharded pool). `PartitionSpec("rows")` partitions dim 0,
+        so the same sharding pins flat (B, ...) trees (one row block
+        per device) and folded (shards, B/shards, ...) trees (one
+        shard index per device) identically."""
+        if self._sharding is None:
+            return tree
+        return jax.device_put(tree, self._sharding)
+
+    def _fold(self, tree):
+        """Reshape every leaf (B, ...) -> (shards, B/shards, ...): the
+        pmap dispatch layout of a sharded pool (identity when
+        unsharded). Shard-local on a row-sharded leaf — no rows move."""
+        if self.shards <= 1:
+            return tree
+        S = self.shards
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape(S, x.shape[0] // S, *x.shape[1:]),
+            tree)
+
+    def _unfold(self, tree):
+        """Inverse of `_fold`: dispatch layout back to flat rows."""
+        if self.shards <= 1:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape(x.shape[0] * x.shape[1],
+                                *x.shape[2:]), tree)
+
+    def _fold_state(self, flat):
+        """Flat engine state -> stored dispatch layout, re-pinned so
+        shard i lives on mesh device i."""
+        if self.shards <= 1:
+            return flat
+        return jax.device_put(self._fold(flat), self._sharding)
+
+    def _state_flat(self):
+        """The engine state as flat (B, ...) rows — what the
+        row-indexed sync machinery (gather/scatter/plan/host_view)
+        operates on. A device-side reshape for a sharded pool; the
+        identity otherwise."""
+        return self._unfold(self._state)
+
+    def _dispatch_slab(self):
+        """The (tb, ep) pair in dispatch layout — folded views cached
+        until the flat authoritative trees change (they change only on
+        scatter/rebuild/membership churn, never per advance, so the
+        async dispatch hot loop performs no reshapes at all)."""
+        if self.shards <= 1:
+            return self._tb, self._ep_stack
+        if self._tb_disp is None:
+            self._tb_disp = self._place(self._fold(self._tb))
+        if self._ep_disp is None:
+            self._ep_disp = self._place(self._fold(self._ep_stack))
+        return self._tb_disp, self._ep_disp
 
     def _pack_row_np(self, tb, r: int, s) -> None:
         """Pack one session's live coflows into row `r` of a NUMPY
@@ -514,9 +795,14 @@ class SessionPool:
         tenant never downloads its neighbors); `completions_only`
         (the poll fast path) syncs only rows whose dispatch-status
         mirror shows NEW completions — a row that merely progressed
-        stays stale (and free) until a re-pack or snapshot needs it."""
+        stays stale (and free) until a re-pack or snapshot needs it.
+        A sync point of the async dispatch contract: the deferred ctl
+        is consumed before the stale/new-done flags are read."""
         if self._state is None:
             return
+        self._sync_ctl()
+        if completions_only and not self._fresh:
+            return                    # clean fleet: O(1), no roster walk
         stale = [s for s in (self.sessions if sessions is None
                              else sessions)
                  if s._host_stale
@@ -524,7 +810,7 @@ class SessionPool:
         if not stale:
             return
         idx = np.array([s._row for s in stale], np.int32)
-        rows = self._je.gather_rows(self._state, idx)
+        rows = self._je.gather_rows(self._state_flat(), idx)
         host = jax.tree_util.tree_map(np.asarray, rows)
         self.io["row_downloads"] += len(stale)
         self.io["download_bytes"] += _tree_nbytes(host)
@@ -532,6 +818,7 @@ class SessionPool:
             self._sync_row(s, host, j)
             s._host_stale = False
             s._new_done = False
+            self._fresh.discard(s)
 
     def _sync_row(self, s, st, j: int) -> None:
         """Mirror row `j` of the gathered host state into session `s`'s
@@ -563,6 +850,11 @@ class SessionPool:
         tick_rel = int(st.tick[j])
         s._tick = s._epoch + tick_rel
         self._ticks[s._row] = tick_rel        # keep the ctl mirror true
+        if not s._host_done and \
+                any(e.finished for e in s._live.values()):
+            s._host_done = True   # gathered completions await a poll;
+            # keep the row visible to the harvest bitmap even though
+            # `_new_done` is consumed by this gather
         pn = float(st.pend_next[j])
         s._pend = (s._epoch + int(st.pend_tick[j]), s._epoch + int(pn)) \
             if pn > tick_rel else None
@@ -576,8 +868,9 @@ class SessionPool:
         no effect). Returns (None, None) before the first dispatch."""
         if self._tb is None:
             return None, None
+        self._sync_ctl()
         return (jax.tree_util.tree_map(np.asarray, self._tb),
-                jax.tree_util.tree_map(np.asarray, self._state))
+                jax.tree_util.tree_map(np.asarray, self._state_flat()))
 
 
-__all__ = ["SessionPool", "REBASE_TICKS"]
+__all__ = ["SessionPool", "PoolFullError", "REBASE_TICKS"]

@@ -126,6 +126,7 @@ class SaathSession:
         self._state_dirty = True  # dynamic state changed host-side
         self._host_stale = False  # device row ahead of the host entries
         self._new_done = False  # device row holds unseen completions
+        self._host_done = False  # host-side completions awaiting a poll
         # pending capped schedule interval, as GLOBAL tick indices
         # (anchor tick, horizon tick); per-flow anchor rates/sent live
         # in the entries. numpy keeps continuous times instead.
@@ -268,6 +269,10 @@ class SaathSession:
                                            fct=e.fct.copy(),
                                            size=e.size.copy()))
                 del self._live[h]
+        # the pool's completion bitmap: nothing finished is left
+        # undrained after a poll (completions_only materialization can
+        # leave finished entries only when `out` captured them)
+        self._host_done = any(e.finished for e in self._live.values())
         return out
 
     def drain(self, max_seconds: float = 3600.0,
@@ -332,6 +337,9 @@ class SaathSession:
             e.fct[:] = now
             e.finished = True
             e.cct = now - e.arrival
+        if handles:
+            self._host_done = True   # completions_only gathers skip
+            # host-forced completes; flag the row for the harvest scan
         self._state_dirty = True
         # the stored schedule (and any capped interval of it) is stale
         self._pend = None

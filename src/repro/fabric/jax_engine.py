@@ -680,22 +680,16 @@ def features_for(params: SchedulerParams, *, fidelity: str = "flow",
             not (lcof and per_flow_threshold))
 
 
-@functools.partial(jax.jit, static_argnames=("kernel", "features"))
-def _run_session_block(state: EngineState, tb: TraceBatch,
-                       ep: EngineParams, n_end: jax.Array,
-                       max_steps: jax.Array, *,
-                       kernel: Optional[str], features: tuple):
-    """Advance every session lane to its own `n_end` horizon (or until
-    its real coflows finish) in ONE dispatch: a device-side while_loop
-    over vmapped `_tick` steps runs EXACTLY the event steps the fleet
-    needs — no fixed-chunk padding, no host round-trip per chunk. This
-    is what makes a pooled advance cost one dispatch's fixed overhead
-    for the whole fleet instead of per session (DESIGN.md §8).
-
-    `ep` carries a leading ROW axis on every leaf (the `SessionPool`
-    stacks one `EngineParams` per slab row), so a heterogeneous
-    multi-tenant fleet — per-row thresholds, δ, deadline factors,
-    traced mechanism switches — still rides one while_loop dispatch."""
+def _session_while(state: EngineState, tb: TraceBatch, ep: EngineParams,
+                   n_end: jax.Array, max_steps: jax.Array, *,
+                   kernel: Optional[str], features: tuple):
+    """The session while_loop body shared by the single-slab and the
+    pmap (sharded) dispatch paths: vmapped `_tick` steps until every
+    lane of THIS slab (or shard) has reached its horizon or finished
+    all its real coflows. The loop condition is local to the rows it
+    sees, so under `pmap` each device terminates independently — a
+    shard whose lanes drain early stops stepping without waiting on
+    its neighbors."""
     per_flow_wc, with_dynamics, with_ablations = features
 
     def lanes_open(s):
@@ -720,11 +714,76 @@ def _run_session_block(state: EngineState, tb: TraceBatch,
     return jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
 
 
+@functools.partial(jax.jit, static_argnames=("kernel", "features"))
+def _run_session_block(state: EngineState, tb: TraceBatch,
+                       ep: EngineParams, n_end: jax.Array,
+                       max_steps: jax.Array, *,
+                       kernel: Optional[str], features: tuple):
+    """Advance every session lane to its own `n_end` horizon (or until
+    its real coflows finish) in ONE dispatch: a device-side while_loop
+    over vmapped `_tick` steps runs EXACTLY the event steps the fleet
+    needs — no fixed-chunk padding, no host round-trip per chunk. This
+    is what makes a pooled advance cost one dispatch's fixed overhead
+    for the whole fleet instead of per session (DESIGN.md §8).
+
+    `ep` carries a leading ROW axis on every leaf (the `SessionPool`
+    stacks one `EngineParams` per slab row), so a heterogeneous
+    multi-tenant fleet — per-row thresholds, δ, deadline factors,
+    traced mechanism switches — still rides one while_loop dispatch."""
+    return _session_while(state, tb, ep, n_end, max_steps,
+                          kernel=kernel, features=features)
+
+
+def row_mesh(shards: int):
+    """A 1-D `Mesh` over the first `shards` devices, axis name "rows" —
+    the row-axis partitioning the sharded `SessionPool` slab lives on.
+    CPU runs get multiple host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    jax initializes; see `make pool-sharded` / the CI sharded step)."""
+    devs = jax.devices()
+    if shards < 1:
+        raise ValueError("shards must be >= 1")
+    if shards > len(devs):
+        raise ValueError(
+            f"shards={shards} needs {shards} devices but jax sees "
+            f"{len(devs)}; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={shards} (or more) "
+            f"before the first jax import")
+    return jax.sharding.Mesh(np.array(devs[:shards]), ("rows",))
+
+
+@functools.lru_cache(maxsize=None)
+def _pmapped_session_block(kernel: Optional[str], features: tuple,
+                           mesh) -> "object":
+    """The multi-device dispatch path, one compiled program per
+    (kernel, features, mesh): `pmap` maps the SHARD axis of a folded
+    ``(shards, rows_per_shard, ...)`` slab onto the mesh's devices, and
+    every device runs its OWN `_session_while` loop over its rows.
+    Rows are independent sessions — there is no cross-shard
+    communication — so `pmap` is the right tool: each device's program
+    is EXACTLY the single-slab while_loop (no GSPMD partitioner, hence
+    no partitioner-inserted collectives; a collective inside loops
+    with per-shard trip counts would deadlock the CPU backend), shards
+    advance concurrently, and each terminates independently. The
+    per-row arithmetic is the same vmapped `_tick` as the single-slab
+    path, which is what keeps an N-shard pool bitwise-identical to a
+    1-shard pool (tests/test_pool_sharded.py)."""
+    devices = list(np.asarray(mesh.devices).flat)
+
+    def block(state, tb, ep, n_end, max_steps):
+        return _session_while(state, tb, ep, n_end, max_steps,
+                              kernel=kernel, features=features)
+
+    return jax.pmap(block, axis_name="rows",
+                    in_axes=(0, 0, 0, 0, None), devices=devices)
+
+
 def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
                     *, n_end, chunk: int = 32,
                     kernel: Optional[str] = None,
                     features: tuple = (True, True, False),
-                    max_steps: int = 10_000_000):
+                    max_steps: int = 10_000_000, mesh=None,
+                    block: bool = True):
     """Re-enter the jitted tick loop on a live session slab until every
     lane has reached its δ-grid tick target or finished all its real
     coflows. `n_end` is a scalar or a (B,) per-row array — a
@@ -736,14 +795,36 @@ def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
     the one dispatch. The caps are traced, so one compiled executable
     serves every advance of every session. `chunk` is accepted for API
     compatibility but unused: the device-side while_loop runs exactly
-    the event steps needed. Returns (state, event_steps_executed)."""
+    the event steps needed.
+
+    `mesh` (a `row_mesh`) routes the dispatch through the pmap path:
+    the caller hands the slab in FOLDED layout — every leaf reshaped
+    ``(B, ...) -> (shards, B // shards, ...)`` with shard i resident
+    on mesh device i — and each device runs its own while_loop over
+    its rows. `block=False` (the async dispatch mode) skips the
+    host-side step-count readback entirely — the dispatch is enqueued
+    and the DEVICE step counter is returned for the caller to fold
+    into its lazy control mirror — so the caller can chain the next
+    advance without waiting for this one's results.
+    Returns (state, event_steps): an int when blocking, the device
+    counter otherwise."""
     del chunk
-    ne = jnp.asarray(np.broadcast_to(
-        np.asarray(n_end, np.float32), state.tick.shape).copy())
-    state, steps = _run_session_block(
-        state, tb, ep, ne, jnp.int32(max_steps),
-        kernel=kernel, features=features)
-    steps = int(np.asarray(steps))
+    ne = np.asarray(n_end, np.float32)
+    if ne.shape != state.tick.shape:
+        ne = np.broadcast_to(
+            ne.reshape(-1) if ne.ndim else ne,
+            (int(np.prod(state.tick.shape)),)).reshape(state.tick.shape)
+    ne = jnp.asarray(ne.copy())
+    if mesh is not None:
+        fn = _pmapped_session_block(kernel, tuple(features), mesh)
+        state, steps = fn(state, tb, ep, ne, jnp.int32(max_steps))
+    else:
+        state, steps = _run_session_block(
+            state, tb, ep, ne, jnp.int32(max_steps),
+            kernel=kernel, features=features)
+    if not block:
+        return state, steps
+    steps = int(np.asarray(steps).max())
     if steps >= max_steps:
         raise RuntimeError(
             f"session_advance exceeded {max_steps} event steps before "

@@ -30,6 +30,30 @@ therefore reports exact lifetime aggregates forever, while its
 per-coflow arrays cover the retained (not-yet-polled) window — a
 long-lived tenant no longer grows the server without bound.
 
+Harvesting rides the pool's NEW-COMPLETION BITMAP
+(`SessionPool.completed_sessions`): `advance` polls only tenants whose
+row finished something since the last harvest, so a clean tenant costs
+ZERO host work per fleet step (previously every advance probed every
+tenant with a per-session `poll()`).
+
+Overload shedding (ISSUE 6): a tenant may register under a
+`TenantQuota` — live-coflow / live-byte budgets plus an SLO. A
+`submit` that would blow the budget is SHED under ``policy="reject"``
+(the whole batch is refused with `QuotaExceededError` — nothing is
+partially admitted) or DEFERRED under ``policy="defer"`` (the
+in-budget prefix is admitted; the rest queues server-side and retries
+on every `advance` as capacity frees up, arrivals clamping to the
+tenant clock). A deferred submission that waits longer than the
+quota's `slo` is shed instead of admitted — the DCoflow-style
+degradation (PAPERS.md, arxiv 2205.01229): work that can no longer
+meet its budget is dropped with a counted decision, not queued into
+unbounded latency. Shed/deferral counters live in `TenantAggregates`
+(`shed`, `deferred`) and fleet-wide in `stats()`.
+
+The underlying pool's sharded slab and async dispatch pass straight
+through: ``CoflowServer(..., shards=N, async_dispatch=...,
+features=...)``.
+
 CLI demo (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --tenants 6 --seconds 0.4
 
@@ -41,12 +65,26 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import math
+import os
+import sys
 import time
 from typing import Dict, List, Optional, Sequence
+
+if __name__ == "__main__" and "--shards" in sys.argv \
+        and "XLA_FLAGS" not in os.environ:
+    # jax locks the device count at first initialization, which the
+    # `repro.api` import below triggers — a sharded CLI run must force
+    # the host devices BEFORE that (no-op when the caller already set
+    # XLA_FLAGS, e.g. `make pool-sharded` / CI)
+    _n = int(sys.argv[sys.argv.index("--shards") + 1])
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={_n}"
 
 import numpy as np
 
 from repro.api import Result, SessionPool, result_from_completions
+from repro.api.pool import PoolFullError
 from repro.api.session import CompletedCoflow
 from repro.core.coflow import Coflow
 from repro.core.params import SchedulerParams
@@ -54,6 +92,40 @@ from repro.core.params import SchedulerParams
 
 class AdmissionError(RuntimeError):
     """The server is at its tenant admission cap."""
+
+
+class QuotaExceededError(RuntimeError):
+    """A submit was shed: it would blow the tenant's quota and the
+    tenant registered under ``policy="reject"``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """A tenant's overload budget: live-load caps plus an SLO.
+
+    `max_live_coflows` / `max_live_bytes` bound the tenant's LIVE load
+    (unfinished coflows on its row); a submit that would exceed either
+    is shed (``policy="reject"``: the whole batch raises
+    `QuotaExceededError`) or deferred (``policy="defer"``: the
+    in-budget prefix is admitted, the overflow queues server-side and
+    retries each `advance`). `slo` is the deferral deadline in tenant
+    seconds: a deferred submission older than it is shed — by then it
+    cannot meet its latency target, so admitting it only grows the
+    backlog (the DCoflow admission rule shape)."""
+    max_live_coflows: Optional[int] = None
+    max_live_bytes: Optional[float] = None
+    slo: Optional[float] = None
+    policy: str = "reject"
+
+    def __post_init__(self):
+        if self.policy not in ("reject", "defer"):
+            raise ValueError(
+                f"quota policy must be 'reject' or 'defer', "
+                f"got {self.policy!r}")
+        for name in ("max_live_coflows", "max_live_bytes", "slo"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
 
 
 @dataclasses.dataclass
@@ -67,6 +139,8 @@ class TenantAggregates:
     cct_sum: float = 0.0
     last_fct: float = -math.inf     # max absolute flow completion time
     trimmed: int = 0                # records dropped by history_limit
+    shed: int = 0                   # coflows refused over quota/SLO
+    deferred: int = 0               # coflows queued by policy="defer"
 
     def fold(self, comps: Sequence[CompletedCoflow]) -> None:
         for d in comps:
@@ -86,7 +160,13 @@ class TenantAggregates:
 
     @property
     def makespan(self) -> float:
-        return self.last_fct if self.coflows else float("nan")
+        # guard on `last_fct` being FINITE, not on `coflows`: a fold of
+        # completions that all carry zero flows (fct.size == 0) bumps
+        # `coflows` without ever touching `last_fct`, and the bare
+        # coflows-gate then reported the -inf initializer as a makespan
+        if not math.isfinite(self.last_fct):
+            return float("nan")
+        return self.last_fct
 
 
 @dataclasses.dataclass
@@ -95,8 +175,9 @@ class TenantResult(Result):
     from the EXACT lifetime aggregates while the per-coflow arrays
     cover only the retained (not-yet-polled) completion window —
     `row_cct()`/percentiles see the window, `avg_cct`/`makespan`/
-    `num_coflows` the whole registration."""
+    `num_coflows`/`total_bytes` the whole registration."""
     agg: Optional[TenantAggregates] = None
+    total_bytes: Optional[np.ndarray] = None   # (1,) lifetime bytes
 
     @property
     def avg_cct(self) -> np.ndarray:
@@ -125,6 +206,9 @@ class TenantResult(Result):
         if agg.coflows:
             out.num_coflows = np.array([agg.coflows])
             out.num_flows = np.array([agg.flows])
+            out.total_bytes = np.array([agg.bytes])
+        else:
+            out.total_bytes = np.array([float(np.nansum(out.sent))])
         return out
 
 
@@ -146,15 +230,23 @@ class CoflowServer:
                  num_ports: int, max_tenants: int = 16,
                  mechanisms: Optional[dict] = None,
                  kernel: Optional[str] = None, chunk: int = 32,
-                 history_limit: int = 4096):
+                 history_limit: int = 4096, shards: int = 1,
+                 async_dispatch: bool = True,
+                 features: Optional[tuple] = None):
         self.pool = SessionPool(params, num_ports=num_ports,
                                 max_sessions=max_tenants,
                                 mechanisms=mechanisms, kernel=kernel,
-                                chunk=chunk)
+                                chunk=chunk, shards=shards,
+                                async_dispatch=async_dispatch,
+                                features=features)
         self.history_limit = int(history_limit)
         self._tenants: Dict[str, object] = {}
         self._pending: Dict[str, List[CompletedCoflow]] = {}
         self._agg: Dict[str, TenantAggregates] = {}
+        self._quota: Dict[str, Optional[TenantQuota]] = {}
+        # policy="defer" overflow: (coflow, tenant clock at deferral)
+        self._deferred: Dict[str, List[tuple]] = {}
+        self._live_bytes: Dict[str, float] = {}
         self.rejected = 0
 
     # ---- admission -------------------------------------------------------
@@ -169,21 +261,25 @@ class CoflowServer:
 
     def register(self, tenant: str,
                  params: Optional[SchedulerParams] = None,
-                 mechanisms: Optional[dict] = None) -> None:
+                 mechanisms: Optional[dict] = None,
+                 quota: Optional[TenantQuota] = None) -> None:
         """Admit a tenant (raises `AdmissionError` at the cap,
         `ValueError` on a duplicate name), optionally under its own
         `SchedulerParams`/mechanism switches — the tenant's slab row
         then schedules with those thresholds/δ/switches inside the
-        same fleet dispatch."""
+        same fleet dispatch — and/or a `TenantQuota` overload budget."""
         if tenant in self._tenants:
             raise ValueError(f"tenant {tenant!r} is already registered")
         try:
-            # the ONE admission authority (a full pool raises before
-            # per-tenant params are even looked at; bad params raise
-            # ValueError, which propagates untouched)
+            # the ONE admission authority. ONLY the pool-full signal is
+            # an admission decision; any other fault (bad params raise
+            # ValueError, engine faults raise their own RuntimeError)
+            # propagates untouched — translating it here misreported
+            # real bugs as "admission cap reached" and corrupted the
+            # `rejected` counter
             sess = self.pool.session(params=params,
                                      mechanisms=mechanisms)
-        except RuntimeError as e:
+        except PoolFullError as e:
             self.rejected += 1
             used, cap = self.occupancy
             raise AdmissionError(
@@ -192,6 +288,9 @@ class CoflowServer:
         self._tenants[tenant] = sess
         self._pending[tenant] = []
         self._agg[tenant] = TenantAggregates()
+        self._quota[tenant] = quota
+        self._deferred[tenant] = []
+        self._live_bytes[tenant] = 0.0
 
     def evict(self, tenant: str) -> None:
         """Release a tenant's row (unfinished coflows are dropped)."""
@@ -200,6 +299,9 @@ class CoflowServer:
         del self._tenants[tenant]
         del self._pending[tenant]
         del self._agg[tenant]
+        del self._quota[tenant]
+        del self._deferred[tenant]
+        del self._live_bytes[tenant]
 
     def _session(self, tenant: str):
         try:
@@ -212,7 +314,57 @@ class CoflowServer:
     # ---- the tenant-keyed session surface --------------------------------
 
     def submit(self, tenant: str, coflows: Sequence[Coflow]) -> List[int]:
-        return self._session(tenant).submit(coflows)
+        """Submit coflows to a tenant's row, under its quota when one
+        was registered: an over-budget batch is refused whole with
+        `QuotaExceededError` (``policy="reject"``) or split — in-budget
+        prefix admitted now, overflow deferred server-side
+        (``policy="defer"``). Returns the handles admitted NOW (a
+        deferred coflow gets its handle when a later `advance` admits
+        it)."""
+        sess = self._session(tenant)
+        quota = self._quota[tenant]
+        coflows = list(coflows)
+        if quota is None:
+            handles = sess.submit(coflows)
+            self._live_bytes[tenant] += sum(c.total_bytes for c in coflows)
+            return handles
+        agg = self._agg[tenant]
+        fits = self._budget_room(tenant, coflows)
+        if fits < len(coflows) and quota.policy == "reject":
+            agg.shed += len(coflows)
+            raise QuotaExceededError(
+                f"tenant {tenant!r} over quota ({sess.num_live} live "
+                f"coflows, {self._live_bytes[tenant]:.3g} live bytes); "
+                f"batch of {len(coflows)} shed")
+        admit, overflow = coflows[:fits], coflows[fits:]
+        handles = sess.submit(admit) if admit else []
+        self._live_bytes[tenant] += sum(c.total_bytes for c in admit)
+        if overflow:
+            now = sess.now
+            self._deferred[tenant].extend((c, now) for c in overflow)
+            agg.deferred += len(overflow)
+        return handles
+
+    def _budget_room(self, tenant: str,
+                     coflows: Sequence[Coflow]) -> int:
+        """How many of `coflows` (in order) fit the tenant's quota
+        right now — greedy prefix against the live-coflow and
+        live-byte budgets."""
+        quota = self._quota[tenant]
+        live = self._tenants[tenant].num_live
+        live_b = self._live_bytes[tenant]
+        n = 0
+        for c in coflows:
+            if quota.max_live_coflows is not None and \
+                    live + 1 > quota.max_live_coflows:
+                break
+            if quota.max_live_bytes is not None and \
+                    live_b + c.total_bytes > quota.max_live_bytes:
+                break
+            live += 1
+            live_b += c.total_bytes
+            n += 1
+        return n
 
     def _harvest(self, tenant: str) -> None:
         """Drain the session's fresh completions into the tenant's
@@ -221,7 +373,10 @@ class CoflowServer:
         if not done:
             return
         agg = self._agg[tenant]
+        before = agg.bytes
         agg.fold(done)
+        self._live_bytes[tenant] = max(
+            0.0, self._live_bytes[tenant] - (agg.bytes - before))
         pend = self._pending[tenant]
         pend.extend(done)
         if len(pend) > self.history_limit:
@@ -231,11 +386,47 @@ class CoflowServer:
 
     def advance(self, dt: float) -> float:
         """Advance EVERY tenant's clock by `dt` with one pooled
-        dispatch, harvesting completions into the per-tenant buffers."""
+        dispatch, harvesting completions into the per-tenant buffers.
+        Harvesting walks the pool's NEW-COMPLETION BITMAP
+        (`completed_sessions`), not the tenant roster: a tenant whose
+        row finished nothing since the last harvest is never polled —
+        zero host work per clean tenant per step. Deferred submissions
+        are then retried against the freed budget."""
         self.pool.advance(dt)
-        for tenant in self._tenants:
-            self._harvest(tenant)
+        fresh = {id(s) for s in self.pool.completed_sessions()}
+        if fresh:
+            for tenant, sess in self._tenants.items():
+                if id(sess) in fresh:
+                    self._harvest(tenant)
+        self._admit_deferred()
         return dt
+
+    def _admit_deferred(self) -> None:
+        """Retry each tenant's deferred queue (in deferral order):
+        entries older than the quota's SLO are shed — they can no
+        longer meet their target, so admitting them only grows the
+        backlog — and the rest are admitted while the freed budget
+        lasts (arrivals clamp to the tenant clock on submit)."""
+        for tenant, queue in self._deferred.items():
+            if not queue:
+                continue
+            sess = self._tenants[tenant]
+            quota = self._quota[tenant]
+            agg = self._agg[tenant]
+            now = sess.now
+            keep: List[tuple] = []
+            blocked = False
+            for c, t_defer in queue:
+                if quota.slo is not None and now - t_defer > quota.slo:
+                    agg.shed += 1
+                    continue
+                if not blocked and self._budget_room(tenant, [c]):
+                    sess.submit([c])
+                    self._live_bytes[tenant] += c.total_bytes
+                else:
+                    blocked = True    # keep the queue order: nothing
+                    keep.append((c, t_defer))  # younger jumps ahead
+            self._deferred[tenant] = keep
 
     def poll(self, tenant: str) -> List[CompletedCoflow]:
         """Completions for `tenant` not yet returned by a poll. This is
@@ -279,6 +470,11 @@ class CoflowServer:
                                 for s in self._tenants.values()),
             "completed": sum(a.coflows for a in self._agg.values()),
             "retained": sum(len(p) for p in self._pending.values()),
+            "shed": sum(a.shed for a in self._agg.values()),
+            "deferred": sum(a.deferred for a in self._agg.values()),
+            "deferred_pending": sum(len(q)
+                                    for q in self._deferred.values()),
+            "shards": self.pool.shards,
             "slab": (self.pool._C_cap, self.pool._F_cap),
         }
 
@@ -294,14 +490,20 @@ def main(argv=None) -> dict:
                     help="virtual horizon per tenant")
     ap.add_argument("--ports", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the slab row axis across this many "
+                    "devices (CPU: forced host devices)")
     args = ap.parse_args(argv)
 
     from repro.traces.synth import tiny_trace
 
     params = SchedulerParams(port_bw=1e9, delta=1e-3,
                              start_threshold=1e6)
+    if args.max_tenants % args.shards:
+        ap.error("--max-tenants must be a multiple of --shards")
     srv = CoflowServer(params, num_ports=args.ports,
-                       max_tenants=args.max_tenants)
+                       max_tenants=args.max_tenants,
+                       shards=args.shards)
     t0 = time.perf_counter()
     waiting = [f"tenant/{i}" for i in range(args.tenants)]
     admitted: List[str] = []

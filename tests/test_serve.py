@@ -180,3 +180,190 @@ def test_server_trim_on_poll_keeps_aggregates_stable_and_memory_bounded():
     assert res.cct.shape[1] <= 8
     expect = agg.cct_sum / agg.coflows
     np.testing.assert_allclose(res.avg_cct[0], expect)
+
+
+# ---- the ISSUE-6 serving-layer bugfix sweep -------------------------------
+
+
+def test_server_noncap_runtime_error_propagates_untouched(monkeypatch):
+    """The register bugfix: only the pool's `PoolFullError` is an
+    admission decision. Any other RuntimeError is a real fault — it
+    must propagate as itself (not as `AdmissionError`) and must NOT
+    bump the `rejected` counter."""
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=2)
+
+    def boom(*a, **k):
+        raise RuntimeError("engine exploded mid-admission")
+
+    monkeypatch.setattr(srv.pool, "session", boom)
+    with pytest.raises(RuntimeError, match="engine exploded") as ei:
+        srv.register("t")
+    assert not isinstance(ei.value, AdmissionError)
+    assert srv.rejected == 0
+    assert "t" not in srv.tenants
+    monkeypatch.undo()
+    # the genuine cap still counts and still translates
+    srv.register("a")
+    srv.register("b")
+    with pytest.raises(AdmissionError, match="admission cap"):
+        srv.register("c")
+    assert srv.rejected == 1
+
+
+def test_aggregates_zero_flow_completions_yield_nan_makespan():
+    """The makespan bugfix: folding completions whose `fct` arrays are
+    all empty bumps `coflows` without touching `last_fct`; the old
+    coflows-gate then reported the -inf initializer. The guard is on
+    `last_fct` being finite."""
+    from repro.api.session import CompletedCoflow
+
+    agg = TenantAggregates()
+    agg.fold([CompletedCoflow(handle=0, arrival=0.0, cct=0.0,
+                              fct=np.array([]))])
+    assert agg.coflows == 1
+    assert np.isnan(agg.makespan), \
+        f"zero-flow fold must give NaN makespan, got {agg.makespan}"
+    # a later real completion restores a finite makespan
+    agg.fold([CompletedCoflow(handle=1, arrival=0.0, cct=2.5,
+                              fct=np.array([2.5, 1.0]))])
+    assert agg.makespan == 2.5
+
+
+def test_tenant_result_lifts_lifetime_bytes():
+    """`TenantResult.from_window` lifts lifetime `bytes` exactly like
+    `num_coflows`/`num_flows`: after a poll trims the window, the
+    lifetime byte total survives in `total_bytes`."""
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=1)
+    srv.register("t")
+    wl = _coflows(7, 3)
+    sent = sum(c.total_bytes for c in wl)
+    srv.submit("t", wl)
+    _drain(srv, ["t"])
+    srv.poll("t")                          # trims the window to zero
+    res = srv.result("t")
+    assert res.cct.shape[1] == 0           # window empty...
+    assert int(res.num_coflows[0]) == 3    # ...lifetime counts survive
+    np.testing.assert_allclose(res.total_bytes[0], sent)
+
+
+def test_advance_harvests_only_completed_rows():
+    """The harvest bugfix: `advance` routes through the pool's
+    new-completion bitmap, so a tenant whose row finished nothing is
+    NEVER polled — a clean tenant costs zero host work per fleet
+    step (previously every advance probed every tenant)."""
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=3)
+    polls = {t: 0 for t in ("busy", "idle", "empty")}
+    for t in polls:
+        srv.register(t)
+        sess = srv._tenants[t]
+        orig = sess.poll
+
+        def counted(t=t, orig=orig):
+            polls[t] += 1
+            return orig()
+
+        sess.poll = counted
+    srv.submit("busy", _coflows(0, 2))
+    srv.submit("idle", _coflows(1, 1, spread=0.0))
+    steps = 0
+    for _ in range(60):
+        srv.advance(1.0)
+        steps += 1
+        if not (srv.num_live("busy") or srv.num_live("idle")):
+            break
+    assert steps < 60
+    # a tenant with NO work is never polled by the advance loop
+    assert polls["empty"] == 0
+    # live tenants are polled only when completions actually landed —
+    # far fewer probes than one per tenant per step
+    assert 1 <= polls["busy"] <= 3
+    assert 1 <= polls["idle"] <= 3
+    # nothing was lost to the lazy harvest
+    assert len(srv.poll("busy")) == 2
+    assert len(srv.poll("idle")) == 1
+
+
+# ---- overload shedding ----------------------------------------------------
+
+
+def test_quota_reject_sheds_whole_batches():
+    from repro.launch.serve import QuotaExceededError, TenantQuota
+
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=2)
+    srv.register("q", quota=TenantQuota(max_live_coflows=2))
+    srv.register("free")                   # no quota: never shed
+    wl = _coflows(20, 3)
+    with pytest.raises(QuotaExceededError):
+        srv.submit("q", wl)                # 3 > 2: refused WHOLE
+    assert srv.num_live("q") == 0          # nothing partially admitted
+    assert srv.aggregates("q").shed == 3
+    srv.submit("q", wl[:2])                # in-budget batch admits
+    with pytest.raises(QuotaExceededError):
+        srv.submit("q", wl[2:])            # row full: shed again
+    assert srv.aggregates("q").shed == 4
+    srv.submit("free", _coflows(21, 6))    # unquota'd tenant unbounded
+    _drain(srv, ["q", "free"])
+    assert len(srv.poll("q")) == 2
+    assert len(srv.poll("free")) == 6
+    st = srv.stats()
+    assert st["shed"] == 4 and st["deferred"] == 0
+
+
+def test_quota_defer_admits_as_budget_frees():
+    """policy="defer": the in-budget prefix is admitted now, the rest
+    queues server-side and is admitted by later advances as
+    completions free the budget; every deferred coflow eventually
+    completes (none lost, none duplicated)."""
+    from repro.launch.serve import TenantQuota
+
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=1)
+    srv.register("d", quota=TenantQuota(max_live_coflows=2,
+                                        policy="defer"))
+    wl = _coflows(30, 6, spread=0.0)
+    handles = srv.submit("d", wl)
+    assert len(handles) == 2               # the in-budget prefix
+    assert srv.num_live("d") == 2
+    agg = srv.aggregates("d")
+    assert agg.deferred == 4 and agg.shed == 0
+    assert srv.stats()["deferred_pending"] == 4
+    done = 0
+    for _ in range(300):
+        srv.advance(1.0)
+        done += len(srv.poll("d"))
+        assert srv.num_live("d") <= 2      # the budget is a hard cap
+        if done == 6 and srv.stats()["deferred_pending"] == 0:
+            break
+    assert done == 6, f"only {done}/6 deferred coflows completed"
+    assert srv.aggregates("d").coflows == 6
+    assert srv.aggregates("d").shed == 0
+
+
+def test_quota_slo_sheds_aged_deferrals_keeping_backlog_bounded():
+    """The overload scenario: a tenant pushed far past its budget with
+    a tight SLO sheds the aged backlog instead of queueing it into
+    unbounded latency — deferred_pending drains to zero, the shed
+    counter accounts for every dropped coflow, and the live load
+    never exceeds the budget."""
+    from repro.launch.serve import TenantQuota
+
+    srv = CoflowServer(PARAMS, num_ports=PORTS, max_tenants=1)
+    srv.register("o", quota=TenantQuota(max_live_coflows=1,
+                                        slo=2.0, policy="defer"))
+    wl = _coflows(40, 12, spread=0.0)      # 12x the live budget
+    srv.submit("o", wl)
+    agg = srv.aggregates("o")
+    assert agg.deferred == 11
+    done = 0
+    for _ in range(100):
+        srv.advance(1.0)
+        done += len(srv.poll("o"))
+        assert srv.num_live("o") <= 1
+        if srv.stats()["deferred_pending"] == 0 and \
+                srv.num_live("o") == 0:
+            break
+    st = srv.stats()
+    assert st["deferred_pending"] == 0, "backlog must drain, not grow"
+    assert agg.shed > 0, "a tight SLO must shed aged deferrals"
+    # every coflow is accounted for exactly once: completed or shed
+    assert agg.coflows + agg.shed == 12
+    assert done == agg.coflows
