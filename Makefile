@@ -1,10 +1,21 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-slow test-all coverage pool-fuzz api-smoke pool-smoke pool-sharded bench-smoke bench
+.PHONY: test test-slow test-all coverage lint audit audit-update pool-fuzz api-smoke pool-smoke pool-sharded bench-smoke bench
 
 test:            ## fast tier-1 suite (slow integration tests excluded)
 	$(PY) -m pytest -q
+
+lint:            ## trace-safety lint (+ ruff style pass when installed)
+	@command -v ruff >/dev/null 2>&1 && ruff check src tests \
+	  || echo "ruff not installed; skipping style pass"
+	$(PY) -m repro.analysis.lint src tests
+
+audit:           ## jaxpr dispatch audit vs analysis/dispatch_manifest.json
+	$(PY) -m repro.analysis.audit
+
+audit-update:    ## re-trace the hot entrypoints and rewrite the manifest
+	$(PY) -m repro.analysis.audit --update
 
 test-slow:       ## only the @pytest.mark.slow integration tests
 	$(PY) -m pytest -q -m slow

@@ -1,0 +1,149 @@
+"""Lint driver: discovery, suppression filtering, reporting.
+
+Usage::
+
+    python -m repro.analysis.lint [paths...]   # default: src tests
+
+Exit status 1 if any finding survives suppression. Suppressions are
+in-source comments::
+
+    steps = int(np.asarray(steps).max())  # saath: lint-ok(host-pull-unaccounted): blocking advance must sync the step budget
+
+The rule name is mandatory and must match the finding's rule; the
+reason (after the colon) is mandatory too — a bare `lint-ok` is itself
+reported (`bad-suppression`). A suppression on a `def` line covers the
+whole function body. Cross-file contract rules
+(`repro.analysis.contracts`) run once per invocation against the live
+`repro` package sources regardless of the paths given.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from repro.analysis import contracts
+from repro.analysis.rules import Finding, lint_module
+
+__all__ = ["lint_paths", "lint_text", "main"]
+
+_SUPPRESS = re.compile(
+    r"#\s*saath:\s*lint-ok\(([a-z0-9-]+)\)(?::\s*(\S.*))?")
+_DEF_LINE = re.compile(r"^\s*(?:async\s+)?def\s")
+
+
+def _suppressions(src: str, path: str
+                  ) -> Tuple[Dict[int, str], List[Finding], int]:
+    """Map line -> suppressed rule. A suppression on a def line covers
+    the def's whole span. Returns (line map, bad-suppression findings,
+    count of suppression comments)."""
+    import ast
+
+    lines = src.splitlines()
+    spans: List[Tuple[int, int]] = []
+    try:
+        tree = ast.parse(src, filename=path)
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                spans.append((node.lineno,
+                              getattr(node, "end_lineno", node.lineno)))
+    except SyntaxError:
+        pass
+    by_line: Dict[int, str] = {}
+    bad: List[Finding] = []
+    count = 0
+    for i, line in enumerate(lines, 1):
+        m = _SUPPRESS.search(line)
+        if not m:
+            continue
+        count += 1
+        rule, reason = m.group(1), m.group(2)
+        if not reason:
+            bad.append(Finding(
+                "bad-suppression", path, i,
+                f"lint-ok({rule}) without a reason — write "
+                f"`# saath: lint-ok({rule}): <why>`"))
+            continue
+        targets = [i]
+        if _DEF_LINE.match(line):
+            for lo, hi in spans:
+                if lo == i:
+                    targets = list(range(lo, hi + 1))
+                    break
+        for ln in targets:
+            by_line[ln] = rule
+    return by_line, bad, count
+
+
+def lint_text(src: str, path: str = "<string>") -> List[Finding]:
+    """Lint one source blob (module-local rules only) with suppression
+    filtering applied — the unit the fixture tests drive."""
+    findings = lint_module(path, src)
+    by_line, bad, _ = _suppressions(src, path)
+    kept = [f for f in findings if by_line.get(f.line) != f.rule]
+    return kept + bad
+
+
+def _discover(paths: List[str]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            files.extend(sorted(
+                f for f in path.rglob("*.py")
+                if "__pycache__" not in f.parts))
+        elif path.suffix == ".py":
+            files.append(path)
+    return files
+
+
+def lint_paths(paths: List[str], with_contracts: bool = True
+               ) -> Tuple[List[Finding], int]:
+    """Lint every .py under `paths`. Returns (findings, suppressions
+    used across the sweep)."""
+    findings: List[Finding] = []
+    n_suppressed = 0
+    for f in _discover(paths):
+        src = f.read_text()
+        module_findings = lint_module(str(f), src)
+        by_line, bad, _ = _suppressions(src, str(f))
+        survived = [x for x in module_findings
+                    if by_line.get(x.line) != x.rule]
+        n_suppressed += len(module_findings) - len(survived)
+        findings.extend(survived)
+        findings.extend(bad)
+    if with_contracts:
+        import repro
+        src_root = Path(list(repro.__path__)[0]).resolve().parent
+        findings.extend(contracts.check_contracts(src_root))
+    findings.sort(key=lambda x: (x.path, x.line, x.rule))
+    return findings, n_suppressed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="JAX trace-safety + repo-contract lint")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories (default: src tests)")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the cross-file contract rules")
+    args = ap.parse_args(argv)
+    findings, n_suppressed = lint_paths(
+        list(args.paths), with_contracts=not args.no_contracts)
+    for f in findings:
+        print(f)
+    if n_suppressed:
+        print(f"({n_suppressed} finding(s) suppressed via "
+              f"`saath: lint-ok`)", file=sys.stderr)
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("lint clean", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

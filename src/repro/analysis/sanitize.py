@@ -1,0 +1,122 @@
+"""Runtime sanitizers for the serving plane's dispatch contracts.
+
+Two context managers turn benchmark folklore into asserted properties:
+
+* ``assert_no_recompiles()`` — counts jit cache misses inside the
+  scope (via ``jax_log_compiles`` + a logging handler on jax's
+  compile logger) and raises `RecompileError` when any executable is
+  (re)built. This is how "a heterogeneous tenant joining a
+  pinned-features pool never recompiles the fleet" is tested
+  (tests/test_pool_sharded.py), instead of trusting wall-clock.
+* ``assert_no_transfers()`` — arms jax's transfer guard at
+  ``disallow_explicit`` for host-to-device transfers, so ANY upload —
+  implicit numpy-argument commits and explicit `device_put` /
+  `jnp.asarray` alike — raises at the offending call site unless it
+  happens inside an `accounted_transfer()` carve-out. The
+  `SessionPool` wraps exactly its io-counted paths (dirty-row
+  scatters, rebuilds, dispatch argument commits, ctl reads) in
+  `accounted_transfer`, which is what upgrades "zero clean-row
+  uploads" from a `pool.io` byte-counter claim to a guard-enforced
+  invariant: a transfer the pool forgot to account trips the guard.
+
+Device-to-host reads are zero-copy on the CPU backend (the guard
+cannot observe them there), so download-side contracts stay on the
+`pool.io` counters; the upload side — the expensive direction for the
+slab — is guard-enforced everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+
+import jax
+
+__all__ = ["RecompileError", "assert_no_recompiles",
+           "assert_no_transfers", "accounted_transfer"]
+
+# jax's compile log line ("Compiling <name> with global shapes ...") is
+# emitted on this logger when jax_log_compiles is on; cached dispatches
+# emit nothing, so counting these records counts cache misses exactly.
+_COMPILE_LOGGERS = ("jax._src.interpreters.pxla",)
+_COMPILE_PREFIX = "Compiling "
+
+
+class RecompileError(AssertionError):
+    """An executable was compiled inside an assert_no_recompiles scope."""
+
+
+class _CompileCounter(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.compiles: list = []
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if msg.startswith(_COMPILE_PREFIX):
+            self.compiles.append(msg.split(" with global", 1)[0]
+                                 [len(_COMPILE_PREFIX):])
+
+
+class _RecompileScope:
+    """Handle yielded by `assert_no_recompiles`: `.compiles` lists the
+    names of executables built so far inside the scope."""
+
+    def __init__(self, handler: _CompileCounter):
+        self._handler = handler
+
+    @property
+    def compiles(self) -> list:
+        return list(self._handler.compiles)
+
+
+@contextlib.contextmanager
+def assert_no_recompiles(allow: int = 0):
+    """Fail with `RecompileError` if more than `allow` executables are
+    compiled inside the scope. Warm the code path first — the sanitizer
+    asserts cache HITS, it does not distinguish first compiles from
+    recompiles. Yields a scope whose `.compiles` lists what was built.
+    """
+    handler = _CompileCounter()
+    loggers = [logging.getLogger(name) for name in _COMPILE_LOGGERS]
+    old_levels = [lg.level for lg in loggers]
+    prev = jax.config.jax_log_compiles
+    jax.config.update("jax_log_compiles", True)
+    for lg in loggers:
+        # compile lines log at WARNING when jax_log_compiles is on;
+        # drop the level anyway in case a future jax demotes them
+        if lg.level > logging.DEBUG:
+            lg.setLevel(logging.DEBUG)
+        lg.addHandler(handler)
+    try:
+        yield _RecompileScope(handler)
+        if len(handler.compiles) > allow:
+            raise RecompileError(
+                f"{len(handler.compiles)} executable(s) compiled inside "
+                f"an assert_no_recompiles(allow={allow}) scope: "
+                f"{handler.compiles}")
+    finally:
+        for lg, lv in zip(loggers, old_levels):
+            lg.removeHandler(handler)
+            lg.setLevel(lv)
+        jax.config.update("jax_log_compiles", prev)
+
+
+@contextlib.contextmanager
+def assert_no_transfers():
+    """Disallow ALL host-to-device transfers (implicit argument commits
+    and explicit device_put/asarray alike) inside the scope, except
+    those wrapped in `accounted_transfer()`. Violations raise jax's
+    transfer-guard error at the offending call site — the traceback
+    names the exact unaccounted upload."""
+    with jax.transfer_guard_host_to_device("disallow_explicit"):
+        yield
+
+
+@contextlib.contextmanager
+def accounted_transfer():
+    """Carve-out for io-accounted host-device crossings: re-allows
+    transfers inside an `assert_no_transfers` scope. The `SessionPool`
+    wraps exactly the statements its `pool.io` counters cover, so the
+    sanitizer's reach is "everything the accounting misses"."""
+    with jax.transfer_guard("allow"):
+        yield

@@ -104,7 +104,7 @@ nothing.
 from __future__ import annotations
 
 import bisect
-import dataclasses
+import functools
 import math
 from typing import List, Optional, Tuple
 
@@ -112,6 +112,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitize import accounted_transfer
 from repro.core.params import SchedulerParams
 
 # re-base a row's grid epoch at the first re-pack past this relative
@@ -122,6 +123,20 @@ REBASE_TICKS = 1 << 20
 # more than this is split into epochs (each split re-packs and
 # re-bases, so `tickf` arithmetic never leaves the f32-exact range)
 MAX_REL_TICKS = 1 << 22
+
+
+def _io_accounted(method):
+    """Mark a SessionPool method as a SANCTIONED host-device crossing:
+    its transfers are what the `pool.io` counters cover, so they run
+    inside an `accounted_transfer` carve-out. Everything else the pool
+    does is then provably transfer-free under
+    `repro.analysis.sanitize.assert_no_transfers` — the sanitizer the
+    pool suites arm around clean-row advances."""
+    @functools.wraps(method)
+    def wrapper(self, *args, **kwargs):
+        with accounted_transfer():
+            return method(self, *args, **kwargs)
+    return wrapper
 
 
 def _tree_nbytes(tree) -> int:
@@ -385,6 +400,7 @@ class SessionPool:
             return max(s._tick, pend[1])
         return s._tick
 
+    @_io_accounted
     def _advance(self, targets) -> None:
         """Advance the given (session, global n_end) targets; sessions
         not listed keep their row at its current tick (exact no-ops in
@@ -440,6 +456,7 @@ class SessionPool:
             self._ticks, self._fin = tick_h, fin_h
             work = nxt
 
+    @_io_accounted
     def _dispatch_async(self, work) -> None:
         """The double-buffered fast path: enqueue the fleet dispatch
         and RETURN — no control download, no host sync. The device
@@ -466,6 +483,7 @@ class SessionPool:
             s._host_stale = True
             self._pend_rows[r] = (s, n_end)
 
+    @_io_accounted
     def _sync_ctl(self) -> None:
         """Consume the deferred control download of the async dispatch
         chain: ONE host transfer of the tiny (tick, finished) mirrors
@@ -499,6 +517,7 @@ class SessionPool:
                 f"async session_advance stopped short of its horizon "
                 f"on rows {short} (step budget exhausted?)")
 
+    @_io_accounted
     def _plan_tick(self, sess) -> np.ndarray:
         """One wave-planning coordinator tick for ONE session row; the
         other rows are masked no-ops. Returns the row's admitted mask."""
@@ -517,6 +536,7 @@ class SessionPool:
         self._materialize([sess])
         return adm_all[sess._row]
 
+    @_io_accounted
     def _ensure(self) -> None:
         """Flush host-side changes to the device slab: released rows are
         re-blanked and dirty rows re-packed, both as ROW SCATTERS
@@ -555,6 +575,7 @@ class SessionPool:
             # every tenant against them, so membership churn can never
             # change the compiled structure (no recompiles)
 
+    @_io_accounted
     def _scatter_dirty(self) -> None:
         from repro.traces.batch import row_of, stack_rows
 
@@ -629,6 +650,7 @@ class SessionPool:
 
         blank_row(self._scratch_tb(), 0)
 
+    @_io_accounted
     def _rebuild(self) -> None:
         """Full-slab rebuild (first build, or a capacity growth): pack
         every row host-side and upload the whole slab once — the ONLY
@@ -784,6 +806,7 @@ class SessionPool:
                 pend_next=np.float32(s._pend[1] - s._epoch))
         return row
 
+    @_io_accounted
     def _materialize(self, sessions=None,
                      completions_only: bool = False) -> None:
         """Gather STALE rows of the device state back into their
@@ -861,6 +884,7 @@ class SessionPool:
 
     # ---- debug/oracle view ----------------------------------------------
 
+    @_io_accounted
     def host_view(self) -> tuple:
         """Materialize NUMPY copies of the device slab as
         (TraceBatch, EngineState) — the lazily-built debug/oracle view
@@ -869,8 +893,12 @@ class SessionPool:
         if self._tb is None:
             return None, None
         self._sync_ctl()
-        return (jax.tree_util.tree_map(np.asarray, self._tb),
-                jax.tree_util.tree_map(np.asarray, self._state_flat()))
+        tb_h = jax.tree_util.tree_map(np.asarray, self._tb)
+        st_h = jax.tree_util.tree_map(np.asarray, self._state_flat())
+        # a full-slab download: account it like any other host pull so
+        # `pool.io` stays the single source of truth for transfers
+        self.io["download_bytes"] += _tree_nbytes(tb_h) + _tree_nbytes(st_h)
+        return tb_h, st_h
 
 
 __all__ = ["SessionPool", "PoolFullError", "REBASE_TICKS"]

@@ -814,7 +814,7 @@ def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
         ne = np.broadcast_to(
             ne.reshape(-1) if ne.ndim else ne,
             (int(np.prod(state.tick.shape)),)).reshape(state.tick.shape)
-    ne = jnp.asarray(ne.copy())
+    ne = jnp.asarray(ne.copy(), jnp.float32)
     if mesh is not None:
         fn = _pmapped_session_block(kernel, tuple(features), mesh)
         state, steps = fn(state, tb, ep, ne, jnp.int32(max_steps))
@@ -824,7 +824,7 @@ def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
             kernel=kernel, features=features)
     if not block:
         return state, steps
-    steps = int(np.asarray(steps).max())
+    steps = int(np.asarray(steps).max())  # saath: lint-ok(host-pull-unaccounted): blocking mode's sanctioned sync; pool accounts the ctl read
     if steps >= max_steps:
         raise RuntimeError(
             f"session_advance exceeded {max_steps} event steps before "

@@ -5,9 +5,6 @@ dry-run lowers the very same step functions the trainer executes.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P

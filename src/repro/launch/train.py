@@ -28,11 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager, latest_step, restore
-from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.configs import get_config, get_smoke_config
 from repro.data import SyntheticLMData
 from repro.launch import steps as ST
 from repro.launch.mesh import make_host_mesh
-from repro.models import lm
 from repro.optim import make_optimizer
 
 

@@ -13,10 +13,8 @@ Caches ride the same scan as xs/ys: per-offset pytrees with a leading
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +25,7 @@ from repro.models import attention as attn
 from repro.models import mamba as mb
 from repro.models import moe as moe_mod
 from repro.models.common import (Parallelism, ParamFactory, glu_ffn,
-                                 mlp_ffn, param_specs, rms_norm, shard)
+                                 mlp_ffn, rms_norm, shard)
 
 
 # ------------------------------------------------------------- layer plan

@@ -22,7 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.models.common import Parallelism, activation, shard
 

@@ -7,7 +7,7 @@ DESIGN.md §5 and the dry-run memory analysis).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

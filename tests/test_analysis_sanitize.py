@@ -1,0 +1,62 @@
+"""Runtime sanitizers: jit-cache-miss counting and transfer guarding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import (RecompileError, accounted_transfer,
+                                     assert_no_recompiles,
+                                     assert_no_transfers)
+
+
+def test_assert_no_recompiles_flags_fresh_compile():
+    @jax.jit
+    def f(x):
+        return x * 2.0 + 1.0
+
+    x = jnp.ones((3,), jnp.float32)
+    with pytest.raises(RecompileError, match="compiled inside"):
+        with assert_no_recompiles():
+            f(x).block_until_ready()
+
+
+def test_assert_no_recompiles_passes_on_cache_hits():
+    @jax.jit
+    def g(x):
+        return x - 3.0
+
+    x = jnp.ones((4,), jnp.float32)
+    g(x).block_until_ready()                 # warm
+    with assert_no_recompiles():
+        g(x).block_until_ready()             # cache hit: clean
+    # a NEW input shape is a cache miss again
+    y = jnp.ones((5,), jnp.float32)
+    with pytest.raises(RecompileError):
+        with assert_no_recompiles():
+            g(y).block_until_ready()
+
+
+def test_assert_no_recompiles_allow_budget_and_scope_listing():
+    @jax.jit
+    def h(x):
+        return x + 7.0
+
+    x = jnp.ones((6,), jnp.float32)
+    with assert_no_recompiles(allow=1) as scope:
+        h(x).block_until_ready()
+    assert scope.compiles, "the scope should record what was built"
+
+
+def test_assert_no_transfers_blocks_unaccounted_uploads():
+    x = np.ones((4,), np.float32)
+    with pytest.raises(Exception, match="[Tt]ransfer"):
+        with assert_no_transfers():
+            jax.device_put(x)
+
+
+def test_accounted_transfer_carves_out_sanctioned_uploads():
+    x = np.ones((4,), np.float32)
+    with assert_no_transfers():
+        with accounted_transfer():
+            y = jax.device_put(x)
+    np.testing.assert_array_equal(np.asarray(y), x)

@@ -1,7 +1,6 @@
 """The jitted coordinator agrees with the numpy Saath reference."""
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
 
 from repro.core.params import SchedulerParams
 from repro.core.policies import make_policy

@@ -6,7 +6,6 @@ Fig. 4: work conservation recovers the ports all-or-none leaves idle.
 Fig. 5: per-flow thresholds transition a partially-served coflow faster.
 """
 import numpy as np
-import pytest
 
 from repro.core.coflow import Coflow, Flow, Trace
 from repro.api import Scenario, run

@@ -12,6 +12,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro.analysis.sanitize import assert_no_transfers
 from repro.api import SaathSession, SessionPool
 from repro.core.coflow import Coflow, Flow
 from repro.core.params import SchedulerParams
@@ -169,8 +170,12 @@ def test_pool_device_resident_clean_rows_never_reupload():
     assert io["full_uploads"] == 1
     base_rows, base_bytes = io["row_uploads"], io["upload_bytes"]
     downloads = io["row_downloads"]
-    for _ in range(5):
-        pool.advance(1.0)                 # clean rows: nothing uploads
+    # guard + counters together make "zero clean-row uploads"
+    # structural: an UNACCOUNTED h2d upload raises inside the guard,
+    # an accounted one moves the io counters asserted unchanged below
+    with assert_no_transfers():
+        for _ in range(5):
+            pool.advance(1.0)             # clean rows: nothing uploads
     assert io["full_uploads"] == 1
     assert io["row_uploads"] == base_rows
     assert io["upload_bytes"] == base_bytes

@@ -130,6 +130,36 @@ def test_shard_validation():
                         shards=64)
 
 
+def test_pinned_features_join_never_recompiles():
+    """The pinned-features serving contract, enforced at the XLA cache:
+    once the fleet executables are warm, admitting a NEW tenant — even
+    one with heterogeneous SchedulerParams — must be pure data movement
+    (a row scatter + the warm dispatch), zero fresh compiles. Params
+    live in the stacked EngineParams rows, so per-tenant values change
+    operands, never the traced program."""
+    from repro.analysis.sanitize import assert_no_recompiles
+
+    pool = SessionPool(PARAMS, num_ports=PORTS, max_sessions=4,
+                       features=(True, True, False))
+    a = pool.session()
+    a.submit(_coflows(11, 3))
+    pool.advance(0.5)                      # compile the fleet programs
+    b = pool.session()                     # warm the JOIN path too:
+    b.submit(_coflows(12, 2))              # k=1 scatter + ep restack
+    pool.advance(0.5)
+    pool.poll()                            # ...and the gather/sync path
+    hetero = SchedulerParams(port_bw=1.0, delta=2e-2,
+                             start_threshold=8.0, growth=4.0,
+                             num_queues=5)
+    with assert_no_recompiles():
+        c = pool.session(params=hetero)
+        c.submit(_coflows(13, 2, spread=0.5))
+        pool.advance(0.5)
+    pool.poll()                            # gather idx shape varies —
+    pool.advance(5.0)                      # correctness stays outside
+    assert {s for s, _ in pool.poll()} <= {a, b, c}
+
+
 def test_pinned_features_reject_out_of_superset_tenant():
     """Pinned features freeze the compiled structure: a tenant whose
     mechanisms need a feature outside the pinned set is refused at

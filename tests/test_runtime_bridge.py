@@ -4,11 +4,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.runtime.buckets import bucketize
-from repro.runtime.coflow_bridge import (RESOURCES, CollectiveCoflow,
+from repro.runtime.coflow_bridge import (CollectiveCoflow,
                                          grad_bucket_coflows, plan_waves)
 from repro.runtime.overlap import scheduled_psum
 
