@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-slow test-all coverage lint audit audit-update pool-fuzz api-smoke pool-smoke pool-sharded bench-smoke bench
+.PHONY: test test-slow test-all coverage lint audit audit-update coherence coherence-update pool-fuzz api-smoke pool-smoke pool-sharded bench-smoke bench
 
 test:            ## fast tier-1 suite (slow integration tests excluded)
 	$(PY) -m pytest -q
@@ -16,6 +16,15 @@ audit:           ## jaxpr dispatch audit vs analysis/dispatch_manifest.json
 
 audit-update:    ## re-trace the hot entrypoints and rewrite the manifest
 	$(PY) -m repro.analysis.audit --update
+
+coherence:       ## slab coherence gate: typestate checker vs analysis/coherence_manifest.json + seeded-mutation selftest + interleaving explorer vs the blocking oracle
+	$(PY) -m repro.analysis.coherence
+	$(PY) -m repro.analysis.coherence --selftest
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	  $(PY) -m repro.analysis.explore --schedules 3 --ops 24
+
+coherence-update: ## re-extract serving-plane effects and rewrite the coherence manifest (rule findings still block)
+	$(PY) -m repro.analysis.coherence --update
 
 test-slow:       ## only the @pytest.mark.slow integration tests
 	$(PY) -m pytest -q -m slow

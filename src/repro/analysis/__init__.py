@@ -1,4 +1,4 @@
-"""Trace-safety static analysis + dispatch auditing (DESIGN.md §9).
+"""Trace-safety static analysis + dispatch auditing (DESIGN.md §9–§10).
 
 The serving plane's performance story rests on invariants nothing used
 to check: one dispatch per fleet advance, zero clean-row uploads, no
@@ -22,6 +22,17 @@ This package makes those contracts machine-checked:
   `assert_no_recompiles` / `assert_no_transfers` context managers
   (jit-cache-miss counting, transfer-guard enforcement with
   `accounted_transfer` carve-outs for the pool's io-counted paths).
+* ``repro.analysis.coherence`` — the slab coherence checker: the
+  async serving plane's cache protocol (dirty flags, deferred ctl
+  handle, host mirrors, folded dispatch caches, the io ledger) as a
+  machine-readable declaration, typestate-checked per method against
+  the committed golden ``analysis/coherence_manifest.json``
+  (``make coherence`` / ``make coherence-update``); ``--selftest``
+  re-checks six seeded single-line coherence bugs.
+* ``repro.analysis.explore`` — the interleaving race detector:
+  deterministic random schedules over the full pool API, replayed on
+  async sharded pools against the blocking 1-shard oracle with
+  bitwise comparison at sync points; divergences print a reproducer.
 """
 from repro.analysis.sanitize import (RecompileError, accounted_transfer,
                                      assert_no_recompiles,

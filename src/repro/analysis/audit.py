@@ -201,14 +201,14 @@ def check_manifest(manifest: dict,
         if old["in_avals"] != cur["in_avals"]:
             problems.append(
                 f"{name}: input signature drift (recompile trigger for "
-                f"existing callers)\n  manifest: {old['in_avals']}\n  "
-                f"current:  {cur['in_avals']}")
+                f"existing callers)\n"
+                + "\n".join(_aval_diff(old["in_avals"],
+                                       cur["in_avals"])))
         if old["primitives"] != cur["primitives"]:
             diff = _prim_diff(old["primitives"], cur["primitives"])
             if same_jax:
                 problems.append(
-                    f"{name}: primitive-count drift — review, then "
-                    f"`make audit-update` ({diff})")
+                    f"{name}: primitive-count drift\n{diff}")
             else:
                 print(f"audit: {name}: primitive counts differ from "
                       f"manifest but jax version changed "
@@ -224,12 +224,40 @@ def check_manifest(manifest: dict,
 
 
 def _prim_diff(old: dict, new: dict) -> str:
-    out = []
+    """Per-entrypoint primitive delta, grouped into added / removed /
+    count-changed so a reviewer sees WHAT entered the hot loop, not a
+    raw manifest dump."""
+    added, removed, changed = [], [], []
     for k in sorted(set(old) | set(new)):
         a, b = old.get(k, 0), new.get(k, 0)
+        if a == b:
+            continue
+        if a == 0:
+            added.append(f"{k} x{b}")
+        elif b == 0:
+            removed.append(f"{k} (was x{a})")
+        else:
+            changed.append(f"{k}: {a} -> {b}")
+    out = []
+    if added:
+        out.append(f"  added:   {', '.join(added)}")
+    if removed:
+        out.append(f"  removed: {', '.join(removed)}")
+    if changed:
+        out.append(f"  changed: {', '.join(changed)}")
+    return "\n".join(out)
+
+
+def _aval_diff(old: list, new: list) -> List[str]:
+    """Positional input-signature delta: only the argument slots that
+    actually drifted, `<absent>` marking arity changes."""
+    out = []
+    for i in range(max(len(old), len(new))):
+        a = old[i] if i < len(old) else "<absent>"
+        b = new[i] if i < len(new) else "<absent>"
         if a != b:
-            out.append(f"{k}: {a} -> {b}")
-    return ", ".join(out)
+            out.append(f"  [{i}] {a} -> {b}")
+    return out
 
 
 def main(argv=None) -> int:
@@ -269,7 +297,10 @@ def main(argv=None) -> int:
     for p in problems:
         print(f"audit: {p}")
     if problems:
-        print(f"audit: {len(problems)} problem(s)", file=sys.stderr)
+        print(f"audit: {len(problems)} problem(s) — review the diff "
+              f"above, then bless intended drift with "
+              f"`python -m repro.analysis.audit --update` "
+              f"(make audit-update)", file=sys.stderr)
         return 1
     print(f"audit: {len(manifest['entrypoints'])} entrypoints clean "
           f"(jax {jax.__version__})", file=sys.stderr)

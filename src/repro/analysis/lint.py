@@ -31,23 +31,31 @@ __all__ = ["lint_paths", "lint_text", "main"]
 
 _SUPPRESS = re.compile(
     r"#\s*saath:\s*lint-ok\(([a-z0-9-]+)\)(?::\s*(\S.*))?")
-_DEF_LINE = re.compile(r"^\s*(?:async\s+)?def\s")
 
 
 def _suppressions(src: str, path: str
                   ) -> Tuple[Dict[int, str], List[Finding], int]:
-    """Map line -> suppressed rule. A suppression on a def line covers
-    the def's whole span. Returns (line map, bad-suppression findings,
-    count of suppression comments)."""
+    """Map line -> suppressed rule. A suppression anywhere on a def's
+    HEADER — a decorator line, the `def` line, or a continuation line
+    of a multi-line signature — covers the def's whole span; one on a
+    body line stays line-local. Returns (line map, bad-suppression
+    findings, count of suppression comments)."""
     import ast
 
     lines = src.splitlines()
-    spans: List[Tuple[int, int]] = []
+    # (header_lo, header_hi, end): header runs from the first
+    # decorator through the last signature line (the line before the
+    # body starts — or the def line itself for one-liners)
+    spans: List[Tuple[int, int, int]] = []
     try:
         tree = ast.parse(src, filename=path)
         for node in ast.walk(tree):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                spans.append((node.lineno,
+                header_lo = min([node.lineno]
+                                + [d.lineno for d in node.decorator_list])
+                header_hi = max(node.lineno,
+                                node.body[0].lineno - 1)
+                spans.append((header_lo, header_hi,
                               getattr(node, "end_lineno", node.lineno)))
     except SyntaxError:
         pass
@@ -67,11 +75,13 @@ def _suppressions(src: str, path: str
                 f"`# saath: lint-ok({rule}): <why>`"))
             continue
         targets = [i]
-        if _DEF_LINE.match(line):
-            for lo, hi in spans:
-                if lo == i:
-                    targets = list(range(lo, hi + 1))
-                    break
+        # innermost def whose header contains this line wins
+        best = None
+        for lo, hi, end in spans:
+            if lo <= i <= hi and (best is None or lo > best[0]):
+                best = (lo, end)
+        if best is not None:
+            targets = list(range(best[0], best[1] + 1))
         for ln in targets:
             by_line[ln] = rule
     return by_line, bad, count

@@ -295,6 +295,7 @@ class SessionPool:
     def sessions(self) -> list:
         return [s for s in self._sessions if s is not None]
 
+    @_io_accounted
     def session(self, params: Optional[SchedulerParams] = None,
                 mechanisms: Optional[dict] = None):
         """Admit a new tenant session — with its OWN scheduler
@@ -308,6 +309,9 @@ class SessionPool:
                 f"SessionPool is full ({self.max_sessions} sessions); "
                 f"release one (or raise max_sessions) to admit more")
         p, ep, feat = self._resolve(params, mechanisms)
+        # admission commits the tenant's EngineParams row to device —
+        # a sanctioned crossing, counted like every other upload
+        self.io["upload_bytes"] += _tree_nbytes(ep)
         row = self._free.pop(0)
         sess = SaathSession(p, num_ports=self.num_ports,
                             backend="jax", kernel=self.kernel,

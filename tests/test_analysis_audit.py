@@ -50,10 +50,53 @@ def test_primitive_drift_is_flagged_under_same_jax_version():
                for p in problems), problems
 
 
+def test_primitive_drift_diff_is_grouped_by_direction():
+    # toy -> drifted adds `sin`; drifted -> toy removes it. The diff
+    # must say WHICH, not dump both manifests.
+    manifest = au.build_manifest({"toy": _toy_entry})
+    problems = au.check_manifest(manifest, {"toy": _toy_entry_drifted})
+    drift = next(p for p in problems if "primitive-count drift" in p)
+    assert "added:" in drift and "sin x1" in drift
+    assert "removed:" not in drift
+    back = au.check_manifest(au.build_manifest(
+        {"toy": _toy_entry_drifted}), {"toy": _toy_entry})
+    drift = next(p for p in back if "primitive-count drift" in p)
+    assert "removed:" in drift and "sin" in drift
+
+
 def test_aval_signature_drift_is_flagged():
     manifest = au.build_manifest({"toy": _toy_entry})
     problems = au.check_manifest(manifest, {"toy": _toy_entry_reshaped})
     assert any("input signature drift" in p for p in problems), problems
+
+
+def test_aval_drift_diff_is_positional():
+    manifest = au.build_manifest({"toy": _toy_entry})
+    problems = au.check_manifest(manifest, {"toy": _toy_entry_reshaped})
+    drift = next(p for p in problems if "input signature drift" in p)
+    # only the drifted slot, by position, old -> new
+    assert "[0]" in drift and "->" in drift
+    assert "float32[3]" in drift and "float32[4]" in drift
+
+
+def test_aval_diff_marks_arity_changes():
+    assert au._aval_diff(["f32[3]"], ["f32[3]", "i32[]"]) == \
+        ["  [1] <absent> -> i32[]"]
+    assert au._aval_diff(["f32[3]", "i32[]"], ["f32[3]"]) == \
+        ["  [1] i32[] -> <absent>"]
+
+
+def test_gate_failure_prints_the_update_hint(tmp_path, monkeypatch,
+                                             capsys):
+    monkeypatch.setattr(au, "ENTRYPOINTS", {"toy": _toy_entry})
+    path = tmp_path / "manifest.json"
+    assert au.main(["--update", "--manifest", str(path)]) == 0
+    monkeypatch.setattr(au, "ENTRYPOINTS", {"toy": _toy_entry_drifted})
+    capsys.readouterr()
+    assert au.main(["--manifest", str(path)]) == 1
+    captured = capsys.readouterr()
+    assert "audit-update" in captured.err        # the one-line hint
+    assert "added:" in captured.out              # the structured diff
 
 
 def test_missing_and_stale_entries_are_flagged():

@@ -293,6 +293,56 @@ def test_def_line_suppression_covers_function_body():
     assert "traced-np-call" not in {f.rule for f in lint_text(src)}
 
 
+def test_decorator_line_suppression_covers_function_body():
+    src = ("import jax\nimport numpy as np\n\n"
+           "@jax.jit  # saath: lint-ok(traced-np-call): fixture\n"
+           "def f(x):\n"
+           "    return np.asarray(x)\n")
+    assert "traced-np-call" not in {f.rule for f in lint_text(src)}
+
+
+def test_multiline_signature_suppression_covers_function_body():
+    src = ("import jax\nimport numpy as np\n\n"
+           "@jax.jit\n"
+           "def f(\n"
+           "    x,  # saath: lint-ok(traced-np-call): fixture\n"
+           "):\n"
+           "    return np.asarray(x)\n")
+    assert "traced-np-call" not in {f.rule for f in lint_text(src)}
+
+
+def test_body_line_suppression_stays_line_local():
+    # a suppression INSIDE the body silences its own line only --
+    # header coverage must not leak downward from body comments
+    src = ("import jax\nimport numpy as np\n\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    y = np.asarray(x)  "
+           "# saath: lint-ok(traced-np-call): this line\n"
+           "    return np.square(x)\n")
+    findings = [f for f in lint_text(src)
+                if f.rule == "traced-np-call"]
+    assert [f for f in findings if f.line == 7]     # np.square survives
+    assert not [f for f in findings if f.line == 6]
+
+
+def test_nested_def_header_suppression_covers_inner_span_only():
+    # the inner def's header suppression must not blanket the outer
+    # function's later lines
+    src = ("import jax\nimport numpy as np\n\n"
+           "@jax.jit\n"
+           "def outer(x):\n"
+           "    def inner(y):  "
+           "# saath: lint-ok(traced-np-call): inner only\n"
+           "        return np.asarray(y)\n"
+           "    z = inner(x)\n"
+           "    return np.square(z)\n")
+    findings = [f for f in lint_text(src)
+                if f.rule == "traced-np-call"]
+    assert [f for f in findings if f.line == 9]     # outer's np.square
+    assert not [f for f in findings if f.line == 7]
+
+
 # ---- contract rules ------------------------------------------------------
 
 def _fake_tree(tmp_path, pool_body):

@@ -295,6 +295,35 @@ def test_pool_heterogeneous_params_bitwise_vs_standalone():
                pooled_sessions[1].snapshot().values())
 
 
+def test_pool_async_ctl_download_charged_once_at_sync_point():
+    """ISSUE 8 satellite: under async dispatch a chain of K advances
+    enqueues K dispatches but moves ZERO control bytes — the deferred
+    (tick, finished) download is charged exactly once, at `_sync_ctl`
+    time (the first poll), not per dispatch."""
+    pool = SessionPool(PARAMS, num_ports=PORTS, max_sessions=2)
+    assert pool._async                      # async is the default
+    a = pool.session()
+    # one huge flow: nothing completes, so poll gathers no rows and the
+    # only download in play is the ctl mirror itself
+    a.submit([Coflow(0, 0.0, [Flow(0, 0, 1, 500.0)])])
+    pool.advance(0.5)                       # first upload + parked ctl
+    base_ctl = pool.io["ctl_bytes"]
+    base_disp = pool.io["dispatches"]
+    for _ in range(5):
+        pool.advance(0.5)                   # chain: re-park, no sync
+    assert pool._ctl is not None
+    assert pool.io["dispatches"] == base_disp + 5
+    assert pool.io["ctl_bytes"] == base_ctl, \
+        "async dispatch paid a ctl download at dispatch time"
+    expect = pool._ticks.nbytes + pool._fin.nbytes
+    assert a.poll() == []                   # the sync point
+    assert pool._ctl is None                # handle consumed
+    assert pool.io["ctl_bytes"] == base_ctl + expect, \
+        "one chain of K advances must cost exactly ONE ctl download"
+    assert a.poll() == []                   # no parked ctl: no charge
+    assert pool.io["ctl_bytes"] == base_ctl + expect
+
+
 # ---- the serving front door (launch.serve.CoflowServer) ----------------
 
 
