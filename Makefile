@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-slow test-all coverage lint audit audit-update coherence coherence-update pool-fuzz api-smoke pool-smoke pool-sharded bench-smoke bench
+.PHONY: test test-slow test-all coverage lint audit audit-update coherence coherence-update topology topology-full pool-fuzz api-smoke pool-smoke pool-sharded bench-smoke bench
 
 test:            ## fast tier-1 suite (slow integration tests excluded)
 	$(PY) -m pytest -q
@@ -25,6 +25,14 @@ coherence:       ## slab coherence gate: typestate checker vs analysis/coherence
 
 coherence-update: ## re-extract serving-plane effects and rewrite the coherence manifest (rule findings still block)
 	$(PY) -m repro.analysis.coherence --update
+
+topology:        ## fabric-model gates: bitwise big-switch guard + leaf-spine suites + oversub sweep (quick)
+	$(PY) -m pytest -q tests/test_fabric_regression.py tests/test_topology.py
+	$(PY) -m benchmarks.fig_oversub --engine=jax
+
+topology-full:   ## nightly fabric-model tier: slow fleet/Pallas parity + full oversub sweep
+	$(PY) -m pytest -q -m slow tests/test_topology.py
+	$(PY) -m benchmarks.fig_oversub --engine=jax --full
 
 test-slow:       ## only the @pytest.mark.slow integration tests
 	$(PY) -m pytest -q -m slow

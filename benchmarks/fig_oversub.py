@@ -1,0 +1,96 @@
+"""Oversubscription sweep: CCT degradation under a leaf-spine fabric.
+
+Beyond-paper driver for the ISSUE-9 FabricModel layer: the paper's
+big-switch assumption (§3) is exact at 1:1 oversubscription — the
+uplink residual always dominates the sum of its subtended port
+residuals — but real leaf-spine fabrics run 2:1..4:1, where the shared
+uplinks/downlinks bind and every policy's CCTs stretch. This driver
+sweeps oversub x policy lane through BOTH planes:
+
+* jax lane: a fleet of traces replayed through the vmapped engine, one
+  `Scenario(topology=LeafSpine(...))` per (oversub, policy) cell —
+  "aalo" here is the coordinated-FIFO ablation of the jitted Saath
+  coordinator (lcof=0, per-flow thresholds off), the jax plane's
+  closest Aalo analogue;
+* numpy lane: the event-driven reference on one trace per cell (the
+  true `aalo` host policy), gating that the degradation is a property
+  of the fabric model, not of one engine.
+
+Every cell is recorded to BENCH_api.json via `benchmarks.common.record`
+(keyed by scenario hash — the topology is part of the hash).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench, cli_bench, emit, record
+from repro.api import Scenario
+from repro.api import run as api_run
+from repro.core.params import SchedulerParams
+from repro.fabric.topology import LeafSpine
+from repro.traces.synth import tiny_trace
+
+OVERSUBS = (1.0, 2.0, 4.0)
+HOSTS_PER_LEAF = 4
+
+
+def _fleet(quick: bool):
+    n = 4 if quick else 16
+    return tuple(tiny_trace(30, 16, seed=s, load=0.8) for s in range(n))
+
+
+def run(bench: Bench, engine: str = "jax"):
+    p = SchedulerParams()
+    traces = _fleet(bench.quick)
+    rows = []
+
+    # jax lane: fleet x (saath, coordinated-FIFO ablation) x oversub
+    lanes = {"saath": None,
+             "aalo-like": dict(lcof=False, per_flow_threshold=False)}
+    jax_avg = {}
+    for lane, mech in lanes.items():
+        for ov in OVERSUBS:
+            sc = Scenario(policy="saath", engine="jax", params=p,
+                          traces=traces, mechanisms=mech,
+                          topology=LeafSpine(
+                              hosts_per_leaf=HOSTS_PER_LEAF, oversub=ov),
+                          label=f"oversub-{lane}-{ov:g}")
+            res = api_run(sc)
+            record("fig_oversub_jax", res, lane=lane, oversub=ov)
+            avg = float(np.nanmean(res.avg_cct))
+            jax_avg[(lane, ov)] = avg
+            rows.append({"engine": "jax", "lane": lane, "oversub": ov,
+                         "avg_cct": avg,
+                         "wall_seconds": res.wall_seconds})
+
+    # numpy lane: one trace, the true host policies
+    for lane in ("saath", "aalo"):
+        for ov in OVERSUBS:
+            sc = Scenario(policy=lane, engine="numpy", params=p,
+                          trace=traces[0],
+                          topology=LeafSpine(
+                              hosts_per_leaf=HOSTS_PER_LEAF, oversub=ov),
+                          label=f"oversub-{lane}-{ov:g}")
+            res = api_run(sc)
+            record("fig_oversub_numpy", res, lane=lane, oversub=ov)
+            rows.append({"engine": "numpy", "lane": lane, "oversub": ov,
+                         "avg_cct": float(np.nanmean(res.avg_cct)),
+                         "wall_seconds": res.wall_seconds})
+
+    emit("fig_oversub", rows)
+
+    # the fabric model must BITE: 4:1 visibly worse than 1:1, per lane,
+    # per plane (this is the ISSUE-9 acceptance gate)
+    for eng in ("jax", "numpy"):
+        for lane in ({"jax": ("saath", "aalo-like"),
+                      "numpy": ("saath", "aalo")}[eng]):
+            r = {row["oversub"]: row["avg_cct"] for row in rows
+                 if row["engine"] == eng and row["lane"] == lane}
+            assert r[4.0] > 1.1 * r[1.0], \
+                f"{eng}/{lane}: 4:1 should degrade CCTs: {r}"
+    return rows
+
+
+if __name__ == "__main__":
+    bench, engine = cli_bench()
+    run(bench, engine)

@@ -49,17 +49,19 @@ __all__ = ["ENTRYPOINTS", "build_manifest", "check_manifest",
 # code paths (B>1 rows, padding present)
 B, F, C, P = 2, 8, 4, 4
 CHUNK = 4
-FEATURES = (True, True, False)
+FEATURES = (True, True, False, False)
+# leaf-spine canonical slab: P ports over Lf leaves (2 hosts per leaf)
+LF = 2
 
 
-def _canonical_slab():
+def _canonical_slab(leaf_links: int = 0):
     from repro.core import jax_coordinator as jc
     from repro.core.params import SchedulerParams
     from repro.fabric.jax_engine import EngineParams, EngineState
     from repro.traces.batch import empty_batch
 
     tb = empty_batch(B, flow_capacity=F, coflow_capacity=C,
-                     port_capacity=P)
+                     port_capacity=P, leaf_links=leaf_links)
     ep1 = EngineParams.from_scheduler(SchedulerParams())
     ep_rows = jax.tree_util.tree_map(
         lambda x: jnp.stack([x] * B), ep1)
@@ -103,7 +105,7 @@ def _entry_session_plan_tick():
     mask[0] = True
     return jax.make_jaxpr(
         lambda s, t, e, m: session_plan_tick(
-            s, t, e, kernel=None, features=(True, False, False),
+            s, t, e, kernel=None, features=(True, False, False, False),
             row_mask=m))(state, tb, ep_rows, mask)
 
 
@@ -120,6 +122,20 @@ def _entry_simulate_sweep():
         lambda s, t, e: _run_chunk(
             s, t, e, chunk=CHUNK, kernel=None, sweep=False,
             features=FEATURES))(offline, tb, ep1)
+
+
+def _entry_session_advance_leafspine():
+    """The same while_loop block on a leaf-spine slab (Lf link leaves
+    present, the link admission/WC machinery compiled in) — the
+    topology-pinned pool's hot path."""
+    from repro.fabric.jax_engine import _run_session_block
+
+    tb, _, ep_rows, state = _canonical_slab(leaf_links=LF)
+    ne = np.full((B,), 4.0, np.float32)
+    return jax.make_jaxpr(
+        lambda s, t, e, n, m: _run_session_block(
+            s, t, e, n, m, kernel=None, features=FEATURES))(
+        state, tb, ep_rows, ne, np.int32(64))
 
 
 def _entry_scatter_rows():
@@ -142,6 +158,7 @@ def _entry_gather_rows():
 
 ENTRYPOINTS: Dict[str, Callable] = {
     "session_advance": _entry_session_advance,
+    "session_advance_leafspine": _entry_session_advance_leafspine,
     "session_plan_tick": _entry_session_plan_tick,
     "simulate_sweep": _entry_simulate_sweep,
     "scatter_rows": _entry_scatter_rows,

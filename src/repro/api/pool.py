@@ -173,11 +173,20 @@ class SessionPool:
                  chunk: int = 32, min_coflow_capacity: int = 16,
                  min_flow_capacity: int = 64, shards: int = 1,
                  async_dispatch: bool = True,
-                 features: Optional[tuple] = None):
+                 features: Optional[tuple] = None,
+                 topology=None):
         from repro.fabric import jax_engine
+        from repro.fabric.topology import (leaf_links_for,
+                                           normalize_topology)
 
         self._je = jax_engine
         self.num_ports = int(num_ports)
+        # fabric model, PINNED at construction like num_ports/K: the
+        # link segment layout is part of the slab shape (Lf leaves) and
+        # wc_maxmin is a compiled structure switch, so heterogeneous
+        # topologies cannot share one slab without recompiles
+        self.topology = normalize_topology(topology)
+        self._Lf = leaf_links_for(self.topology, self.num_ports)
         self.kernel = kernel
         self.chunk = int(chunk)
         self.max_sessions = int(max_sessions)
@@ -200,13 +209,18 @@ class SessionPool:
             self._mesh = None
             self._sharding = None
         self._async = bool(async_dispatch)
-        if features is not None and (len(features) != 3
+        if features is not None and len(features) == 3:
+            # pre-topology callers pinned (pfw, dyn, abl); the fabric
+            # fill switch rides the pool's own topology
+            features = tuple(features) + (
+                getattr(self.topology, "wc_fill", "greedy") == "maxmin",)
+        if features is not None and (len(features) != 4
                                      or not all(isinstance(b, (bool,
                                                                np.bool_))
                                                 for b in features)):
             raise ValueError(
-                "features must be a 3-tuple of bools "
-                "(per_flow_wc, with_dynamics, with_ablations)")
+                "features must be a 4-tuple of bools (per_flow_wc, "
+                "with_dynamics, with_ablations, wc_maxmin)")
         self._pinned = tuple(bool(b) for b in features) \
             if features is not None else None
 
@@ -273,9 +287,10 @@ class SessionPool:
             p, lcof=lcof, per_flow_threshold=per_flow)
         feat = self._je.features_for(
             p, fidelity=self._fidelity, lcof=lcof,
-            per_flow_threshold=per_flow)
+            per_flow_threshold=per_flow, topology=self.topology)
         if self._pinned is not None:
-            names = ("per_flow_wc", "with_dynamics", "with_ablations")
+            names = ("per_flow_wc", "with_dynamics", "with_ablations",
+                     "wc_maxmin")
             for i, name in enumerate(names):
                 if feat[i] and not self._pinned[i]:
                     raise ValueError(
@@ -315,7 +330,8 @@ class SessionPool:
         row = self._free.pop(0)
         sess = SaathSession(p, num_ports=self.num_ports,
                             backend="jax", kernel=self.kernel,
-                            chunk=self.chunk, _pool=self, _row=row)
+                            chunk=self.chunk, topology=self.topology,
+                            _pool=self, _row=row)
         self._sessions[row] = sess
         self._blank_rows.discard(row)
         self._row_ep[row] = ep
@@ -574,7 +590,7 @@ class SessionPool:
                 feats = [self._base_features] + \
                     [self._row_feat[s._row] for s in self.sessions]
                 self._features_now = tuple(
-                    any(f[i] for f in feats) for i in range(3))
+                    any(f[i] for f in feats) for i in range(4))
             # pinned features stay pinned: admission already validated
             # every tenant against them, so membership churn can never
             # change the compiled structure (no recompiles)
@@ -646,7 +662,8 @@ class SessionPool:
             self._scratch = empty_batch(
                 1, flow_capacity=self._F_cap,
                 coflow_capacity=self._C_cap,
-                port_capacity=self.num_ports)
+                port_capacity=self.num_ports,
+                leaf_links=self._Lf)
         return self._scratch
 
     def _blank_scratch(self):
@@ -666,7 +683,8 @@ class SessionPool:
         tb = empty_batch(self.max_sessions,
                          flow_capacity=self._F_cap,
                          coflow_capacity=self._C_cap,
-                         port_capacity=self.num_ports)
+                         port_capacity=self.num_ports,
+                         leaf_links=self._Lf)
         rows = [self._blank_state_row()
                 for _ in range(self.max_sessions)]
         self._blank_rows.clear()
@@ -756,7 +774,8 @@ class SessionPool:
             s._epoch = s._tick
         table = s._rebuild_table()
         pack_row(tb, r, table,
-                 arrival_rank=[e.rank for e in s._slots])
+                 arrival_rank=[e.rank for e in s._slots],
+                 topology=self.topology if self._Lf else None)
         s._flow_lo = table.flow_lo.copy()
         s._flow_hi = table.flow_hi.copy()
         s._tb_dirty = False

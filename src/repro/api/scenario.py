@@ -68,6 +68,14 @@ class Scenario:
     mechanisms: Optional[Mapping] = None
     policy_kwargs: Optional[Mapping] = None
     max_jump: Optional[float] = None   # numpy: Simulator re-eval cadence
+    topology: Optional[object] = None  # fabric model (fabric.topology);
+    #                                    None/BigSwitch() = the paper's
+    #                                    big switch, LeafSpine(...) adds
+    #                                    per-uplink/downlink capacities
+    #                                    on BOTH engines
+    use_pallas: bool = False           # jax: route contention/max-min
+    #                                    through the Pallas kernels
+    #                                    (interpret mode off-TPU)
     warm_timing: bool = False          # jax: extra runs split compile
     #                                    time out; no-op on numpy (no
     #                                    compile to split)
@@ -82,7 +90,8 @@ class Scenario:
             h.update(repr(parts).encode())
 
         upd(self.policy, self.engine, self.fidelity, self.label,
-            dataclasses.astuple(self.params), self.max_jump)
+            dataclasses.astuple(self.params), self.max_jump,
+            repr(self.topology), self.use_pallas)
         if self.sweep is not None:
             upd(tuple(dataclasses.astuple(p) for p in self.sweep))
         upd(tuple(sorted((self.mechanisms or {}).items())),
@@ -282,6 +291,8 @@ def run(scenario: Scenario) -> Result:
             "the numpy reference replay is inherently flow-fidelity; "
             'fidelity="coflow" is the jax engine\'s throughput mode')
     resolve_policy(sc.policy, sc.engine)   # raises with available list
+    from repro.fabric.topology import normalize_topology
+    normalize_topology(sc.topology)        # raises on a non-fabric object
     traces = resolve_traces(sc)
     settings = list(sc.sweep) if sc.sweep is not None else None
     if settings is not None and len(traces) != 1:
@@ -312,7 +323,8 @@ def _run_numpy(sc: Scenario, traces: List[Trace],
                 pol_kw[k] = mech[k]
         table = FlowTable.from_trace(trace, params.port_bw)
         policy = make_policy(sc.policy, params, **pol_kw)
-        res = Simulator(params, max_jump=sc.max_jump).run(table, policy)
+        res = Simulator(params, max_jump=sc.max_jump,
+                        topology=sc.topology).run(table, policy)
         return res, params
 
     t0 = time.perf_counter()
@@ -365,8 +377,9 @@ def _run_jax(sc: Scenario, traces: List[Trace], settings) -> Result:
                 "scenarios")
 
         def go():
-            return jax_engine.simulate_sweep(traces[0], settings,
-                                             fidelity=sc.fidelity)
+            return jax_engine.simulate_sweep(
+                traces[0], settings, fidelity=sc.fidelity,
+                topology=sc.topology, use_pallas=sc.use_pallas)
         row_traces = [traces[0]] * len(settings)
         params_rows = settings
         counts = [(len(traces[0].coflows), traces[0].num_flows)
@@ -374,7 +387,8 @@ def _run_jax(sc: Scenario, traces: List[Trace], settings) -> Result:
     else:
         def go():
             return jax_engine.simulate_batch(
-                traces, sc.params, fidelity=sc.fidelity, **mech)
+                traces, sc.params, fidelity=sc.fidelity,
+                topology=sc.topology, use_pallas=sc.use_pallas, **mech)
         row_traces = traces
         params_rows = [sc.params] * len(traces)
         counts = [(len(t.coflows), t.num_flows) for t in traces]

@@ -103,15 +103,22 @@ class SaathSession:
                  fidelity: str = "flow", kernel: Optional[str] = None,
                  chunk: int = 32, min_coflow_capacity: int = 16,
                  min_flow_capacity: int = 64,
+                 topology=None,
                  _pool=None, _row: Optional[int] = None):
         if backend not in ("jax", "numpy"):
             raise ValueError(
                 f"unknown backend {backend!r}; available: jax, numpy")
         from repro.api.scenario import check_mechanisms
+        from repro.fabric.topology import normalize_topology
 
         mech = check_mechanisms(mechanisms)
         self.num_ports = int(num_ports)
         self.backend = backend
+        # fabric model: threaded to the private pool's slab (jax) or the
+        # policy's allocation walk (numpy); a pooled session inherits
+        # the pool's pinned topology
+        self.topology = normalize_topology(topology) if _pool is None \
+            else _pool.topology
         self.kernel = kernel
         self.chunk = int(chunk)
 
@@ -149,7 +156,8 @@ class SaathSession:
                     mechanisms=mech, fidelity=fidelity, kernel=kernel,
                     chunk=chunk,
                     min_coflow_capacity=min_coflow_capacity,
-                    min_flow_capacity=min_flow_capacity)
+                    min_flow_capacity=min_flow_capacity,
+                    topology=self.topology)
                 pool._adopt(self)
                 self._pool = pool
                 self._row = 0
@@ -164,7 +172,11 @@ class SaathSession:
                                            "work_conservation")
                       if k in mech}
             self._policy = make_policy("saath", self.params, **pol_kw)
-            self._sim = Simulator(self.params)
+            # the incremental loop calls policy.schedule directly, so
+            # the topology is installed on the policy here (Simulator
+            # only installs it inside run())
+            self._policy.topology = self.topology
+            self._sim = Simulator(self.params, topology=self.topology)
             self._table: Optional[FlowTable] = None
             # a schedule whose event horizon extends past the last
             # advance target: (evaluation instant, next-event instant).

@@ -142,6 +142,11 @@ class CoflowBatch(NamedTuple):
     #                      live flows (§4.3 re-queue candidates)
     m_dyn: jax.Array | None = None  # (C,) f32 estimated remaining
     #                      length m_hat from the finished-flow median
+    # leaf-spine fabric (DESIGN.md §11; None = big switch, the link
+    # machinery is compiled out): per-(coflow, extra-link) live counts
+    # and link capacities, uplinks stacked before downlinks (Lx = 2*Lf)
+    cnt_x: jax.Array | None = None  # (C, Lx) f32
+    bw_x: jax.Array | None = None   # (Lx,) f32
 
 
 class FlowView(NamedTuple):
@@ -154,6 +159,11 @@ class FlowView(NamedTuple):
     src: jax.Array      # (F,) int32 sender port
     dst: jax.Array      # (F,) int32 receiver port
     live: jax.Array     # (F,) bool
+    # leaf-spine link ids (None = big switch): LOCAL leaf index in
+    # [0, Lf], with Lf the "touches no shared link" sentinel — exactly
+    # the TraceBatch.link_up/link_dn encoding
+    up: jax.Array | None = None   # (F,) int32
+    dn: jax.Array | None = None   # (F,) int32
 
 
 def _queue_of(value: jax.Array, th: jax.Array) -> jax.Array:
@@ -165,20 +175,22 @@ def _queue_of(value: jax.Array, th: jax.Array) -> jax.Array:
                             side="right").astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("cp", "kernel"))
+@functools.partial(jax.jit,
+                   static_argnames=("cp", "kernel", "wc_fill"))
 def schedule_tick(state: CoordState, batch: CoflowBatch, now: jax.Array,
                   *, cp: CoordParams, kernel: str | None = None,
-                  flows: FlowView | None = None):
+                  flows: FlowView | None = None,
+                  wc_fill: str = "greedy"):
     """One Fig. 7 coordinator tick. Returns (new_state, out) with
     per-coflow equal rates (MADD), admission mask, queue, contention, and
     (when a FlowView is supplied) per-flow work-conservation rates."""
     return tick_core(state, batch, now, DynCoordParams.from_cp(cp),
-                     kernel=kernel, flows=flows)
+                     kernel=kernel, flows=flows, wc_fill=wc_fill)
 
 
 def tick_core(state: CoordState, batch: CoflowBatch, now: jax.Array,
               dp: DynCoordParams, *, kernel: str | None = None,
-              flows: FlowView | None = None):
+              flows: FlowView | None = None, wc_fill: str = "greedy"):
     """The Fig. 7 tick with fully traced parameters (un-jitted; callers
     embed it in their own jit/scan/vmap — fabric.jax_engine scans it)."""
     th = dp.thresholds
@@ -254,6 +266,11 @@ def tick_core(state: CoordState, batch: CoflowBatch, now: jax.Array,
     min_rate = dp.min_rate_frac * dp.bw_ref
     cnt = jnp.concatenate([batch.cnt_s, batch.cnt_r], axis=1)   # (C, 2P)
     avail0 = jnp.concatenate([batch.bw_s, batch.bw_r])          # (2P,)
+    if batch.cnt_x is not None:
+        # leaf-spine: the MADD min also runs over the coflow's
+        # uplink/downlink counts — same arithmetic, a wider concat
+        cnt = jnp.concatenate([cnt, batch.cnt_x], axis=1)  # (C, 2P+Lx)
+        avail0 = jnp.concatenate([avail0, batch.bw_x])
     has = cnt > 0
     inv = jnp.where(has, 1.0 / jnp.maximum(cnt, 1e-9), 0.0)
     bigm = jnp.where(has, 0.0, BIG)
@@ -305,30 +322,86 @@ def tick_core(state: CoordState, batch: CoflowBatch, now: jax.Array,
         # the compacted sequential walk wins on XLA CPU — the body is
         # two gathers + two scalar updates.
         wc_rate = zC
-        avail_s, avail_r = avail[:P], avail[P:]
+        avail_s, avail_r = avail[:P], avail[P:2 * P]
         missed_c = hp & ~admitted
-        invp = jnp.argsort(perm)          # priority rank of each coflow
         F = flows.src.shape[0]
         cand0 = flows.live & missed_c[flows.cid] & wc_on
-        # three separate sort keys (candidates first, coflow priority,
-        # flow index) — a fused invp[cid]*F + i key would overflow int32
-        # near the advertised 4k-coflow x 256k-flow scale
-        flist = jnp.lexsort((jnp.arange(F), invp[flows.cid],
-                             (~cand0).astype(jnp.int32)))
-        n_cand = cand0.sum().astype(jnp.int32)
+        if wc_fill == "maxmin":
+            # max-min fair water-filling over the leftover flows (the
+            # in-network allocation family), via the shared
+            # `kernels.ops.maxmin_rates` backend — Pallas on TPU (or
+            # force='interpret'/'pallas' through `kernel`), jnp
+            # progressive filling otherwise. Incidence rows stack ports
+            # then uplinks/downlinks; the sentinel leaf id Lf one-hots
+            # to a zero column, so intra-leaf flows see ports only.
+            a_send = jax.nn.one_hot(flows.src, P, axis=0,
+                                    dtype=jnp.float32)
+            a_recv = jax.nn.one_hot(flows.dst, P, axis=0,
+                                    dtype=jnp.float32)
+            bw_s_ext, bw_r_ext = avail_s, avail_r
+            if flows.up is not None:
+                Lf = batch.cnt_x.shape[1] // 2
+                a_send = jnp.concatenate(
+                    [a_send, jax.nn.one_hot(flows.up, Lf, axis=0,
+                                            dtype=jnp.float32)])
+                a_recv = jnp.concatenate(
+                    [a_recv, jax.nn.one_hot(flows.dn, Lf, axis=0,
+                                            dtype=jnp.float32)])
+                bw_s_ext = jnp.concatenate([avail_s, avail[2 * P:
+                                                           2 * P + Lf]])
+                bw_r_ext = jnp.concatenate([avail_r, avail[2 * P + Lf:]])
+            wc_flow = ops.maxmin_rates(
+                a_send, a_recv, cand0, bw_s_ext, bw_r_ext, force=kernel)
+            wc_flow = jnp.where(cand0, wc_flow, 0.0)
+        else:
+            invp = jnp.argsort(perm)      # priority rank of each coflow
+            # three separate sort keys (candidates first, coflow
+            # priority, flow index) — a fused invp[cid]*F + i key would
+            # overflow int32 near the advertised 4k x 256k scale
+            flist = jnp.lexsort((jnp.arange(F), invp[flows.cid],
+                                 (~cand0).astype(jnp.int32)))
+            n_cand = cand0.sum().astype(jnp.int32)
 
-        def wc_flow_body(s):
-            i, a_s, a_r, wcf = s
-            f = flist[i]
-            sp, dq = flows.src[f], flows.dst[f]
-            r = jnp.maximum(jnp.minimum(a_s[sp], a_r[dq]), 0.0)
-            return (i + 1, a_s.at[sp].add(-r), a_r.at[dq].add(-r),
-                    wcf.at[f].set(r))
+            if flows.up is None:
+                def wc_flow_body(s):
+                    i, a_s, a_r, wcf = s
+                    f = flist[i]
+                    sp, dq = flows.src[f], flows.dst[f]
+                    r = jnp.maximum(jnp.minimum(a_s[sp], a_r[dq]), 0.0)
+                    return (i + 1, a_s.at[sp].add(-r),
+                            a_r.at[dq].add(-r), wcf.at[f].set(r))
 
-        _, _, _, wc_flow = jax.lax.while_loop(
-            lambda s: s[0] < n_cand, wc_flow_body,
-            (jnp.int32(0), avail_s, avail_r,
-             jnp.zeros((F,), jnp.float32)))
+                _, _, _, wc_flow = jax.lax.while_loop(
+                    lambda s: s[0] < n_cand, wc_flow_body,
+                    (jnp.int32(0), avail_s, avail_r,
+                     jnp.zeros((F,), jnp.float32)))
+            else:
+                # leaf-spine: the fill is also capped by the flow's
+                # uplink/downlink residuals. Sentinel leaf id Lf
+                # indexes a BIG extra slot, so intra-leaf flows are
+                # never link-capped (and the slot absorbs their
+                # subtracts harmlessly).
+                Lf = batch.cnt_x.shape[1] // 2
+                a_u0 = jnp.concatenate([avail[2 * P:2 * P + Lf],
+                                        BIG[None]])
+                a_d0 = jnp.concatenate([avail[2 * P + Lf:], BIG[None]])
+
+                def wc_flow_body(s):
+                    i, a_s, a_r, a_u, a_d, wcf = s
+                    f = flist[i]
+                    sp, dq = flows.src[f], flows.dst[f]
+                    u, d = flows.up[f], flows.dn[f]
+                    r = jnp.minimum(jnp.minimum(a_s[sp], a_r[dq]),
+                                    jnp.minimum(a_u[u], a_d[d]))
+                    r = jnp.maximum(r, 0.0)
+                    return (i + 1, a_s.at[sp].add(-r),
+                            a_r.at[dq].add(-r), a_u.at[u].add(-r),
+                            a_d.at[d].add(-r), wcf.at[f].set(r))
+
+                _, _, _, _, _, wc_flow = jax.lax.while_loop(
+                    lambda s: s[0] < n_cand, wc_flow_body,
+                    (jnp.int32(0), avail_s, avail_r, a_u0, a_d0,
+                     jnp.zeros((F,), jnp.float32)))
 
     new_state = CoordState(queue=jnp.where(act, q, state.queue),
                            deadline=deadline, running=admitted)

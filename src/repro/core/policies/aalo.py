@@ -24,7 +24,8 @@ class Aalo(Policy):
         # flow order: (queue, coflow arrival, flow id)
         order = np.lexsort((np.arange(live.shape[0]),
                             table.arrival[table.cid], q[table.cid]))
-        return greedy_flow_alloc(table, order, live)
+        return greedy_flow_alloc(table, order, live,
+                                 extra=self.fabric_binding(table))
 
     def progress_events(self, table: FlowTable, now: float,
                         rates: np.ndarray) -> float:
@@ -54,4 +55,5 @@ class CoordinatedFifo(Policy):
             return np.zeros(table.size.shape[0])
         order = np.lexsort((np.arange(live.shape[0]),
                             table.arrival[table.cid]))
-        return greedy_flow_alloc(table, order, live)
+        return greedy_flow_alloc(table, order, live,
+                                 extra=self.fabric_binding(table))

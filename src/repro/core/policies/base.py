@@ -13,6 +13,11 @@ class Policy:
     The simulator calls `schedule(table, now)` at every scheduling instant
     (δ-grid aligned). Policies may keep internal per-coflow bookkeeping
     (queues, deadlines); they must tolerate coflows finishing between calls.
+
+    `topology` is the fabric model the policy allocates against
+    (`fabric.topology`): None/BigSwitch keeps the pre-refactor per-port
+    arithmetic bitwise; `Simulator(topology=...)` installs it before
+    `reset`.
     """
 
     name = "base"
@@ -20,6 +25,15 @@ class Policy:
 
     def __init__(self, params: SchedulerParams):
         self.params = params
+        self.topology = None
+
+    def fabric_binding(self, table: FlowTable):
+        """The table-bound `ExtraLinks` of this policy's topology — None
+        for the big switch, so allocation code gates all link handling
+        on `extra is not None` (the bitwise-preservation pattern)."""
+        from repro.fabric.topology import bind_table
+
+        return bind_table(self.topology, table)
 
     def reset(self, table: FlowTable) -> None:  # pragma: no cover - trivial
         pass
@@ -40,7 +54,9 @@ def greedy_flow_alloc(table: FlowTable, flow_order: np.ndarray,
                       live: np.ndarray,
                       avail_s: np.ndarray | None = None,
                       avail_r: np.ndarray | None = None,
-                      rates: np.ndarray | None = None) -> np.ndarray:
+                      rates: np.ndarray | None = None, *,
+                      extra=None,
+                      avail_x: np.ndarray | None = None) -> np.ndarray:
     """Allocate each live flow min(avail_src, avail_dst) in the given order.
 
     This is the per-port 'strict priority + FIFO within queue' allocation
@@ -53,6 +69,13 @@ def greedy_flow_alloc(table: FlowTable, flow_order: np.ndarray,
     its sender and receiver port is allocated min(avail) — identical to the
     one-at-a-time result because no earlier flow shares its ports. Each
     round saturates >=1 port per allocated flow, so rounds are few.
+
+    `extra` (a `fabric.topology.ExtraLinks`) extends the walk to a
+    leaf-spine fabric: candidates must also see residual capacity on
+    their uplink/downlink, the first-toucher rule covers those links,
+    and the allocation is the min over all four resources. With
+    `extra=None` the pre-refactor body runs unchanged (bitwise — the
+    regression guard in tests/test_fabric_regression.py).
     """
     F = table.size.shape[0]
     rates = np.zeros(F) if rates is None else rates
@@ -60,27 +83,72 @@ def greedy_flow_alloc(table: FlowTable, flow_order: np.ndarray,
     avail_r = table.bw_recv.copy() if avail_r is None else avail_r
     src, dst = table.src, table.dst
     ordered = flow_order[live[flow_order]]
-    for _ in range(2 * table.num_ports + 2):
+    if extra is None:
+        for _ in range(2 * table.num_ports + 2):
+            if ordered.size == 0:
+                break
+            cand = ordered[(avail_s[src[ordered]] > 0.0)
+                           & (avail_r[dst[ordered]] > 0.0)]
+            if cand.size == 0:
+                break
+            # first occurrence of each port, in priority order
+            _, first_s = np.unique(src[cand], return_index=True)
+            _, first_r = np.unique(dst[cand], return_index=True)
+            is_first_s = np.zeros(cand.size, bool)
+            is_first_r = np.zeros(cand.size, bool)
+            is_first_s[first_s] = True
+            is_first_r[first_r] = True
+            take = cand[is_first_s & is_first_r]
+            r = np.minimum(avail_s[src[take]], avail_r[dst[take]])
+            rates[take] = r
+            # 'take' flows have unique src and dst among themselves
+            avail_s[src[take]] -= r
+            avail_r[dst[take]] -= r
+            ordered = cand[~(is_first_s & is_first_r)]
+        return rates
+    up, dn = extra.up, extra.dn
+    avail_x = extra.cap.copy() if avail_x is None else avail_x
+    Lx = avail_x.shape[0]
+    for _ in range(2 * (table.num_ports + Lx) + 2):
         if ordered.size == 0:
             break
-        cand = ordered[(avail_s[src[ordered]] > 0.0)
-                       & (avail_r[dst[ordered]] > 0.0)]
+        u, d = up[ordered], dn[ordered]
+        ok = (avail_s[src[ordered]] > 0.0) & (avail_r[dst[ordered]] > 0.0)
+        ok &= (u < 0) | (avail_x[np.maximum(u, 0)] > 0.0)
+        ok &= (d < 0) | (avail_x[np.maximum(d, 0)] > 0.0)
+        cand = ordered[ok]
         if cand.size == 0:
             break
-        # first occurrence of each port, in priority order
         _, first_s = np.unique(src[cand], return_index=True)
         _, first_r = np.unique(dst[cand], return_index=True)
-        is_first_s = np.zeros(cand.size, bool)
-        is_first_r = np.zeros(cand.size, bool)
-        is_first_s[first_s] = True
-        is_first_r[first_r] = True
-        take = cand[is_first_s & is_first_r]
+        # intra-leaf flows (no extra link) get unique pseudo-ids so the
+        # first-toucher dedup never groups them
+        fresh = Lx + np.arange(cand.size, dtype=np.int64)
+        uu = np.where(up[cand] >= 0, up[cand], fresh)
+        dd = np.where(dn[cand] >= 0, dn[cand], fresh)
+        _, first_u = np.unique(uu, return_index=True)
+        _, first_d = np.unique(dd, return_index=True)
+        is_first = np.zeros((4, cand.size), bool)
+        is_first[0, first_s] = True
+        is_first[1, first_r] = True
+        is_first[2, first_u] = True
+        is_first[3, first_d] = True
+        takeable = is_first.all(axis=0)
+        take = cand[takeable]
         r = np.minimum(avail_s[src[take]], avail_r[dst[take]])
+        tu, td = up[take], dn[take]
+        mu, md = tu >= 0, td >= 0
+        r = np.minimum(r, np.where(mu, avail_x[np.maximum(tu, 0)],
+                                   np.inf))
+        r = np.minimum(r, np.where(md, avail_x[np.maximum(td, 0)],
+                                   np.inf))
         rates[take] = r
-        # 'take' flows have unique src and dst among themselves
+        # 'take' flows have unique ports and links among themselves
         avail_s[src[take]] -= r
         avail_r[dst[take]] -= r
-        ordered = cand[~(is_first_s & is_first_r)]
+        avail_x[tu[mu]] -= r[mu]
+        avail_x[td[md]] -= r[md]
+        ordered = cand[~takeable]
     return rates
 
 
@@ -91,19 +159,37 @@ def coflow_flow_order(table: FlowTable, coflow_rank: np.ndarray) -> np.ndarray:
 
 
 def maxmin_waterfill(table: FlowTable, live: np.ndarray,
-                     max_iter: int | None = None) -> np.ndarray:
+                     max_iter: int | None = None, *,
+                     extra=None,
+                     avail_s: np.ndarray | None = None,
+                     avail_r: np.ndarray | None = None,
+                     avail_x: np.ndarray | None = None) -> np.ndarray:
     """Exact bipartite max-min fair rates (progressive filling).
 
     Models the steady-state throughput of per-flow TCP fair sharing —
-    the UC-TCP baseline (§6.1).
+    the UC-TCP baseline (§6.1). With `extra` (`fabric.topology
+    .ExtraLinks`) the filling also levels across leaf uplinks/downlinks
+    — the leaf-spine allocation the in-network papers assume, and the
+    loop `kernels/maxmin.py` accelerates on the jitted plane. Residual
+    `avail_*` vectors (updated in place) let Saath's `wc_fill="maxmin"`
+    water-fill only the leftover capacity of a partly-admitted fabric;
+    by default the walk starts from the full port bandwidth, bitwise
+    the pre-refactor behavior when `extra is None`.
     """
     F = table.size.shape[0]
     rates = np.zeros(F)
     frozen = ~live
-    avail_s = table.bw_send.copy()
-    avail_r = table.bw_recv.copy()
+    avail_s = table.bw_send.copy() if avail_s is None else avail_s
+    avail_r = table.bw_recv.copy() if avail_r is None else avail_r
+    if extra is not None:
+        avail_x = extra.cap.copy() if avail_x is None else avail_x
+        Lx = avail_x.shape[0]
+        up, dn = extra.up, extra.dn
+        up_ok, dn_ok = up >= 0, dn >= 0
+    else:
+        Lx = 0
     it = 0
-    limit = max_iter or 2 * table.num_ports + 2
+    limit = max_iter or 2 * (table.num_ports + Lx) + 2
     while not frozen.all() and it < limit:
         it += 1
         act = ~frozen
@@ -113,18 +199,33 @@ def maxmin_waterfill(table: FlowTable, live: np.ndarray,
             lvl_s = np.where(cnt_s > 0, avail_s / np.maximum(cnt_s, 1), np.inf)
             lvl_r = np.where(cnt_r > 0, avail_r / np.maximum(cnt_r, 1), np.inf)
         lvl = min(lvl_s.min(), lvl_r.min())
+        if extra is not None:
+            cnt_x = (np.bincount(up[act & up_ok], minlength=Lx)
+                     + np.bincount(dn[act & dn_ok], minlength=Lx))
+            with np.errstate(divide="ignore", invalid="ignore"):
+                lvl_x = np.where(cnt_x > 0,
+                                 avail_x / np.maximum(cnt_x, 1), np.inf)
+            lvl = min(lvl, lvl_x.min())
         if not np.isfinite(lvl):
             break
-        # freeze flows incident to saturated ports at `lvl`
+        # freeze flows incident to saturated ports (or links) at `lvl`
         sat_s = (lvl_s <= lvl + 1e-12) & (cnt_s > 0)
         sat_r = (lvl_r <= lvl + 1e-12) & (cnt_r > 0)
         hit = act & (sat_s[table.src] | sat_r[table.dst])
+        if extra is not None:
+            sat_x = (lvl_x <= lvl + 1e-12) & (cnt_x > 0)
+            hit |= act & ((up_ok & sat_x[np.maximum(up, 0)])
+                          | (dn_ok & sat_x[np.maximum(dn, 0)]))
         if not hit.any():
             break
         rates[hit] = lvl
         np.subtract.at(avail_s, table.src[hit], lvl)
         np.subtract.at(avail_r, table.dst[hit], lvl)
-        avail_s = np.maximum(avail_s, 0.0)
-        avail_r = np.maximum(avail_r, 0.0)
+        avail_s = np.maximum(avail_s, 0.0, out=avail_s)
+        avail_r = np.maximum(avail_r, 0.0, out=avail_r)
+        if extra is not None:
+            np.subtract.at(avail_x, up[hit & up_ok], lvl)
+            np.subtract.at(avail_x, dn[hit & dn_ok], lvl)
+            avail_x = np.maximum(avail_x, 0.0, out=avail_x)
         frozen = frozen | hit
     return rates

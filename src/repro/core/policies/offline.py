@@ -21,10 +21,11 @@ def _port_remaining(table: FlowTable, live: np.ndarray):
     return rem_s, rem_r
 
 
-def _rank_rates(table: FlowTable, live: np.ndarray, key: np.ndarray):
+def _rank_rates(table: FlowTable, live: np.ndarray, key: np.ndarray,
+                extra=None):
     rank = np.argsort(np.argsort(key, kind="stable"), kind="stable")
     order = coflow_flow_order(table, rank)
-    return greedy_flow_alloc(table, order, live)
+    return greedy_flow_alloc(table, order, live, extra=extra)
 
 
 class SCF(Policy):
@@ -40,7 +41,8 @@ class SCF(Policy):
         total = np.bincount(table.cid, weights=table.size,
                             minlength=table.num_coflows)
         key = np.where(table.active, total, np.inf)
-        return _rank_rates(table, live, key)
+        return _rank_rates(table, live, key,
+                           extra=self.fabric_binding(table))
 
 
 class SRTF(Policy):
@@ -57,7 +59,8 @@ class SRTF(Policy):
                                                       table.sent, 0.0),
                           minlength=table.num_coflows)
         key = np.where(table.active, rem, np.inf)
-        return _rank_rates(table, live, key)
+        return _rank_rates(table, live, key,
+                           extra=self.fabric_binding(table))
 
 
 class LWTF(Policy):
@@ -76,7 +79,8 @@ class LWTF(Policy):
         A_s, A_r = table.incidence(live)
         k = contention(A_s, A_r, table.active)
         key = np.where(table.active, t_c * np.maximum(k, 1), np.inf)
-        return _rank_rates(table, live, key)
+        return _rank_rates(table, live, key,
+                           extra=self.fabric_binding(table))
 
 
 class VarysSEBF(Policy):
@@ -98,6 +102,16 @@ class VarysSEBF(Policy):
                            kind="stable")
         avail_s = table.bw_send.copy()
         avail_r = table.bw_recv.copy()
+        extra = self.fabric_binding(table)
+        avail_x = rem_x = None
+        if extra is not None:
+            # (C, Lx) remaining bytes crossing each extra link
+            avail_x = extra.cap.copy()
+            rem = np.where(live, table.size - table.sent, 0.0)
+            rem_x = np.zeros((table.num_coflows, avail_x.shape[0]))
+            m = extra.up >= 0
+            np.add.at(rem_x, (table.cid[m], extra.up[m]), rem[m])
+            np.add.at(rem_x, (table.cid[m], extra.dn[m]), rem[m])
         rem_f = np.where(live, table.size - table.sent, 0.0)
         for c in order:
             if not table.active[c] or gamma[c] <= 0:
@@ -111,6 +125,11 @@ class VarysSEBF(Policy):
                     if ps.any() else 0.0,
                     (rem_r[c][pr] / np.maximum(avail_r[pr], 1e-12)).max()
                     if pr.any() else 0.0)
+            if extra is not None:
+                px = rem_x[c] > 0
+                if px.any():
+                    g = max(g, (rem_x[c][px]
+                                / np.maximum(avail_x[px], 1e-12)).max())
             if g <= 0 or not np.isfinite(g):
                 continue
             lo, hi = table.flow_lo[c], table.flow_hi[c]
@@ -120,6 +139,11 @@ class VarysSEBF(Policy):
             np.subtract.at(avail_r, table.dst[lo:hi], fr)
             avail_s = np.maximum(avail_s, 0.0)
             avail_r = np.maximum(avail_r, 0.0)
+            if extra is not None:
+                mu = extra.up[lo:hi] >= 0
+                np.subtract.at(avail_x, extra.up[lo:hi][mu], fr[mu])
+                np.subtract.at(avail_x, extra.dn[lo:hi][mu], fr[mu])
+                avail_x = np.maximum(avail_x, 0.0)
         # work-conserving backfill in the same order (only flows that did not
         # get a MADD rate; greedy fill of leftover bandwidth)
         bf_order = np.concatenate(
@@ -127,5 +151,6 @@ class VarysSEBF(Policy):
              for c in order if table.active[c]]) if order.size else order
         if bf_order.size:
             greedy_flow_alloc(table, bf_order, live & (rates <= 0),
-                              avail_s, avail_r, rates)
+                              avail_s, avail_r, rates,
+                              extra=extra, avail_x=avail_x)
         return rates

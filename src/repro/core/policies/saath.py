@@ -12,7 +12,8 @@ import numpy as np
 from repro.core import queues
 from repro.core.contention import contention
 from repro.core.params import SchedulerParams
-from repro.core.policies.base import Policy, greedy_flow_alloc
+from repro.core.policies.base import (Policy, greedy_flow_alloc,
+                                      maxmin_waterfill)
 from repro.fabric.state import FlowTable
 
 
@@ -128,6 +129,19 @@ class Saath(Policy):
         cnt_s, cnt_r = table.flow_counts(live)
         avail_s = table.bw_send.copy()
         avail_r = table.bw_recv.copy()
+        # fabric model (DESIGN.md §11): on a leaf-spine topology the
+        # MADD rate is also capped by the coflow's per-uplink/downlink
+        # flow counts against residual link capacity; `extra is None`
+        # (big switch) keeps every line below bitwise pre-refactor
+        extra = self.fabric_binding(table)
+        avail_x = cnt_x = None
+        if extra is not None:
+            avail_x = extra.cap.copy()
+            cnt_x = np.zeros((table.num_coflows, avail_x.shape[0]),
+                             np.int64)
+            lf = live & (extra.up >= 0)
+            np.add.at(cnt_x, (table.cid[lf], extra.up[lf]), 1)
+            np.add.at(cnt_x, (table.cid[lf], extra.dn[lf]), 1)
         admitted = np.zeros(table.num_coflows, bool)
         missed = []
         for c in order:
@@ -141,6 +155,11 @@ class Saath(Policy):
                 r = min(r, (avail_s[ps] / cs[ps]).min())
             if pr.any():
                 r = min(r, (avail_r[pr] / cr[pr]).min())
+            if extra is not None:
+                cx = cnt_x[c]
+                px = cx > 0
+                if px.any():
+                    r = min(r, (avail_x[px] / cx[px]).min())
             if self.all_or_none and r < p.min_rate:
                 missed.append(c)
                 continue
@@ -152,18 +171,32 @@ class Saath(Policy):
             seg[live[lo:hi]] = r
             avail_s -= r * cs
             avail_r -= r * cr
+            if extra is not None:
+                avail_x -= r * cnt_x[c]
             admitted[c] = True
             self.stats_admitted += 1
 
         if self.work_conservation and missed:
             # D4 lines 18-23: per-flow greedy fill of leftover bandwidth, in
             # the missed-coflow order (the 'ordered list of the un-scheduled
-            # CoFlows').
+            # CoFlows'). A LeafSpine(wc_fill="maxmin") topology fills the
+            # leftovers by max-min water-filling instead — the allocation
+            # family of the in-network papers.
             wc_order = np.concatenate(
                 [np.arange(table.flow_lo[c], table.flow_hi[c])
                  for c in missed])
             before = rates > 0
-            greedy_flow_alloc(table, wc_order, live, avail_s, avail_r, rates)
+            if extra is not None and \
+                    getattr(self.topology, "wc_fill", "greedy") == "maxmin":
+                cand = np.zeros(live.shape, bool)
+                cand[wc_order] = True
+                cand &= live
+                rates += maxmin_waterfill(
+                    table, cand, extra=extra, avail_s=avail_s,
+                    avail_r=avail_r, avail_x=avail_x)
+            else:
+                greedy_flow_alloc(table, wc_order, live, avail_s, avail_r,
+                                  rates, extra=extra, avail_x=avail_x)
             self.stats_wc_flows += int(((rates > 0) & ~before).sum())
 
         if p.wc_admitted_round:
@@ -179,12 +212,19 @@ class Saath(Policy):
                     r = min(r, (avail_s[ps] / cs[ps]).min())
                 if pr.any():
                     r = min(r, (avail_r[pr] / cr[pr]).min())
+                if extra is not None:
+                    cx = cnt_x[c]
+                    px = cx > 0
+                    if px.any():
+                        r = min(r, (avail_x[px] / cx[px]).min())
                 if not np.isfinite(r) or r <= 0.0:
                     continue
                 sel = live & (table.cid == c)
                 rates[sel] += r
                 avail_s -= r * cs
                 avail_r -= r * cr
+                if extra is not None:
+                    avail_x -= r * cnt_x[c]
 
         self._running = admitted
         return rates

@@ -15,4 +15,5 @@ class UCTCP(Policy):
         live = table.flow_live()
         if not live.any():
             return np.zeros(table.size.shape[0])
-        return maxmin_waterfill(table, live)
+        return maxmin_waterfill(table, live,
+                                extra=self.fabric_binding(table))

@@ -104,10 +104,14 @@ class Simulator:
 
     def __init__(self, params: SchedulerParams, *,
                  max_jump: Optional[float] = None,
-                 max_steps: int = 50_000_000):
+                 max_steps: int = 50_000_000,
+                 topology=None):
         self.params = params
         self.max_jump = max_jump if max_jump is not None else 200 * params.delta
         self.max_steps = max_steps
+        # fabric model (fabric.topology); None keeps the policy's own
+        # (default BigSwitch — the pre-refactor per-port arithmetic)
+        self.topology = topology
 
     # ---- event horizon ---------------------------------------------------
     def _next_event(self, table: FlowTable, policy: Policy, now: float,
@@ -135,6 +139,8 @@ class Simulator:
         p = self.params
         t0 = time.perf_counter()
         sched_s = 0.0
+        if self.topology is not None:
+            policy.topology = self.topology
         policy.reset(table)
 
         arrivals = np.sort(np.unique(table.arrival))

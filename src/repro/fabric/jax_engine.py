@@ -226,6 +226,19 @@ def _views(state: EngineState, tb: TraceBatch, now: jax.Array,
     total = _segment_sum(state.sent * tb.flow_valid, tb.flow_lo,
                          tb.flow_hi) if with_ablations else None
 
+    # leaf-spine fabric (DESIGN.md §11): per-(coflow, link) live counts
+    # via the same host-precomputed sorted segment layout as the ports,
+    # compiled out entirely (None) on a big-switch slab (Lf == 0)
+    cnt_x = bw_x = link_up = link_dn = None
+    Lf = tb.bw_up.shape[-1]
+    if Lf:
+        cnt_up = _segment_sum(livef[tb.perm_up], tb.lo_up, tb.hi_up)
+        cnt_dn = _segment_sum(livef[tb.perm_dn], tb.lo_dn, tb.hi_dn)
+        cnt_x = jnp.concatenate([cnt_up, cnt_dn], axis=1)  # (C, 2Lf)
+        bw_x = jnp.concatenate([tb.bw_up, tb.bw_dn])       # (2Lf,)
+        if per_flow_wc:
+            link_up, link_dn = tb.link_up, tb.link_dn
+
     mixed = m_dyn = None
     if with_dynamics:
         # §4.3 remaining-length estimate: the EXACT median of finished-
@@ -273,8 +286,10 @@ def _views(state: EngineState, tb: TraceBatch, now: jax.Array,
     batch = jc.CoflowBatch(active=active, arrival=tb.arrival_rank, m=m,
                            width=tb.width, cnt_s=cnt_s, cnt_r=cnt_r,
                            bw_s=tb.bw_send, bw_r=tb.bw_recv,
-                           total=total, mixed=mixed, m_dyn=m_dyn)
-    flows = jc.FlowView(cid=tb.cid, src=tb.src, dst=tb.dst, live=live) \
+                           total=total, mixed=mixed, m_dyn=m_dyn,
+                           cnt_x=cnt_x, bw_x=bw_x)
+    flows = jc.FlowView(cid=tb.cid, src=tb.src, dst=tb.dst, live=live,
+                        up=link_up, dn=link_dn) \
         if per_flow_wc else None
     return batch, flows, active, live, livef
 
@@ -283,6 +298,7 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
           kernel: Optional[str], *, per_flow_wc: bool = True,
           with_dynamics: bool = True,
           with_ablations: bool = False,
+          wc_maxmin: bool = False,
           n_end: Optional[jax.Array] = None) -> EngineState:
     """Advance one *event step*: schedule at the current δ tick, find the
     next instant the schedule could change (arrival, flow completion,
@@ -325,7 +341,8 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
         active_gate=can)
     total = batch.total
     coord, out = jc.tick_core(state.coord, batch, now, ep.dp,
-                              kernel=kernel, flows=flows)
+                              kernel=kernel, flows=flows,
+                              wc_fill="maxmin" if wc_maxmin else "greedy")
     # per-flow rates: MADD equal rate for admitted coflows + the work-
     # conservation fill (flow-granular when per_flow_wc, else the
     # coflow-granular equal rate; both already gated by dp.wc)
@@ -472,12 +489,12 @@ def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
     """Scan `chunk` ticks for every trace in the batch (one executable,
     reused across chunks so the host completion loop never recompiles).
     sweep=True maps the EngineParams' leading axis alongside the traces.
-    `features` = (per_flow_wc, with_dynamics, with_ablations), the
-    static structure switches threaded to `_tick`. Offline replays
+    `features` = (per_flow_wc, with_dynamics, with_ablations,
+    wc_maxmin), the static structure switches threaded to `_tick`. Offline replays
     only: sessions go through `_run_session_block`, whose device-side
     while_loop carries the per-row horizon caps.
     """
-    per_flow_wc, with_dynamics, with_ablations = features
+    per_flow_wc, with_dynamics, with_ablations, wc_maxmin = features
     ep_ax = 0 if sweep else None
 
     def scan_ticks(s, tb_row, ep_row):
@@ -485,7 +502,8 @@ def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
             return _tick(c, tb_row, ep_row, kernel,
                          per_flow_wc=per_flow_wc,
                          with_dynamics=with_dynamics,
-                         with_ablations=with_ablations), None
+                         with_ablations=with_ablations,
+                         wc_maxmin=wc_maxmin), None
         s, _ = jax.lax.scan(body, s, None, length=chunk)
         return s
 
@@ -511,11 +529,37 @@ def default_max_ticks(tb: TraceBatch, delta: float, slack: float = 4.0,
     np.add.at(per_port, (np.arange(tb.num_traces)[:, None], 1, tb.dst),
               tb.size * tb.flow_valid)
     serial = per_port.max(axis=(1, 2)) / bw  # per-trace, coarse
+    Lf = tb.bw_up.shape[-1]
+    if Lf:
+        # oversubscribed uplinks/downlinks can be the bottleneck: fold
+        # in each link's bytes over its capacity (sentinel Lf = no link)
+        per_link = np.zeros((tb.num_traces, 2, Lf + 1))
+        rows = np.arange(tb.num_traces)[:, None]
+        np.add.at(per_link, (rows, 0, tb.link_up), tb.size * tb.flow_valid)
+        np.add.at(per_link, (rows, 1, tb.link_dn), tb.size * tb.flow_valid)
+        cap = np.stack([tb.bw_up, tb.bw_dn], axis=1)  # (B, 2, Lf)
+        t_link = np.where(cap > 0, per_link[:, :, :Lf] / np.maximum(
+            cap, 1e-30), 0.0).max(axis=(1, 2))
+        serial = np.maximum(serial, t_link)
     last = np.where(tb.coflow_valid, tb.arrival, 0.0).max(axis=1)
     # bottleneck-sum bound per trace: sum of each coflow's own bottleneck
     tot = np.einsum("bf->b", tb.size * tb.flow_valid) / bw
     horizon = float((last + slack * np.maximum(serial, tot)).max())
     return max(int(np.ceil(horizon / delta)) + 2, 8)
+
+
+def resolve_kernel(kernel: Optional[str],
+                   use_pallas: bool) -> Optional[str]:
+    """`use_pallas=True` opts the tick's inner ops (LCoF contention, the
+    max-min water-filling fill) into the Pallas kernels: the compiled
+    kernels on TPU, `interpret` mode elsewhere (the kernel BODY executed
+    on CPU — slow, parity-testing only). An explicit `kernel` force
+    always wins; default (False) keeps backend auto-dispatch."""
+    if kernel is not None or not use_pallas:
+        return kernel
+    from repro.kernels.ops import _on_tpu
+
+    return "pallas" if _on_tpu() else "interpret"
 
 
 def simulate_batch(traces: "Sequence | TraceBatch",
@@ -526,7 +570,9 @@ def simulate_batch(traces: "Sequence | TraceBatch",
                    dynamics_requeue: "bool | None" = None,
                    lcof: bool = True,
                    per_flow_threshold: bool = True,
-                   fidelity: str = "flow") -> EngineResult:
+                   fidelity: str = "flow",
+                   topology=None,
+                   use_pallas: bool = False) -> EngineResult:
     """Replay a fleet of traces under one parameter setting.
 
     Internal engine entry point: the public front door is
@@ -547,12 +593,13 @@ def simulate_batch(traces: "Sequence | TraceBatch",
     the reference simulator's max_steps guard).
     """
     params = params or SchedulerParams()
+    kernel = resolve_kernel(kernel, use_pallas)
     features = features_for(
         params, fidelity=fidelity, work_conservation=work_conservation,
         dynamics_requeue=dynamics_requeue, lcof=lcof,
-        per_flow_threshold=per_flow_threshold)
+        per_flow_threshold=per_flow_threshold, topology=topology)
     tb = traces if isinstance(traces, TraceBatch) else \
-        pack(traces, port_bw=params.port_bw)
+        pack(traces, port_bw=params.port_bw, topology=topology)
     ep = EngineParams.from_scheduler(
         params, work_conservation=work_conservation,
         dynamics_requeue=dynamics_requeue, lcof=lcof,
@@ -564,7 +611,9 @@ def simulate_batch(traces: "Sequence | TraceBatch",
 def simulate_sweep(trace, params_list: Sequence[SchedulerParams], *,
                    max_ticks: Optional[int] = None, chunk: int = 128,
                    kernel: Optional[str] = None,
-                   fidelity: str = "flow") -> EngineResult:
+                   fidelity: str = "flow",
+                   topology=None,
+                   use_pallas: bool = False) -> EngineResult:
     """Replay ONE trace under M parameter settings as one computation.
 
     Internal engine entry point: the public front door is
@@ -586,14 +635,17 @@ def simulate_sweep(trace, params_list: Sequence[SchedulerParams], *,
         # port bandwidths are baked into the packed TraceBatch, so a
         # per-setting bw would silently run every lane on settings[0]'s
         raise ValueError("sweep settings must share port_bw")
-    tb1 = pack([trace], port_bw=params_list[0].port_bw)
+    kernel = resolve_kernel(kernel, use_pallas)
+    tb1 = pack([trace], port_bw=params_list[0].port_bw,
+               topology=topology)
     B = len(params_list)
     tb = TraceBatch(*(np.repeat(a, B, axis=0) for a in tb1))
     eps = [EngineParams.from_scheduler(p) for p in params_list]
     ep = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *eps)
     min_delta = min(p.delta for p in params_list)
     features = (fidelity == "flow",
-                any(p.dynamics_requeue for p in params_list), False)
+                any(p.dynamics_requeue for p in params_list), False,
+                getattr(topology, "wc_fill", "greedy") == "maxmin")
     return _drive(tb, ep, min_delta, max_ticks, chunk, kernel, sweep=True,
                   features=features)
 
@@ -667,17 +719,21 @@ def features_for(params: SchedulerParams, *, fidelity: str = "flow",
                  work_conservation: "bool | None" = None,
                  dynamics_requeue: "bool | None" = None,
                  lcof: bool = True,
-                 per_flow_threshold: bool = True) -> tuple:
-    """The static `(per_flow_wc, with_dynamics, with_ablations)` structure
-    switches `_tick` compiles against, derived exactly as
-    `simulate_batch` derives them — shared with the online session so an
-    incremental replay runs the same compiled step structure."""
+                 per_flow_threshold: bool = True,
+                 topology=None) -> tuple:
+    """The static `(per_flow_wc, with_dynamics, with_ablations,
+    wc_maxmin)` structure switches `_tick` compiles against, derived
+    exactly as `simulate_batch` derives them — shared with the online
+    session so an incremental replay runs the same compiled step
+    structure. `wc_maxmin` comes from the topology's `wc_fill` knob
+    (LeafSpine only); the big switch always greedy-fills."""
     if fidelity not in ("flow", "coflow"):
         raise ValueError(f"unknown fidelity {fidelity!r}")
     return (fidelity == "flow",
             params.dynamics_requeue if dynamics_requeue is None
             else dynamics_requeue,
-            not (lcof and per_flow_threshold))
+            not (lcof and per_flow_threshold),
+            getattr(topology, "wc_fill", "greedy") == "maxmin")
 
 
 def _session_while(state: EngineState, tb: TraceBatch, ep: EngineParams,
@@ -690,7 +746,7 @@ def _session_while(state: EngineState, tb: TraceBatch, ep: EngineParams,
     sees, so under `pmap` each device terminates independently — a
     shard whose lanes drain early stops stepping without waiting on
     its neighbors."""
-    per_flow_wc, with_dynamics, with_ablations = features
+    per_flow_wc, with_dynamics, with_ablations, wc_maxmin = features
 
     def lanes_open(s):
         tickf = s.tick.astype(jnp.float32)
@@ -707,7 +763,8 @@ def _session_while(state: EngineState, tb: TraceBatch, ep: EngineParams,
             lambda srow, tbrow, nerow, eprow: _tick(
                 srow, tbrow, eprow, kernel, per_flow_wc=per_flow_wc,
                 with_dynamics=with_dynamics,
-                with_ablations=with_ablations, n_end=nerow))(
+                with_ablations=with_ablations, wc_maxmin=wc_maxmin,
+                n_end=nerow))(
                     s, tb, n_end, ep)
         return s, steps + 1
 
@@ -781,7 +838,7 @@ def _pmapped_session_block(kernel: Optional[str], features: tuple,
 def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
                     *, n_end, chunk: int = 32,
                     kernel: Optional[str] = None,
-                    features: tuple = (True, True, False),
+                    features: tuple = (True, True, False, False),
                     max_steps: int = 10_000_000, mesh=None,
                     block: bool = True):
     """Re-enter the jitted tick loop on a live session slab until every
@@ -835,7 +892,7 @@ def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
 @functools.partial(jax.jit, static_argnames=("kernel", "features"))
 def session_plan_tick(state: EngineState, tb: TraceBatch,
                       ep: EngineParams, *, kernel: Optional[str] = None,
-                      features: tuple = (True, False, False),
+                      features: tuple = (True, False, False, False),
                       row_mask: Optional[jax.Array] = None):
     """One coordinator tick on the slab WITHOUT integrating rates: the
     wave-planning mode `runtime.coflow_bridge.plan_waves` uses (a wave =
@@ -847,7 +904,7 @@ def session_plan_tick(state: EngineState, tb: TraceBatch,
     `ep` carries a leading (B,) row axis (per-tenant parameters, like
     `session_advance`). Returns (state with post-tick coordinator
     carry and tick+1, admitted (B, C) bool)."""
-    per_flow_wc, with_dynamics, with_ablations = features
+    per_flow_wc, with_dynamics, with_ablations, wc_maxmin = features
 
     def one(s, tb_row, m, ep_row):
         tickf = s.tick.astype(jnp.float32)
@@ -856,8 +913,9 @@ def session_plan_tick(state: EngineState, tb: TraceBatch,
         batch, flows, _, _, _ = _views(
             s, tb_row, now, eps_t, per_flow_wc=per_flow_wc,
             with_dynamics=with_dynamics, with_ablations=with_ablations)
-        coord, out = jc.tick_core(s.coord, batch, now, ep_row.dp,
-                                  kernel=kernel, flows=flows)
+        coord, out = jc.tick_core(
+            s.coord, batch, now, ep_row.dp, kernel=kernel, flows=flows,
+            wc_fill="maxmin" if wc_maxmin else "greedy")
         new = s._replace(coord=coord, tick=s.tick + 1)
         if s.pend_next is not None:
             new = new._replace(pend_next=jnp.zeros_like(s.pend_next))
@@ -871,5 +929,6 @@ def session_plan_tick(state: EngineState, tb: TraceBatch,
 
 
 __all__ = ["EngineParams", "EngineState", "EngineResult",
-           "default_max_ticks", "features_for", "session_advance",
-           "session_plan_tick", "scatter_rows", "gather_rows"]
+           "default_max_ticks", "features_for", "resolve_kernel",
+           "session_advance", "session_plan_tick", "scatter_rows",
+           "gather_rows"]

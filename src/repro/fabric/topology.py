@@ -1,0 +1,183 @@
+"""Pluggable fabric models (DESIGN.md §11).
+
+The paper — and this repro through PR 8 — evaluates on the classic
+non-blocking BIG SWITCH: contention exists only at the ingress/egress
+ports, so an allocation is feasible iff per-port sums fit. Real
+datacenter fabrics are leaf-spine trees with oversubscribed uplinks:
+inter-leaf traffic also contends on the shared leaf<->spine links, and
+which coflow schedules are even feasible changes with the
+oversubscription factor.
+
+`FabricModel` lifts that assumption into scenario DATA:
+
+* `BigSwitch()` — the exact current semantics. `bind()` returns None
+  and every allocation path takes its pre-refactor branch, so results
+  stay BITWISE identical on the numpy plane (the regression guard in
+  tests/test_fabric_regression.py holds the line) and the jitted tick
+  compiles to the same program.
+* `LeafSpine(hosts_per_leaf, oversub, wc_fill)` — ports are grouped
+  `hosts_per_leaf` at a time under leaves; an inter-leaf flow crosses
+  its source leaf's UPLINK and its destination leaf's DOWNLINK, each
+  with capacity (sum of subtended port bandwidth) / `oversub`. At
+  `oversub=1.0` (full bisection) the extra links can never bind — an
+  uplink's residual is at least the sum of its subtended ports'
+  residuals, so the per-port minimum always dominates — which is why
+  1:1 reproduces BigSwitch and larger factors express contention the
+  big switch cannot.
+
+Both models are FROZEN, HASHABLE dataclasses: `Scenario.topology` is
+scenario data (hashed into the result cache key exactly like
+`--engine`), and a `SessionPool` pins its topology at construction so
+heterogeneous tenant joins never recompile.
+
+The numpy plane consumes a topology through `bind_table`: an
+`ExtraLinks` view (per-link capacity vector + per-flow link ids, -1 for
+intra-leaf flows) that `greedy_flow_alloc` / `maxmin_waterfill` /
+`Saath.schedule` thread through their admission and work-conservation
+arithmetic. The jitted plane consumes it through the `TraceBatch`
+link-incidence layout (`traces.batch.pack_row`): per-flow link ids plus
+a (cid, link)-sorted permutation with searchsorted group bounds — the
+same precompute trick as `perm_size` — so per-(coflow, link) flow
+counts are one `_segment_sum` inside the tick.
+
+`wc_fill` selects the work-conservation filler on leaf-spine fabrics:
+`"greedy"` (default) extends the paper's D4 round walk with per-link
+feasibility; `"maxmin"` runs max-min fair water-filling over the
+leftover flows instead — the allocation family the in-network papers
+assume — and is the path the `kernels/maxmin.py` Pallas kernel
+accelerates (`use_pallas`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+
+class ExtraLinks(NamedTuple):
+    """The numpy plane's bound view of a topology's non-port links.
+
+    `cap[k]` is the capacity of extra link k (uplinks first, then
+    downlinks: k in [0, Lf) is leaf k's uplink, k in [Lf, 2Lf) is leaf
+    k-Lf's downlink). `up[f]`/`dn[f]` are flow f's extra-link ids into
+    `cap` — both -1 when the flow stays inside one leaf and touches no
+    shared link.
+    """
+    cap: np.ndarray        # (2*Lf,) float64 link capacities, bytes/s
+    up: np.ndarray         # (F,) int32 uplink id in [0, Lf), -1 = none
+    dn: np.ndarray         # (F,) int32 downlink id in [Lf, 2Lf), -1 = none
+    num_uplinks: int       # Lf
+
+
+@dataclasses.dataclass(frozen=True)
+class BigSwitch:
+    """The non-blocking fabric of the paper: per-port contention only."""
+
+    def leaf_count(self, num_ports: int) -> int:
+        return 0
+
+    def bind(self, table) -> Optional[ExtraLinks]:
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpine:
+    """A two-tier leaf-spine fabric with uniform oversubscription.
+
+    Port p lives under leaf `p // hosts_per_leaf`; each leaf owns one
+    logical uplink and one logical downlink into the spine (the spine
+    itself is non-blocking — ECMP spreads a leaf pair's traffic over
+    every spine, so the aggregate leaf<->spine pipe is the binding
+    resource). Link capacity is the subtended port bandwidth divided by
+    `oversub`; `oversub=1.0` is full bisection.
+    """
+    hosts_per_leaf: int = 4
+    oversub: float = 1.0
+    wc_fill: str = "greedy"
+
+    def __post_init__(self):
+        if self.hosts_per_leaf < 1:
+            raise ValueError("hosts_per_leaf must be >= 1")
+        if not self.oversub > 0.0:
+            raise ValueError("oversub must be positive")
+        if self.wc_fill not in ("greedy", "maxmin"):
+            raise ValueError(
+                f"wc_fill must be 'greedy' or 'maxmin', "
+                f"got {self.wc_fill!r}")
+
+    def leaf_count(self, num_ports: int) -> int:
+        return int(math.ceil(num_ports / self.hosts_per_leaf))
+
+    def leaf_of(self, ports: np.ndarray) -> np.ndarray:
+        return (np.asarray(ports, np.int32)
+                // np.int32(self.hosts_per_leaf)).astype(np.int32)
+
+    def link_caps(self, bw_send: np.ndarray,
+                  bw_recv: np.ndarray) -> tuple:
+        """Per-leaf (uplink, downlink) capacities from the table's
+        per-port bandwidths, as two (Lf,) float64 vectors."""
+        P = bw_send.shape[0]
+        Lf = self.leaf_count(P)
+        leaf = self.leaf_of(np.arange(P, dtype=np.int32))
+        cap_up = (np.bincount(leaf, weights=bw_send, minlength=Lf)
+                  / self.oversub).astype(np.float64)
+        cap_dn = (np.bincount(leaf, weights=bw_recv, minlength=Lf)
+                  / self.oversub).astype(np.float64)
+        return cap_up, cap_dn
+
+    def flow_links(self, src: np.ndarray, dst: np.ndarray) -> tuple:
+        """Per-flow (uplink leaf, downlink leaf) ids, -1 for flows whose
+        endpoints share a leaf (they never touch the spine)."""
+        up = self.leaf_of(src)
+        dn = self.leaf_of(dst)
+        inter = up != dn
+        m1 = np.int32(-1)
+        return (np.where(inter, up, m1).astype(np.int32),
+                np.where(inter, dn, m1).astype(np.int32))
+
+    def bind(self, table) -> ExtraLinks:
+        """Bind to a `fabric.state.FlowTable`: the ExtraLinks view the
+        numpy allocation paths thread through their arithmetic."""
+        Lf = self.leaf_count(table.num_ports)
+        cap_up, cap_dn = self.link_caps(table.bw_send, table.bw_recv)
+        up, dn = self.flow_links(table.src, table.dst)
+        dn = np.where(dn >= 0, dn + np.int32(Lf),
+                      np.int32(-1)).astype(np.int32)
+        return ExtraLinks(
+            cap=np.concatenate([cap_up, cap_dn]).astype(np.float64),
+            up=up, dn=dn, num_uplinks=Lf)
+
+
+def normalize_topology(topology) -> object:
+    """None -> BigSwitch(); validates anything else is a fabric model."""
+    if topology is None:
+        return BigSwitch()
+    if isinstance(topology, (BigSwitch, LeafSpine)):
+        return topology
+    raise TypeError(
+        f"topology must be BigSwitch, LeafSpine, or None; "
+        f"got {topology!r}")
+
+
+def bind_table(topology, table) -> Optional[ExtraLinks]:
+    """The one numpy-plane entry: None (BigSwitch semantics — callers
+    take their pre-refactor branch) or the bound ExtraLinks."""
+    return normalize_topology(topology).bind(table)
+
+
+def leaf_links_for(topology, num_ports: int) -> int:
+    """How many leaves a slab packed for `topology` must carry (0 keeps
+    the link machinery compiled out entirely)."""
+    return normalize_topology(topology).leaf_count(num_ports)
+
+
+def wc_fill_of(topology) -> str:
+    """The work-conservation filler a topology asks for ("greedy" for
+    BigSwitch/None — the paper's D4 walk)."""
+    return getattr(normalize_topology(topology), "wc_fill", "greedy")
+
+
+__all__ = ["BigSwitch", "LeafSpine", "ExtraLinks", "normalize_topology",
+           "bind_table", "leaf_links_for", "wc_fill_of"]

@@ -66,6 +66,23 @@ class TraceBatch(NamedTuple):
     # the engine's §4.3 finished-flow median is an order-statistics
     # lookup over contiguous segments (no per-tick sort, no scatters).
     perm_size: np.ndarray   # (B, F) int32
+    # leaf-spine link-incidence layout (DESIGN.md §11): Lf leaf ids per
+    # flow (Lf itself = "crosses no shared link" — intra-leaf flows and
+    # padding), per-leaf uplink/downlink capacities, and the same
+    # (cid, link)-sorted permutation + searchsorted group-bounds trick
+    # as perm_src, so per-(coflow, link) live counts are segment sums.
+    # Lf=0 (BigSwitch) keeps every link array zero-width and the
+    # engine's link machinery compiled out entirely.
+    link_up: np.ndarray     # (B, F) int32 uplink leaf id, Lf = none
+    link_dn: np.ndarray     # (B, F) int32 downlink leaf id, Lf = none
+    bw_up: np.ndarray       # (B, Lf) float32 uplink capacity, bytes/s
+    bw_dn: np.ndarray       # (B, Lf) float32 downlink capacity
+    perm_up: np.ndarray     # (B, F) int32 flow order by (cid, link_up)
+    perm_dn: np.ndarray     # (B, F) int32 flow order by (cid, link_dn)
+    lo_up: np.ndarray       # (B, C, Lf) int32 group start in perm_up
+    hi_up: np.ndarray       # (B, C, Lf) int32 group end
+    lo_dn: np.ndarray       # (B, C, Lf) int32
+    hi_dn: np.ndarray       # (B, C, Lf) int32
 
     @property
     def num_traces(self) -> int:
@@ -83,13 +100,20 @@ class TraceBatch(NamedTuple):
     def num_ports(self) -> int:
         return self.bw_send.shape[1]
 
+    @property
+    def num_leaf_links(self) -> int:
+        """Lf — leaves of the packed leaf-spine topology (0 = big
+        switch; a STATIC shape, so `if tb.num_leaf_links:` inside the
+        jitted tick compiles the link machinery in or out)."""
+        return self.bw_up.shape[1]
+
     def row(self, b: int) -> "TraceBatch":
         """Single-trace slice, keeping the (1, ...) batch axis."""
         return TraceBatch(*(a[b:b + 1] for a in self))
 
 
 def empty_batch(num_rows: int, *, flow_capacity: int, coflow_capacity: int,
-                port_capacity: int) -> TraceBatch:
+                port_capacity: int, leaf_links: int = 0) -> TraceBatch:
     """An all-padding TraceBatch: every row is a blank slab row (no
     valid coflows or flows). This is the `SessionPool`'s backing store —
     rows are written in place with `pack_row` as sessions submit and
@@ -97,9 +121,10 @@ def empty_batch(num_rows: int, *, flow_capacity: int, coflow_capacity: int,
     compiled engine executables) survive arbitrary membership churn."""
     B, F = num_rows, flow_capacity
     C, P = coflow_capacity, port_capacity
-    if B <= 0 or P <= 0 or F < 0 or C < 0:
+    Lf = leaf_links
+    if B <= 0 or P <= 0 or F < 0 or C < 0 or Lf < 0:
         raise ValueError("empty_batch needs positive rows/ports and "
-                         "non-negative flow/coflow capacities")
+                         "non-negative flow/coflow/link capacities")
     return TraceBatch(
         cid=np.zeros((B, F), np.int32), src=np.zeros((B, F), np.int32),
         dst=np.zeros((B, F), np.int32), size=np.ones((B, F), np.float32),
@@ -119,6 +144,16 @@ def empty_batch(num_rows: int, *, flow_capacity: int, coflow_capacity: int,
         lo_dst=np.zeros((B, C, P), np.int32),
         hi_dst=np.zeros((B, C, P), np.int32),
         perm_size=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
+        link_up=np.full((B, F), Lf, np.int32),
+        link_dn=np.full((B, F), Lf, np.int32),
+        bw_up=np.zeros((B, Lf), np.float32),
+        bw_dn=np.zeros((B, Lf), np.float32),
+        perm_up=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
+        perm_dn=np.tile(np.arange(F, dtype=np.int32), (B, 1)),
+        lo_up=np.zeros((B, C, Lf), np.int32),
+        hi_up=np.zeros((B, C, Lf), np.int32),
+        lo_dn=np.zeros((B, C, Lf), np.int32),
+        hi_dn=np.zeros((B, C, Lf), np.int32),
     )
 
 
@@ -145,10 +180,20 @@ def blank_row(tb: TraceBatch, b: int) -> None:
     tb.lo_dst[b] = 0
     tb.hi_dst[b] = 0
     tb.perm_size[b] = np.arange(F, dtype=np.int32)
+    tb.link_up[b] = tb.bw_up.shape[1]
+    tb.link_dn[b] = tb.bw_up.shape[1]
+    tb.bw_up[b] = 0.0
+    tb.bw_dn[b] = 0.0
+    tb.perm_up[b] = np.arange(F, dtype=np.int32)
+    tb.perm_dn[b] = np.arange(F, dtype=np.int32)
+    tb.lo_up[b] = 0
+    tb.hi_up[b] = 0
+    tb.lo_dn[b] = 0
+    tb.hi_dn[b] = 0
 
 
 def pack_row(tb: TraceBatch, b: int, t: FlowTable, *,
-             arrival_rank=None) -> None:
+             arrival_rank=None, topology=None) -> None:
     """Write one FlowTable into slab row `b` in place (blanking it
     first), recomputing the row's host-side permutations/segment
     layouts. `arrival_rank` overrides the per-row arrival argsort with
@@ -202,6 +247,33 @@ def pack_row(tb: TraceBatch, b: int, t: FlowTable, *,
     # correct segment of real flows in this permutation too.
     tb.perm_size[b] = np.lexsort(
         (tb.size[b], ~tb.flow_valid[b], tb.cid[b])).astype(np.int32)
+    # leaf-spine link layout (blank_row already reset it to "no links")
+    Lf = tb.bw_up.shape[1]
+    need = 0 if topology is None else topology.leaf_count(t.num_ports)
+    if need == 0:
+        return
+    if need > Lf:
+        raise ValueError(
+            f"slab row link capacity exceeded: topology needs {need} "
+            f"leaves > {Lf} packed")
+    cap_up, cap_dn = topology.link_caps(t.bw_send, t.bw_recv)
+    tb.bw_up[b, :need] = cap_up
+    tb.bw_dn[b, :need] = cap_dn
+    up, dn = topology.flow_links(t.src, t.dst)
+    # sentinel Lf = "touches no shared link" (intra-leaf; also the
+    # blank value padding keeps) — excluded from the (cid, link) grid
+    tb.link_up[b, :f] = np.where(up >= 0, up, Lf).astype(np.int32)
+    tb.link_dn[b, :f] = np.where(dn >= 0, dn, Lf).astype(np.int32)
+    grid = (np.arange(C, dtype=np.int64)[:, None] * (Lf + 1)
+            + np.arange(Lf, dtype=np.int64)[None, :]).ravel()
+    for link, perm_out, lo_out, hi_out in (
+            (tb.link_up[b, :f], tb.perm_up, tb.lo_up, tb.hi_up),
+            (tb.link_dn[b, :f], tb.perm_dn, tb.lo_dn, tb.hi_dn)):
+        order = np.lexsort((link, t.cid)).astype(np.int32)
+        perm_out[b, :f] = order
+        keys = t.cid[order].astype(np.int64) * (Lf + 1) + link[order]
+        lo_out[b] = np.searchsorted(keys, grid, "left").reshape(C, Lf)
+        hi_out[b] = np.searchsorted(keys, grid, "right").reshape(C, Lf)
 
 
 def row_of(tb: TraceBatch, b: int) -> tuple:
@@ -224,7 +296,7 @@ def pack(traces: Sequence[Union[Trace, FlowTable]], *,
          port_bw: float = None,
          flow_multiple: int = 64, coflow_multiple: int = 16,
          flow_capacity: int = 0, coflow_capacity: int = 0,
-         port_capacity: int = 0) -> TraceBatch:
+         port_capacity: int = 0, topology=None) -> TraceBatch:
     """Pad/pack traces (or FlowTables) into one TraceBatch.
 
     `port_bw` is required when packing `Trace` objects (FlowTables carry
@@ -260,11 +332,20 @@ def pack(traces: Sequence[Union[Trace, FlowTable]], *,
     C = max(_round_up(max(t.num_coflows for t in tables), coflow_multiple),
             coflow_capacity)
     P = max(max(t.num_ports for t in tables), port_capacity)
+    topo = None
+    Lf = 0
+    if topology is not None:
+        from repro.fabric.topology import normalize_topology
+
+        topo = normalize_topology(topology)
+        Lf = topo.leaf_count(P)
+        if Lf == 0:
+            topo = None      # BigSwitch: no link leaves at all
 
     tb = empty_batch(B, flow_capacity=F, coflow_capacity=C,
-                     port_capacity=P)
+                     port_capacity=P, leaf_links=Lf)
     for b, t in enumerate(tables):
-        pack_row(tb, b, t)
+        pack_row(tb, b, t, topology=topo)
     return tb
 
 

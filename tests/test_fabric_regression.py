@@ -1,0 +1,274 @@
+"""Bitwise regression guard for the FabricModel refactor (ISSUE 9).
+
+`_LegacySaath` below is the pre-refactor `Saath.schedule` + the
+pre-refactor `greedy_flow_alloc`, frozen VERBATIM at the commit that
+introduced `fabric.topology`. The property tests assert that routing
+the refactored allocation stack through `topology=None` and
+`topology=BigSwitch()` reproduces the legacy trajectory EXACTLY
+(bitwise `fct`/`cct`/`sent`, not within a tolerance) on the numpy
+plane, and that the jax serving plane with an explicit topology stays
+bitwise pooled-vs-standalone. Any fabric-model change that perturbs
+big-switch arithmetic — a reordered min, an extra subtract, a changed
+round limit — trips this suite.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coflow import Coflow, Flow, Trace
+from repro.core.params import SchedulerParams
+from repro.core.policies import make_policy
+from repro.core.policies.saath import Saath
+from repro.fabric.engine import Simulator
+from repro.fabric.state import FlowTable
+from repro.fabric.topology import BigSwitch, LeafSpine
+
+PORTS = 6
+PARAMS = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                         growth=4.0, num_queues=5)
+
+
+def _legacy_greedy_flow_alloc(table, flow_order, live, avail_s, avail_r,
+                              rates):
+    """`base.greedy_flow_alloc` exactly as of PR 8 (no link handling)."""
+    src, dst = table.src, table.dst
+    ordered = flow_order[live[flow_order]]
+    for _ in range(2 * table.num_ports + 2):
+        if ordered.size == 0:
+            break
+        cand = ordered[(avail_s[src[ordered]] > 0.0)
+                       & (avail_r[dst[ordered]] > 0.0)]
+        if cand.size == 0:
+            break
+        _, first_s = np.unique(src[cand], return_index=True)
+        _, first_r = np.unique(dst[cand], return_index=True)
+        is_first_s = np.zeros(cand.size, bool)
+        is_first_r = np.zeros(cand.size, bool)
+        is_first_s[first_s] = True
+        is_first_r[first_r] = True
+        take = cand[is_first_s & is_first_r]
+        r = np.minimum(avail_s[src[take]], avail_r[dst[take]])
+        rates[take] = r
+        avail_s[src[take]] -= r
+        avail_r[dst[take]] -= r
+        ordered = cand[~(is_first_s & is_first_r)]
+    return rates
+
+
+class _LegacySaath(Saath):
+    """`Saath` with the pre-refactor `schedule` body frozen verbatim."""
+
+    def schedule(self, table, now):
+        from repro.core.contention import contention
+        p = self.params
+        live = table.flow_live()
+        rates = np.zeros(table.size.shape[0])
+        if not live.any():
+            return rates
+
+        q_new = self._assign_queues(table, now)
+        self._refresh_deadlines(table, q_new, now)
+
+        active = table.active.copy()
+        A_s, A_r = table.incidence(live)
+        k = contention(A_s, A_r, active)
+        expired = active & (now >= self._deadline)
+        self.stats_deadline_hits += int(expired.sum())
+
+        cids = np.nonzero(active)[0]
+        if self.lcof:
+            key = [(0, self._deadline[c], 0, 0, table.arrival[c], c)
+                   if expired[c] else
+                   (1, q_new[c], k[c], int(~self._running[c]),
+                    table.arrival[c], c) for c in cids]
+        else:
+            key = [(0, self._deadline[c], 0, 0, table.arrival[c], c)
+                   if expired[c] else
+                   (1, q_new[c], table.arrival[c], 0, 0, c) for c in cids]
+        order = cids[sorted(range(len(cids)), key=lambda i: key[i])]
+
+        cnt_s, cnt_r = table.flow_counts(live)
+        avail_s = table.bw_send.copy()
+        avail_r = table.bw_recv.copy()
+        admitted = np.zeros(table.num_coflows, bool)
+        missed = []
+        for c in order:
+            cs, cr = cnt_s[c], cnt_r[c]
+            ps, pr = cs > 0, cr > 0
+            if not ps.any() and not pr.any():
+                continue
+            r = np.inf
+            if ps.any():
+                r = min(r, (avail_s[ps] / cs[ps]).min())
+            if pr.any():
+                r = min(r, (avail_r[pr] / cr[pr]).min())
+            if self.all_or_none and r < p.min_rate:
+                missed.append(c)
+                continue
+            if r <= 0.0:
+                missed.append(c)
+                continue
+            lo, hi = table.flow_lo[c], table.flow_hi[c]
+            seg = rates[lo:hi]
+            seg[live[lo:hi]] = r
+            avail_s -= r * cs
+            avail_r -= r * cr
+            admitted[c] = True
+            self.stats_admitted += 1
+
+        if self.work_conservation and missed:
+            wc_order = np.concatenate(
+                [np.arange(table.flow_lo[c], table.flow_hi[c])
+                 for c in missed])
+            before = rates > 0
+            _legacy_greedy_flow_alloc(table, wc_order, live, avail_s,
+                                      avail_r, rates)
+            self.stats_wc_flows += int(((rates > 0) & ~before).sum())
+
+        if p.wc_admitted_round:
+            for c in order:
+                cs, cr = cnt_s[c], cnt_r[c]
+                ps, pr = cs > 0, cr > 0
+                if not (ps.any() or pr.any()) or c in missed:
+                    continue
+                r = np.inf
+                if ps.any():
+                    r = min(r, (avail_s[ps] / cs[ps]).min())
+                if pr.any():
+                    r = min(r, (avail_r[pr] / cr[pr]).min())
+                if not np.isfinite(r) or r <= 0.0:
+                    continue
+                sel = live & (table.cid == c)
+                rates[sel] += r
+                avail_s -= r * cs
+                avail_r -= r * cr
+
+        self._running = admitted
+        return rates
+
+
+@st.composite
+def traces(draw, max_coflows=8, max_flows=5):
+    n = draw(st.integers(1, max_coflows))
+    coflows = []
+    fid = 0
+    for c in range(n):
+        arrival = draw(st.floats(0.0, 5.0, allow_nan=False))
+        w = draw(st.integers(1, max_flows))
+        flows = []
+        for _ in range(w):
+            src = draw(st.integers(0, PORTS - 1))
+            dst = draw(st.integers(0, PORTS - 1))
+            size = draw(st.floats(0.5, 20.0, allow_nan=False))
+            flows.append(Flow(fid, src, dst, size))
+            fid += 1
+        coflows.append(Coflow(c, arrival, flows))
+    return Trace(num_ports=PORTS, coflows=coflows)
+
+
+def _run(trace, policy, topology=None):
+    table = FlowTable.from_trace(trace, PARAMS.port_bw)
+    sim = Simulator(PARAMS, topology=topology)
+    return sim.run(table, policy)
+
+
+def _assert_bitwise(res_a, res_b):
+    np.testing.assert_array_equal(res_a.table.fct, res_b.table.fct)
+    np.testing.assert_array_equal(res_a.table.cct, res_b.table.cct)
+    np.testing.assert_array_equal(res_a.table.sent, res_b.table.sent)
+    np.testing.assert_array_equal(res_a.table.rate, res_b.table.rate)
+
+
+@given(traces())
+@settings(max_examples=40, deadline=None)
+def test_bigswitch_bitwise_vs_legacy(trace):
+    """topology=None AND topology=BigSwitch() through the refactored
+    allocation stack == the frozen pre-refactor Saath, bitwise."""
+    legacy = _run(trace, _LegacySaath(PARAMS))
+    for topo in (None, BigSwitch()):
+        cur = _run(trace, make_policy("saath", PARAMS), topology=topo)
+        _assert_bitwise(legacy, cur)
+
+
+@given(traces())
+@settings(max_examples=20, deadline=None)
+def test_bigswitch_bitwise_no_wc(trace):
+    """The non-work-conserving ablation path is guarded too (admission
+    loop only — the branch fig10's A/N lane runs)."""
+    legacy = _run(trace, _LegacySaath(PARAMS, work_conservation=False))
+    cur = _run(trace, make_policy("saath", PARAMS,
+                                  work_conservation=False),
+               topology=BigSwitch())
+    _assert_bitwise(legacy, cur)
+
+
+@given(traces(max_coflows=5))
+@settings(max_examples=15, deadline=None)
+def test_greedy_policies_bitwise(trace):
+    """Order-driven policies (Aalo) route through the refactored
+    `greedy_flow_alloc`; with no topology the rates must be bitwise the
+    legacy allocation."""
+    from repro.core.policies.base import greedy_flow_alloc
+
+    table = FlowTable.from_trace(trace, PARAMS.port_bw)
+    rng = np.random.default_rng(1)
+    table.sent = table.size * rng.uniform(0, 1, table.size.shape) * 0.3
+    table.active[:] = True
+    live = table.flow_live()
+    order = np.argsort(table.arrival[table.cid], kind="stable")
+    new = greedy_flow_alloc(table, order, live)
+    old = _legacy_greedy_flow_alloc(
+        table, order, live, table.bw_send.copy(), table.bw_recv.copy(),
+        np.zeros(table.size.shape[0]))
+    np.testing.assert_array_equal(new, old)
+
+
+def test_api_run_bigswitch_bitwise():
+    """`api.run` with topology=BigSwitch() == topology omitted, exactly
+    (the Scenario field changes the hash, not the numbers)."""
+    from repro.api import Scenario, run
+
+    base = run(Scenario(policy="saath", engine="numpy",
+                        synth=dict(num_coflows=8, num_ports=8, seed=3,
+                                   max_width=16)))
+    topo = run(Scenario(policy="saath", engine="numpy",
+                        synth=dict(num_coflows=8, num_ports=8, seed=3,
+                                   max_width=16),
+                        topology=BigSwitch()))
+    np.testing.assert_array_equal(base.row_cct(), topo.row_cct())
+
+
+def test_pooled_vs_standalone_jax_topology():
+    """A pooled session on a topology-pinned slab is bitwise the
+    standalone session with the same topology (the pinned-feature
+    contract extended to fabric models)."""
+    from repro.api.pool import SessionPool
+    from repro.api.session import SaathSession
+    from repro.core.coflow import Coflow, Flow
+
+    def _coflows():
+        rng = np.random.default_rng(7)
+        out = []
+        for c in range(4):
+            flows = [Flow(0, int(rng.integers(0, 8)),
+                          int(rng.integers(0, 8)),
+                          float(rng.uniform(1e6, 5e6)))
+                     for _ in range(int(rng.integers(1, 4)))]
+            out.append(Coflow(cid=c, arrival=0.0, flows=flows))
+        return out
+
+    for topo in (BigSwitch(), LeafSpine(hosts_per_leaf=4, oversub=2.0)):
+        pool = SessionPool(SchedulerParams(), num_ports=8,
+                           max_sessions=2, topology=topo)
+        pooled = pool.session()
+        solo = SaathSession(SchedulerParams(), num_ports=8,
+                            backend="jax", topology=topo)
+        pooled.submit(_coflows())
+        solo.submit(_coflows())
+        done_p = pooled.drain(max_seconds=120.0, step=0.5)
+        done_s = solo.drain(max_seconds=120.0, step=0.5)
+        assert len(done_p) == len(done_s) == 4
+        for a, b in zip(done_p, done_s):
+            assert a.cct == b.cct, topo
+            np.testing.assert_array_equal(a.fct, b.fct)
+        pooled.close()
+        solo.close()

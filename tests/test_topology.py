@@ -1,0 +1,241 @@
+"""FabricModel layer (ISSUE 9): leaf-spine allocation through BOTH
+planes, the max-min work-conservation fill, and the Pallas water-filling
+backend.
+
+The bitwise big-switch preservation guard lives in
+tests/test_fabric_regression.py; this suite covers the NEW semantics:
+
+* oversub=1:1 leaf-spine == big switch (the mediant inequality: uplink
+  residual >= the sum of subtended port residuals, so the extra link
+  mins never bind) — bitwise on each plane;
+* oversub=4:1 measurably degrades CCTs on both planes, and the two
+  planes agree within the engine-equivalence envelope (1%);
+* wc_fill="maxmin" (the in-network allocation family) runs through the
+  shared `kernels.ops.maxmin_rates` backend, with the Pallas kernel
+  parity-gated against `kernels.ref` in interpret mode.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Scenario, run
+from repro.fabric.topology import (BigSwitch, ExtraLinks, LeafSpine,
+                                   normalize_topology)
+from repro.traces.synth import tiny_trace
+
+TOPO_1 = LeafSpine(hosts_per_leaf=4, oversub=1.0)
+TOPO_4 = LeafSpine(hosts_per_leaf=4, oversub=4.0)
+
+
+def _go(trace, engine, topology=None, **kw):
+    return run(Scenario(policy="saath", engine=engine, trace=trace,
+                        topology=topology, **kw))
+
+
+# ---- model layer ---------------------------------------------------------
+
+def test_normalize_and_validate():
+    assert isinstance(normalize_topology(None), BigSwitch)
+    t = normalize_topology(TOPO_4)
+    assert t is TOPO_4
+    with pytest.raises(TypeError):
+        normalize_topology(object())
+    with pytest.raises(ValueError):
+        LeafSpine(hosts_per_leaf=0)
+    with pytest.raises(ValueError):
+        LeafSpine(oversub=0.0)
+    with pytest.raises(ValueError):
+        LeafSpine(wc_fill="random")
+
+
+def test_leaf_layout():
+    topo = LeafSpine(hosts_per_leaf=4)
+    assert topo.leaf_count(16) == 4
+    assert topo.leaf_count(14) == 4  # ragged tail leaf
+    np.testing.assert_array_equal(
+        topo.leaf_of(np.arange(8)), [0, 0, 0, 0, 1, 1, 1, 1])
+    up, dn = topo.flow_links(np.array([0, 0, 5]), np.array([1, 6, 6]))
+    np.testing.assert_array_equal(up, [-1, 0, -1])   # intra-leaf = -1
+    np.testing.assert_array_equal(dn, [-1, 1, -1])
+
+
+def test_link_caps_oversub():
+    topo = LeafSpine(hosts_per_leaf=4, oversub=2.0)
+    bw = np.ones(8)
+    cap_up, cap_dn = topo.link_caps(bw, bw)
+    # 4 ports x 1.0 each, divided by the 2:1 oversubscription
+    np.testing.assert_allclose(cap_up, [2.0, 2.0])
+    np.testing.assert_allclose(cap_dn, [2.0, 2.0])
+
+
+def test_bind_offsets():
+    from repro.core.params import SchedulerParams
+    from repro.fabric.state import FlowTable
+
+    tr = tiny_trace(6, 8, seed=1)
+    table = FlowTable.from_trace(tr, 1.0)
+    ex = LeafSpine(hosts_per_leaf=4).bind(table)
+    assert isinstance(ex, ExtraLinks)
+    Lf = ex.num_uplinks
+    assert ex.cap.shape == (2 * Lf,)
+    # downlink ids are pre-offset into the stacked cap vector
+    assert ((ex.dn < 0) | (ex.dn >= Lf)).all()
+    assert ((ex.up < 0) | (ex.up < Lf)).all()
+
+
+# ---- 1:1 equivalence (both planes) ---------------------------------------
+
+def test_oversub_one_matches_bigswitch_numpy():
+    tr = tiny_trace(24, 16, seed=2, load=0.8)
+    big = _go(tr, "numpy")
+    ls = _go(tr, "numpy", TOPO_1)
+    np.testing.assert_array_equal(big.row_cct(), ls.row_cct())
+    np.testing.assert_array_equal(big.row_fct(), ls.row_fct())
+
+
+def test_oversub_one_matches_bigswitch_jax_fleet():
+    # a fig9-style (shrunk) fleet: the 1:1 leaf-spine mins can never
+    # bind, so the vmapped engine must reproduce the big switch exactly
+    fleet = [tiny_trace(20, 16, seed=s, load=0.8) for s in range(4)]
+    big = run(Scenario(policy="saath", engine="jax",
+                       traces=tuple(fleet)))
+    ls = run(Scenario(policy="saath", engine="jax", traces=tuple(fleet),
+                      topology=TOPO_1))
+    for b in range(len(fleet)):
+        np.testing.assert_array_equal(big.row_cct(b), ls.row_cct(b))
+
+
+# ---- oversubscription bites (both planes) --------------------------------
+
+def test_oversub_degrades_both_planes():
+    tr = tiny_trace(30, 16, seed=0, load=0.8)
+    res = {}
+    for eng in ("numpy", "jax"):
+        base = _go(tr, eng, TOPO_1)
+        over = _go(tr, eng, TOPO_4)
+        assert over.avg_cct[0] > 1.1 * base.avg_cct[0], eng
+        res[eng] = over
+    # engine-equivalence envelope holds with links binding
+    a, b = res["numpy"].row_cct(), res["jax"].row_cct()
+    assert np.nanmax(np.abs(a - b) / np.maximum(np.abs(a), 1e-9)) < 0.01
+
+
+def test_oversub_degrades_sessions():
+    # the serving plane sees the same physics: a 4:1 pool drains slower
+    from repro.api.pool import SessionPool
+    from repro.core.coflow import Coflow, Flow
+    from repro.core.params import SchedulerParams
+
+    def _coflows():
+        rng = np.random.default_rng(11)
+        out = []
+        for c in range(4):
+            flows = [Flow(0, int(rng.integers(0, 8)),
+                          int(rng.integers(8, 16)),
+                          float(rng.uniform(1e6, 5e6)))
+                     for _ in range(3)]
+            out.append(Coflow(cid=c, arrival=0.0, flows=flows))
+        return out
+
+    ccts = {}
+    for name, topo in (("1:1", LeafSpine(hosts_per_leaf=4, oversub=1.0)),
+                       ("4:1", LeafSpine(hosts_per_leaf=4, oversub=4.0))):
+        pool = SessionPool(SchedulerParams(), num_ports=16,
+                           max_sessions=1, topology=topo)
+        s = pool.session()
+        s.submit(_coflows())
+        done = s.drain(max_seconds=600.0, step=1.0)
+        assert len(done) == 4, name
+        ccts[name] = sum(d.cct for d in done)
+        s.close()
+    assert ccts["4:1"] > ccts["1:1"]
+
+
+# ---- max-min work-conservation fill --------------------------------------
+
+def test_wc_maxmin_parity():
+    topo = LeafSpine(hosts_per_leaf=4, oversub=4.0, wc_fill="maxmin")
+    tr = tiny_trace(24, 16, seed=4, load=0.8)
+    a = _go(tr, "numpy", topo)
+    b = _go(tr, "jax", topo)
+    ca, cb = a.row_cct(), b.row_cct()
+    assert np.nanmax(np.abs(ca - cb) / np.maximum(np.abs(ca), 1e-9)) < 0.01
+
+
+# ---- Pallas water-filling backend (satellite: use_pallas) ----------------
+
+def test_maxmin_kernel_parity_interpret():
+    """The dormant kernels/maxmin.py now backs wc_fill="maxmin":
+    interpret mode (kernel body on CPU) must match kernels/ref.py on
+    stacked port+link incidence shapes."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(5)
+    P, Lf, F = 16, 4, 64
+    src = rng.integers(0, P, F)
+    dst = rng.integers(0, P, F)
+    up = rng.integers(0, Lf + 1, F)   # Lf = sentinel -> zero column
+    dn = rng.integers(0, Lf + 1, F)
+
+    def onehot(ids, n):
+        m = np.zeros((n, F), np.float32)
+        ok = ids < n
+        m[ids[ok], np.nonzero(ok)[0]] = 1.0
+        return m
+
+    a_s = np.concatenate([onehot(src, P), onehot(up, Lf)])
+    a_r = np.concatenate([onehot(dst, P), onehot(dn, Lf)])
+    live = rng.random(F) < 0.7
+    bw_s = np.concatenate([np.ones(P), np.full(Lf, 2.0)]).astype(np.float32)
+    bw_r = bw_s.copy()
+    want = ref.maxmin_ref(jnp.asarray(a_s), jnp.asarray(a_r),
+                          jnp.asarray(live), jnp.asarray(bw_s),
+                          jnp.asarray(bw_r))
+    got = ops.maxmin_rates(jnp.asarray(a_s), jnp.asarray(a_r),
+                           jnp.asarray(live), jnp.asarray(bw_s),
+                           jnp.asarray(bw_r), force="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_contention_kernel_parity_interpret():
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(6)
+    C, P = 8, 16
+    a_s = (rng.random((C, P)) < 0.3).astype(np.float32)
+    a_r = (rng.random((C, P)) < 0.3).astype(np.float32)
+    act = rng.random(C) < 0.8
+    want = ref.contention_ref(jnp.asarray(a_s), jnp.asarray(a_r),
+                              jnp.asarray(act))
+    got = ops.contention(jnp.asarray(a_s), jnp.asarray(a_r),
+                         jnp.asarray(act), force="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.slow
+def test_use_pallas_engine_parity():
+    """simulate_batch(use_pallas=True) (interpret off-TPU) reproduces
+    the default dispatch within f32 noise — the engine-level gate on the
+    accelerated water-filling backend."""
+    topo = LeafSpine(hosts_per_leaf=4, oversub=4.0, wc_fill="maxmin")
+    tr = tiny_trace(12, 8, seed=7, load=0.8)
+    a = _go(tr, "jax", topo)
+    b = _go(tr, "jax", topo, use_pallas=True)
+    ca, cb = a.row_cct(), b.row_cct()
+    assert np.nanmax(np.abs(ca - cb) / np.maximum(np.abs(ca), 1e-9)) < 1e-3
+
+
+@pytest.mark.slow
+def test_oversub_one_matches_bigswitch_jax_fleet_full():
+    """The fig9-scale fleet version of the 1:1 gate (nightly tier)."""
+    fleet = [tiny_trace(40, 20, seed=s, load=0.8) for s in range(16)]
+    big = run(Scenario(policy="saath", engine="jax",
+                       traces=tuple(fleet)))
+    ls = run(Scenario(policy="saath", engine="jax", traces=tuple(fleet),
+                      topology=TOPO_1))
+    for b in range(len(fleet)):
+        np.testing.assert_array_equal(big.row_cct(b), ls.row_cct(b))
