@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-slow test-all coverage lint audit audit-update coherence coherence-update topology topology-full pool-fuzz api-smoke pool-smoke pool-sharded bench-smoke bench
+.PHONY: test test-slow test-all coverage lint audit audit-update coherence coherence-update topology topology-full sampling pool-fuzz api-smoke pool-smoke pool-sharded bench-smoke bench
 
 test:            ## fast tier-1 suite (slow integration tests excluded)
 	$(PY) -m pytest -q
@@ -33,6 +33,10 @@ topology:        ## fabric-model gates: bitwise big-switch guard + leaf-spine su
 topology-full:   ## nightly fabric-model tier: slow fleet/Pallas parity + full oversub sweep
 	$(PY) -m pytest -q -m slow tests/test_topology.py
 	$(PY) -m benchmarks.fig_oversub --engine=jax --full
+
+sampling:        ## non-clairvoyant gates: estimator/bitwise/pool suites + known-vs-learned-vs-Aalo sweep (quick)
+	$(PY) -m pytest -q tests/test_sampling.py
+	$(PY) -m benchmarks.fig_sampling --engine=jax
 
 test-slow:       ## only the @pytest.mark.slow integration tests
 	$(PY) -m pytest -q -m slow

@@ -54,15 +54,21 @@ FEATURES = (True, True, False, False)
 LF = 2
 
 
-def _canonical_slab(leaf_links: int = 0):
+def _canonical_slab(leaf_links: int = 0, sampling: bool = False):
     from repro.core import jax_coordinator as jc
     from repro.core.params import SchedulerParams
     from repro.fabric.jax_engine import EngineParams, EngineState
     from repro.traces.batch import empty_batch
 
     tb = empty_batch(B, flow_capacity=F, coflow_capacity=C,
-                     port_capacity=P, leaf_links=leaf_links)
-    ep1 = EngineParams.from_scheduler(SchedulerParams())
+                     port_capacity=P, leaf_links=leaf_links,
+                     sampling=sampling)
+    # the sampling slab carries the pilot leaf and a CONCRETE traced
+    # clairvoyant scalar (learned row); the default slab compiles both
+    # out (empty subtrees — the pre-ISSUE-10 structure, bit for bit)
+    ep1 = EngineParams.from_scheduler(
+        SchedulerParams(dynamics_requeue=True, clairvoyant=False)
+        if sampling else SchedulerParams())
     ep_rows = jax.tree_util.tree_map(
         lambda x: jnp.stack([x] * B), ep1)
     coord = jc.CoordState(np.full((B, C), -1, np.int32),
@@ -138,6 +144,23 @@ def _entry_session_advance_leafspine():
         state, tb, ep_rows, ne, np.int32(64))
 
 
+def _entry_session_advance_sampling():
+    """The while_loop block with the non-clairvoyant machinery compiled
+    in (pilot leaf + traced clairvoyant switch) — the sampling-pinned
+    pool's hot path. The clairvoyant entrypoints above never contain
+    these leaves: their manifests staying fixed is the bitwise proof
+    that sampling is free when compiled out."""
+    from repro.fabric.jax_engine import _run_session_block
+
+    tb, _, ep_rows, state = _canonical_slab(sampling=True)
+    ne = np.full((B,), 4.0, np.float32)
+    return jax.make_jaxpr(
+        lambda s, t, e, n, m: _run_session_block(
+            s, t, e, n, m, kernel=None,
+            features=FEATURES + (True,)))(
+        state, tb, ep_rows, ne, np.int32(64))
+
+
 def _entry_scatter_rows():
     """The dirty-row upload: one row scattered into the state slab."""
     from repro.fabric.jax_engine import scatter_rows
@@ -159,6 +182,7 @@ def _entry_gather_rows():
 ENTRYPOINTS: Dict[str, Callable] = {
     "session_advance": _entry_session_advance,
     "session_advance_leafspine": _entry_session_advance_leafspine,
+    "session_advance_sampling": _entry_session_advance_sampling,
     "session_plan_tick": _entry_session_plan_tick,
     "simulate_sweep": _entry_simulate_sweep,
     "scatter_rows": _entry_scatter_rows,

@@ -214,13 +214,18 @@ class SessionPool:
             # fill switch rides the pool's own topology
             features = tuple(features) + (
                 getattr(self.topology, "wc_fill", "greedy") == "maxmin",)
-        if features is not None and (len(features) != 4
+        if features is not None and len(features) == 4:
+            # pre-sampling callers pinned (pfw, dyn, abl, maxmin):
+            # every tenant was clairvoyant, so sampling stays out
+            features = tuple(features) + (False,)
+        if features is not None and (len(features) != 5
                                      or not all(isinstance(b, (bool,
                                                                np.bool_))
                                                 for b in features)):
             raise ValueError(
-                "features must be a 4-tuple of bools (per_flow_wc, "
-                "with_dynamics, with_ablations, wc_maxmin)")
+                "features must be a 5-tuple of bools (per_flow_wc, "
+                "with_dynamics, with_ablations, wc_maxmin, "
+                "with_sampling)")
         self._pinned = tuple(bool(b) for b in features) \
             if features is not None else None
 
@@ -254,6 +259,10 @@ class SessionPool:
         self._row_feat = [self._base_features] * self.max_sessions
         self._ep_stack = None          # stacked (B,)-leaf EngineParams
         self._features_now = self._pinned or self._base_features
+        # pilot leaf compiled into the slab? (with_sampling): the
+        # TraceBatch STRUCTURE differs, so a flip is a rebuild-class
+        # event — pinned pools never flip (admission validates)
+        self._sampling = bool(self._features_now[4])
         # async dispatch chain: the parked device ctl handles of the
         # most recent dispatch, plus the rows awaiting its download
         self._ctl = None               # (tick_dev, fin_dev) | None
@@ -290,7 +299,7 @@ class SessionPool:
             per_flow_threshold=per_flow, topology=self.topology)
         if self._pinned is not None:
             names = ("per_flow_wc", "with_dynamics", "with_ablations",
-                     "wc_maxmin")
+                     "wc_maxmin", "with_sampling")
             for i, name in enumerate(names):
                 if feat[i] and not self._pinned[i]:
                     raise ValueError(
@@ -298,6 +307,15 @@ class SessionPool:
                         f"the pool pinned features={self._pinned} at "
                         f"construction; pin a superset (pinning is "
                         f"what keeps admission recompile-free)")
+            if not p.clairvoyant and not self._pinned[4]:
+                # a learned-mode tenant carries a traced clairvoyant
+                # leaf in its EngineParams row — admitting one into a
+                # pool compiled without sampling would change the
+                # stacked-parameter structure (a recompile)
+                raise ValueError(
+                    "non-clairvoyant tenant needs compiled feature "
+                    f"'with_sampling' but the pool pinned features="
+                    f"{self._pinned} at construction; pin a superset")
         return p, ep, feat
 
     # ---- admission -------------------------------------------------------
@@ -578,22 +596,42 @@ class SessionPool:
         while self._F_cap < need_f:
             self._F_cap *= 2
             grew = True
+        if self._ep_stack is None and self._pinned is None:
+            feats = [self._base_features] + \
+                [self._row_feat[s._row] for s in self.sessions]
+            self._features_now = tuple(
+                any(f[i] for f in feats) for i in range(5))
+        # pinned features stay pinned: admission already validated
+        # every tenant against them, so membership churn can never
+        # change the compiled structure (no recompiles)
+        if bool(self._features_now[4]) != self._sampling:
+            # the pilot mask is a slab LEAF: compiling sampling in (or
+            # out) changes the TraceBatch structure, so the slab and
+            # the packing scratch must be rebuilt from scratch
+            self._sampling = bool(self._features_now[4])
+            self._scratch = None
+            grew = True
         if self._tb is None or grew:
             self._rebuild()
         else:
             self._scatter_dirty()
         if self._ep_stack is None:
+            rows = self._row_ep
+            if self._sampling or any(
+                    e.dp.clairvoyant is not None for e in rows):
+                # heterogeneous fleets mix clairvoyant rows (empty
+                # clairvoyant subtree) with learned rows (f32 scalar);
+                # stacking needs one structure, and a sampling slab
+                # keeps the leaf CONCRETE even when every current
+                # tenant is clairvoyant so a learned tenant joining
+                # later never changes the parameter pytree
+                rows = [e if e.dp.clairvoyant is not None
+                        else e._replace(dp=e.dp._replace(
+                            clairvoyant=jnp.float32(1.0)))
+                        for e in rows]
             self._ep_stack = self._place(jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *self._row_ep))
+                lambda *xs: jnp.stack(xs), *rows))
             self._ep_disp = None
-            if self._pinned is None:
-                feats = [self._base_features] + \
-                    [self._row_feat[s._row] for s in self.sessions]
-                self._features_now = tuple(
-                    any(f[i] for f in feats) for i in range(4))
-            # pinned features stay pinned: admission already validated
-            # every tenant against them, so membership churn can never
-            # change the compiled structure (no recompiles)
 
     @_io_accounted
     def _scatter_dirty(self) -> None:
@@ -663,7 +701,8 @@ class SessionPool:
                 1, flow_capacity=self._F_cap,
                 coflow_capacity=self._C_cap,
                 port_capacity=self.num_ports,
-                leaf_links=self._Lf)
+                leaf_links=self._Lf,
+                sampling=self._sampling)
         return self._scratch
 
     def _blank_scratch(self):
@@ -684,7 +723,8 @@ class SessionPool:
                          flow_capacity=self._F_cap,
                          coflow_capacity=self._C_cap,
                          port_capacity=self.num_ports,
-                         leaf_links=self._Lf)
+                         leaf_links=self._Lf,
+                         sampling=self._sampling)
         rows = [self._blank_state_row()
                 for _ in range(self.max_sessions)]
         self._blank_rows.clear()
@@ -775,7 +815,8 @@ class SessionPool:
         table = s._rebuild_table()
         pack_row(tb, r, table,
                  arrival_rank=[e.rank for e in s._slots],
-                 topology=self.topology if self._Lf else None)
+                 topology=self.topology if self._Lf else None,
+                 pilot_frac=s.params.pilot_frac)
         s._flow_lo = table.flow_lo.copy()
         s._flow_hi = table.flow_hi.copy()
         s._tb_dirty = False

@@ -37,7 +37,7 @@ from repro.core.policies import resolve_policy
 # structure switches on the jax plane, policy ctor kwargs (or
 # SchedulerParams fields) on the numpy plane
 MECHANISM_KEYS = ("work_conservation", "dynamics_requeue", "lcof",
-                  "per_flow_threshold")
+                  "per_flow_threshold", "clairvoyant")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -79,6 +79,11 @@ class Scenario:
     warm_timing: bool = False          # jax: extra runs split compile
     #                                    time out; no-op on numpy (no
     #                                    compile to split)
+    clairvoyance: Optional[bool] = None  # sugar for the "clairvoyant"
+    #                                    mechanism switch: False = learn
+    #                                    coflow sizes from pilot flows
+    #                                    (core.sampling), None = the
+    #                                    params.clairvoyant field
     label: str = ""
 
     def hash(self) -> str:
@@ -91,7 +96,7 @@ class Scenario:
 
         upd(self.policy, self.engine, self.fidelity, self.label,
             dataclasses.astuple(self.params), self.max_jump,
-            repr(self.topology), self.use_pallas)
+            repr(self.topology), self.use_pallas, self.clairvoyance)
         if self.sweep is not None:
             upd(tuple(dataclasses.astuple(p) for p in self.sweep))
         upd(tuple(sorted((self.mechanisms or {}).items())),
@@ -273,8 +278,14 @@ def check_mechanisms(mechanisms: "Mapping | None") -> dict:
 
 
 def _split_mechanisms(sc: Scenario):
-    """Validate mechanism names once for both engines."""
-    return check_mechanisms(sc.mechanisms)
+    """Validate mechanism names once for both engines; the
+    `clairvoyance` sugar field folds into the shared "clairvoyant"
+    mechanism switch (explicit `mechanisms` entry wins via the fold
+    order — the sugar only fills the gap)."""
+    mech = check_mechanisms(sc.mechanisms)
+    if sc.clairvoyance is not None:
+        mech.setdefault("clairvoyant", sc.clairvoyance)
+    return mech
 
 
 def run(scenario: Scenario) -> Result:
@@ -317,6 +328,9 @@ def _run_numpy(sc: Scenario, traces: List[Trace],
         if "work_conservation" in mech:
             params = dataclasses.replace(
                 params, work_conservation=mech["work_conservation"])
+        if "clairvoyant" in mech:
+            params = dataclasses.replace(
+                params, clairvoyant=mech["clairvoyant"])
         pol_kw = dict(sc.policy_kwargs or {})
         for k in ("lcof", "per_flow_threshold"):
             if k in mech:
@@ -372,9 +386,9 @@ def _run_jax(sc: Scenario, traces: List[Trace], settings) -> Result:
         if mech:
             raise ValueError(
                 "sweep scenarios encode work_conservation / "
-                "dynamics_requeue per setting (SchedulerParams fields); "
-                "lcof / per_flow_threshold ablations need per-setting "
-                "scenarios")
+                "dynamics_requeue / clairvoyant per setting "
+                "(SchedulerParams fields); lcof / per_flow_threshold "
+                "ablations need per-setting scenarios")
 
         def go():
             return jax_engine.simulate_sweep(

@@ -49,6 +49,7 @@ class CoordParams(NamedTuple):
     dynamics_requeue: bool = True    # §4.3 median-based re-queue
     lcof: bool = True                # LCoF contention ordering (Fig. 10)
     per_flow_threshold: bool = True  # Eq. 1 vs Aalo total-bytes queues
+    clairvoyant: bool = True         # False = pilot-sampling estimates
 
     @staticmethod
     def from_params(p) -> "CoordParams":
@@ -56,7 +57,8 @@ class CoordParams(NamedTuple):
             tuple(p.thresholds()), p.deadline_factor,
             p.min_rate_frac, p.port_bw, p.growth,
             work_conservation=getattr(p, "work_conservation", True),
-            dynamics_requeue=getattr(p, "dynamics_requeue", True))
+            dynamics_requeue=getattr(p, "dynamics_requeue", True),
+            clairvoyant=getattr(p, "clairvoyant", True))
 
 
 def _queue_spans(thresholds, growth: float = 0.0) -> list:
@@ -92,6 +94,12 @@ class DynCoordParams(NamedTuple):
     requeue: jax.Array          # () f32 1 = §4.3 dynamics re-queue on
     lcof: jax.Array             # () f32 1 = LCoF ordering (0 = FIFO-in-q)
     per_flow: jax.Array         # () f32 1 = Eq. 1 per-flow thresholds
+    # Non-clairvoyant sampling leaf. None = clairvoyance compiled OUT
+    # (an empty pytree subtree — jaxprs bitwise-unchanged from before
+    # the mechanism existed). An f32 scalar = vmappable mode switch:
+    # 1 = clairvoyant (§4.3 exact-median re-queue), 0 = learned
+    # (pilot-sampling re-queue via CoflowBatch.s_mixed/s_m).
+    clairvoyant: jax.Array | None = None
 
     @staticmethod
     def from_params(p) -> "DynCoordParams":
@@ -109,7 +117,8 @@ class DynCoordParams(NamedTuple):
             jnp.float32(1.0 if cp.work_conservation else 0.0),
             jnp.float32(1.0 if cp.dynamics_requeue else 0.0),
             jnp.float32(1.0 if cp.lcof else 0.0),
-            jnp.float32(1.0 if cp.per_flow_threshold else 0.0))
+            jnp.float32(1.0 if cp.per_flow_threshold else 0.0),
+            None if cp.clairvoyant else jnp.float32(0.0))
 
 
 class CoordState(NamedTuple):
@@ -147,6 +156,12 @@ class CoflowBatch(NamedTuple):
     # and link capacities, uplinks stacked before downlinks (Lx = 2*Lf)
     cnt_x: jax.Array | None = None  # (C, Lx) f32
     bw_x: jax.Array | None = None   # (Lx,) f32
+    # non-clairvoyant sampling (None = compiled out): pilot-learned
+    # re-queue candidates and their estimated remaining length
+    s_mixed: jax.Array | None = None  # (C,) bool — >=1 finished pilot
+    #                      AND >=1 live flow (learned-mode §4.3)
+    s_m: jax.Array | None = None    # (C,) f32 m_hat from the mean
+    #                      finished-pilot size estimate
 
 
 class FlowView(NamedTuple):
@@ -210,7 +225,22 @@ def tick_core(state: CoordState, batch: CoflowBatch, now: jax.Array,
     if batch.mixed is not None:
         q_dyn = _queue_of(batch.m_dyn * batch.width.astype(jnp.float32),
                           th)
-        q = jnp.where((dp.requeue > 0) & batch.mixed & act, q_dyn, q)
+        use_dyn = (dp.requeue > 0) & batch.mixed & act
+        if dp.clairvoyant is not None:
+            # mixed-mode dispatch: only clairvoyant rows may read the
+            # exact-size median estimate
+            use_dyn = use_dyn & (dp.clairvoyant > 0)
+        q = jnp.where(use_dyn, q_dyn, q)
+    if batch.s_mixed is not None:
+        # learned-mode §4.3: re-queue from the pilot-sampling estimate.
+        # Compiled in only when some row runs non-clairvoyant; the
+        # clairvoyant gate keeps known-size rows bit-identical inside a
+        # mixed vmap/stacked dispatch.
+        q_smp = _queue_of(batch.s_m * batch.width.astype(jnp.float32), th)
+        cl = (dp.clairvoyant if dp.clairvoyant is not None
+              else jnp.float32(1.0))
+        q = jnp.where((cl <= 0) & (dp.requeue > 0) & batch.s_mixed & act,
+                      q_smp, q)
     q = jnp.where(act, q, jnp.maximum(state.queue, 0))
 
     # D5: FIFO-derived deadlines, refreshed on queue entry (spans are

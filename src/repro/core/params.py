@@ -25,6 +25,14 @@ class SchedulerParams:
     # Beyond-paper option: a second work-conservation round that raises the
     # equal rate of already-admitted coflows when all their ports have slack.
     wc_admitted_round: bool = False
+    # Non-clairvoyant mode (arxiv 2108.11255): when False, exact flow
+    # sizes are hidden from the scheduler; the §4.3 re-queue runs off a
+    # pilot-flow size estimate instead of the finished-flow median, and
+    # queue placement falls back to bytes-sent-so-far before the first
+    # pilot completes.
+    clairvoyant: bool = True
+    # Fraction of a coflow's flows tagged as pilots (at least one).
+    pilot_frac: float = 0.1
 
     def thresholds(self) -> list:
         """[Q_0^hi .. Q_{K-1}^hi]; Q_{K-1}^hi is +inf."""
@@ -50,6 +58,8 @@ class SchedulerParams:
         if "work_conservation" in mech:
             out = dataclasses.replace(
                 out, work_conservation=mech["work_conservation"])
+        if "clairvoyant" in mech:
+            out = dataclasses.replace(out, clairvoyant=mech["clairvoyant"])
         return out
 
     @property

@@ -12,6 +12,7 @@ import numpy as np
 from repro.core import queues
 from repro.core.contention import contention
 from repro.core.params import SchedulerParams
+from repro.core.sampling import SizeEstimator
 from repro.core.policies.base import (Policy, greedy_flow_alloc,
                                       maxmin_waterfill)
 from repro.fabric.state import FlowTable
@@ -33,6 +34,9 @@ class Saath(Policy):
         self.work_conservation = (params.work_conservation
                                   if work_conservation is None
                                   else work_conservation)
+        # non-clairvoyant mode: pilot-flow size learning (sampling.py)
+        self.estimator = (None if params.clairvoyant
+                          else SizeEstimator(params))
 
     def reset(self, table: FlowTable) -> None:
         C = table.num_coflows
@@ -52,7 +56,7 @@ class Saath(Policy):
         else:
             q_new = queues.aalo_queue(table.coflow_sent_total(), p)
 
-        if p.dynamics_requeue:
+        if p.dynamics_requeue and p.clairvoyant:
             # §4.3: once some flows finished, estimate remaining length from
             # the median finished-flow length and re-queue by Eq. 1 — this can
             # move a coflow back UP the queues (approximate SRTF).
@@ -69,6 +73,25 @@ class Saath(Policy):
                     fdone = table.done[lo:hi]
                     f_e = float(np.median(table.size[lo:hi][fdone]))
                     rem = np.maximum(f_e - table.sent[lo:hi][~fdone], 0.0)
+                    m_hat = float(rem.max()) if rem.size else 0.0
+                    q_new[c] = queues.saath_queue(
+                        np.array([m_hat]), table.width[c:c + 1], p)[0]
+        elif p.dynamics_requeue:
+            # non-clairvoyant §4.3: the re-queue runs off the pilot-flow
+            # estimate (mean finished-pilot size) instead of the exact
+            # finished-flow median; coflows whose pilots are all still in
+            # flight keep their bytes-sent Eq. 1 placement above.
+            live = table.flow_live()
+            est_flow, _, learned = self.estimator.estimates(table)
+            has_live = np.bincount(table.cid[live],
+                                   minlength=table.num_coflows) > 0
+            mixed = learned & has_live & table.active
+            if mixed.any():
+                for c in np.nonzero(mixed)[0]:
+                    lo, hi = table.flow_lo[c], table.flow_hi[c]
+                    fdone = table.done[lo:hi]
+                    rem = np.maximum(
+                        est_flow[c] - table.sent[lo:hi][~fdone], 0.0)
                     m_hat = float(rem.max()) if rem.size else 0.0
                     q_new[c] = queues.saath_queue(
                         np.array([m_hat]), table.width[c:c + 1], p)[0]

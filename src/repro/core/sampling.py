@@ -1,0 +1,85 @@
+"""Sampling-based coflow size learning (non-clairvoyant mode).
+
+Pilot-flow estimation in the style of the authors' follow-up sampling
+paper (arxiv 2108.11255): a small, deterministic subset of each
+coflow's flows — the *pilots* — is observed, and once pilots finish
+their exact sizes are known (bytes delivered == size). The mean
+finished-pilot size becomes the coflow's per-flow size estimate; the
+§4.3 SRTF re-queue then runs off this estimate instead of the
+clairvoyant finished-flow median. Before the first pilot completes
+there is no estimate, and the scheduler falls back to what it can
+observe: bytes sent so far (the plain Eq. 1 placement).
+
+The pilot layout rule is shared by BOTH planes (and by
+`traces.batch.pack_row`, which bakes it into the slab as a mask):
+
+    K_c = min(width_c, max(1, ceil(pilot_frac * width_c)))
+    pilots of coflow c = its first K_c flows in table/slab layout order
+
+Layout order is the submission order inside the contiguous
+[flow_lo_c, flow_hi_c) segment, identical in the numpy FlowTable and
+the packed TraceBatch row, so the two planes tag the same flows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.params import SchedulerParams
+
+
+def pilot_count(width: np.ndarray, pilot_frac: float) -> np.ndarray:
+    """K_c per coflow: at least one pilot, at most every flow."""
+    w = np.asarray(width, np.int64)
+    k = np.ceil(pilot_frac * w).astype(np.int64)
+    return np.minimum(np.maximum(k, 1), np.maximum(w, 1))
+
+
+def pilot_mask(cid: np.ndarray, flow_lo: np.ndarray, width: np.ndarray,
+               pilot_frac: float) -> np.ndarray:
+    """Bool mask over the flow axis: the first K_c flows of each coflow
+    (in layout order) are pilots. `flow_lo`/`width` are per-coflow."""
+    cid = np.asarray(cid, np.int64)
+    pos = np.arange(cid.size, dtype=np.int64) - np.asarray(flow_lo)[cid]
+    return pos < pilot_count(width, pilot_frac)[cid]
+
+
+class SizeEstimator:
+    """Numpy-plane size estimator (stateless recompute per call).
+
+    `estimates(table)` returns per-coflow arrays
+    ``(est_flow, est_total, learned)``:
+
+    * ``learned[c]`` — at least one pilot of c has finished;
+    * ``est_flow[c]`` — estimated max-flow bytes: the mean finished
+      pilot size when learned, else the max bytes SENT by any flow of
+      c so far (the observable fallback);
+    * ``est_total[c]`` — estimated total bytes: ``est_flow * width``
+      when learned, else total bytes sent so far.
+
+    The estimate is a pure function of the flow table, so session
+    rebuilds / epoch rebases need no estimator state migration.
+    """
+
+    def __init__(self, params: SchedulerParams):
+        self.params = params
+
+    def pilot_mask(self, table) -> np.ndarray:
+        return pilot_mask(table.cid, table.flow_lo, table.width,
+                          self.params.pilot_frac)
+
+    def estimates(self, table):
+        C = table.num_coflows
+        pm = self.pilot_mask(table)
+        pdone = pm & table.done
+        n = np.bincount(table.cid[pdone], minlength=C).astype(np.float64)
+        s = np.bincount(table.cid[pdone], weights=table.size[pdone],
+                        minlength=C)
+        learned = n > 0
+        f_hat = s / np.maximum(n, 1.0)
+        sent_max = np.zeros(C)
+        np.maximum.at(sent_max, table.cid, table.sent)
+        sent_tot = np.bincount(table.cid, weights=table.sent, minlength=C)
+        est_flow = np.where(learned, f_hat, sent_max)
+        est_total = np.where(learned, f_hat * np.maximum(table.width, 1),
+                             sent_tot)
+        return est_flow, est_total, learned

@@ -64,7 +64,8 @@ class EngineParams(NamedTuple):
                        work_conservation: "bool | None" = None,
                        dynamics_requeue: "bool | None" = None,
                        lcof: bool = True,
-                       per_flow_threshold: bool = True) -> "EngineParams":
+                       per_flow_threshold: bool = True,
+                       clairvoyant: "bool | None" = None) -> "EngineParams":
         cp = jc.CoordParams.from_params(p)
         cp = cp._replace(
             work_conservation=(cp.work_conservation
@@ -73,7 +74,9 @@ class EngineParams(NamedTuple):
             dynamics_requeue=(cp.dynamics_requeue
                               if dynamics_requeue is None
                               else dynamics_requeue),
-            lcof=lcof, per_flow_threshold=per_flow_threshold)
+            lcof=lcof, per_flow_threshold=per_flow_threshold,
+            clairvoyant=(cp.clairvoyant if clairvoyant is None
+                         else clairvoyant))
         return EngineParams(jc.DynCoordParams.from_cp(cp),
                             jnp.float32(p.delta))
 
@@ -196,7 +199,8 @@ def _segment_max(data: jax.Array, tb: TraceBatch) -> jax.Array:
 
 def _views(state: EngineState, tb: TraceBatch, now: jax.Array,
            eps_t: jax.Array, *, per_flow_wc: bool, with_dynamics: bool,
-           with_ablations: bool, active_gate: Optional[jax.Array] = None):
+           with_ablations: bool, with_sampling: bool = False,
+           active_gate: Optional[jax.Array] = None):
     """One tick's coordinator view of the slab: activation, per-(coflow,
     port) live counts, Eq. 1 m_c, and (when compiled in) the §4.3
     finished-flow-median inputs — shared by the scanned `_tick` and the
@@ -283,11 +287,31 @@ def _views(state: EngineState, tb: TraceBatch, now: jax.Array,
         n_live_c = _segment_sum(livef, tb.flow_lo, tb.flow_hi)
         mixed = active & (n_done > 0) & (n_live_c > 0.5)
 
+    s_mixed = s_m = None
+    if with_sampling:
+        # non-clairvoyant §4.3 inputs: the size estimate is the MEAN of
+        # finished-PILOT sizes (a finished flow's size equals its
+        # delivered bytes, so the estimate only ever reads observable
+        # quantities); coflows whose pilots are all in flight are not
+        # re-queue candidates and keep the bytes-sent Eq. 1 placement.
+        if tb.pilot is None:
+            raise ValueError("with_sampling needs a TraceBatch packed "
+                             "with sampling=True (pilot layout missing)")
+        pdone = (tb.pilot & tb.flow_valid & state.done).astype(jnp.float32)
+        n_p = _segment_sum(pdone, tb.flow_lo, tb.flow_hi)       # (C,)
+        p_sum = _segment_sum(pdone * tb.size, tb.flow_lo, tb.flow_hi)
+        f_hat = p_sum / jnp.maximum(n_p, 1.0)
+        rem_s = jnp.maximum(f_hat[tb.cid] - state.sent, 0.0) * livef
+        s_m = _segment_max(rem_s, tb)
+        n_live_s = _segment_sum(livef, tb.flow_lo, tb.flow_hi)
+        s_mixed = active & (n_p > 0.5) & (n_live_s > 0.5)
+
     batch = jc.CoflowBatch(active=active, arrival=tb.arrival_rank, m=m,
                            width=tb.width, cnt_s=cnt_s, cnt_r=cnt_r,
                            bw_s=tb.bw_send, bw_r=tb.bw_recv,
                            total=total, mixed=mixed, m_dyn=m_dyn,
-                           cnt_x=cnt_x, bw_x=bw_x)
+                           cnt_x=cnt_x, bw_x=bw_x,
+                           s_mixed=s_mixed, s_m=s_m)
     flows = jc.FlowView(cid=tb.cid, src=tb.src, dst=tb.dst, live=live,
                         up=link_up, dn=link_dn) \
         if per_flow_wc else None
@@ -299,6 +323,7 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
           with_dynamics: bool = True,
           with_ablations: bool = False,
           wc_maxmin: bool = False,
+          with_sampling: bool = False,
           n_end: Optional[jax.Array] = None) -> EngineState:
     """Advance one *event step*: schedule at the current δ tick, find the
     next instant the schedule could change (arrival, flow completion,
@@ -338,7 +363,7 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     batch, flows, active, live, livef = _views(
         state, tb, now, eps_t, per_flow_wc=per_flow_wc,
         with_dynamics=with_dynamics, with_ablations=with_ablations,
-        active_gate=can)
+        with_sampling=with_sampling, active_gate=can)
     total = batch.total
     coord, out = jc.tick_core(state.coord, batch, now, ep.dp,
                               kernel=kernel, flows=flows,
@@ -381,7 +406,11 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
     t_arr = jnp.min(jnp.where(tb.coflow_valid & (tb.arrival > now + eps_t),
                               tb.arrival, inf))
     t_ev = jnp.minimum(jnp.minimum(t_fin, t_th), jnp.minimum(t_dl, t_arr))
-    jump = DYNAMICS_JUMP_TICKS if with_dynamics else MAX_JUMP_TICKS
+    # the pilot-sampling estimate drifts continuously too (rem = f_hat -
+    # sent), so learned mode needs the same bounded re-evaluation
+    # cadence as the §4.3 exact-median machinery
+    jump = DYNAMICS_JUMP_TICKS if (with_dynamics or with_sampling) \
+        else MAX_JUMP_TICKS
     n_ev = jnp.where(jnp.isfinite(t_ev),
                      jnp.ceil((t_ev - state.t0) / delta - 1e-4),
                      tickf + jump)
@@ -481,6 +510,17 @@ def _tick(state: EngineState, tb: TraceBatch, ep: EngineParams,
 
 # ---- batched chunk runner ------------------------------------------------
 
+def _norm_features(features: tuple) -> tuple:
+    """Pad a legacy short features tuple to the full 5-slot form
+    `(per_flow_wc, with_dynamics, with_ablations, wc_maxmin,
+    with_sampling)` — later slots default off, so pre-existing 4-tuple
+    (and pool-padded 3-tuple) callers keep their exact structure."""
+    f = tuple(features)
+    if not 1 <= len(f) <= 5:
+        raise ValueError(f"features tuple of length {len(f)}")
+    return f + (False,) * (5 - len(f))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "chunk", "kernel", "sweep", "features"))
 def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
@@ -490,11 +530,13 @@ def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
     reused across chunks so the host completion loop never recompiles).
     sweep=True maps the EngineParams' leading axis alongside the traces.
     `features` = (per_flow_wc, with_dynamics, with_ablations,
-    wc_maxmin), the static structure switches threaded to `_tick`. Offline replays
+    wc_maxmin, with_sampling), the static structure switches threaded to
+    `_tick`. Offline replays
     only: sessions go through `_run_session_block`, whose device-side
     while_loop carries the per-row horizon caps.
     """
-    per_flow_wc, with_dynamics, with_ablations, wc_maxmin = features
+    (per_flow_wc, with_dynamics, with_ablations, wc_maxmin,
+     with_sampling) = _norm_features(features)
     ep_ax = 0 if sweep else None
 
     def scan_ticks(s, tb_row, ep_row):
@@ -503,7 +545,8 @@ def _run_chunk(state: EngineState, tb: TraceBatch, ep: EngineParams,
                          per_flow_wc=per_flow_wc,
                          with_dynamics=with_dynamics,
                          with_ablations=with_ablations,
-                         wc_maxmin=wc_maxmin), None
+                         wc_maxmin=wc_maxmin,
+                         with_sampling=with_sampling), None
         s, _ = jax.lax.scan(body, s, None, length=chunk)
         return s
 
@@ -570,6 +613,7 @@ def simulate_batch(traces: "Sequence | TraceBatch",
                    dynamics_requeue: "bool | None" = None,
                    lcof: bool = True,
                    per_flow_threshold: bool = True,
+                   clairvoyant: "bool | None" = None,
                    fidelity: str = "flow",
                    topology=None,
                    use_pallas: bool = False) -> EngineResult:
@@ -597,13 +641,19 @@ def simulate_batch(traces: "Sequence | TraceBatch",
     features = features_for(
         params, fidelity=fidelity, work_conservation=work_conservation,
         dynamics_requeue=dynamics_requeue, lcof=lcof,
-        per_flow_threshold=per_flow_threshold, topology=topology)
+        per_flow_threshold=per_flow_threshold, topology=topology,
+        clairvoyant=clairvoyant)
+    with_sampling = features[4]
     tb = traces if isinstance(traces, TraceBatch) else \
-        pack(traces, port_bw=params.port_bw, topology=topology)
+        pack(traces, port_bw=params.port_bw, topology=topology,
+             sampling=with_sampling, pilot_frac=params.pilot_frac)
+    if with_sampling and tb.pilot is None:
+        raise ValueError("non-clairvoyant replay needs a TraceBatch "
+                         "packed with sampling=True")
     ep = EngineParams.from_scheduler(
         params, work_conservation=work_conservation,
         dynamics_requeue=dynamics_requeue, lcof=lcof,
-        per_flow_threshold=per_flow_threshold)
+        per_flow_threshold=per_flow_threshold, clairvoyant=clairvoyant)
     return _drive(tb, ep, params.delta, max_ticks, chunk, kernel,
                   sweep=False, features=features)
 
@@ -636,16 +686,33 @@ def simulate_sweep(trace, params_list: Sequence[SchedulerParams], *,
         # per-setting bw would silently run every lane on settings[0]'s
         raise ValueError("sweep settings must share port_bw")
     kernel = resolve_kernel(kernel, use_pallas)
+    sampling_any = any(not p.clairvoyant for p in params_list)
+    if sampling_any and len({p.pilot_frac for p in params_list}) > 1:
+        # the pilot layout is baked into the packed row, which the
+        # sweep repeats — per-setting pilot fractions would need
+        # per-row re-packing
+        raise ValueError("sweep settings must share pilot_frac")
     tb1 = pack([trace], port_bw=params_list[0].port_bw,
-               topology=topology)
+               topology=topology, sampling=sampling_any,
+               pilot_frac=params_list[0].pilot_frac)
     B = len(params_list)
-    tb = TraceBatch(*(np.repeat(a, B, axis=0) for a in tb1))
+    tb = TraceBatch(*(None if a is None else np.repeat(a, B, axis=0)
+                      for a in tb1))
     eps = [EngineParams.from_scheduler(p) for p in params_list]
+    if sampling_any:
+        # dp.clairvoyant must be an ARRAY leaf on every row for the
+        # stack below (1.0 = clairvoyant row inside the mixed sweep)
+        eps = [e if e.dp.clairvoyant is not None else
+               e._replace(dp=e.dp._replace(clairvoyant=jnp.float32(1.0)))
+               for e in eps]
     ep = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *eps)
     min_delta = min(p.delta for p in params_list)
     features = (fidelity == "flow",
-                any(p.dynamics_requeue for p in params_list), False,
-                getattr(topology, "wc_fill", "greedy") == "maxmin")
+                any(p.dynamics_requeue and p.clairvoyant
+                    for p in params_list), False,
+                getattr(topology, "wc_fill", "greedy") == "maxmin",
+                any(p.dynamics_requeue and not p.clairvoyant
+                    for p in params_list))
     return _drive(tb, ep, min_delta, max_ticks, chunk, kernel, sweep=True,
                   features=features)
 
@@ -720,20 +787,28 @@ def features_for(params: SchedulerParams, *, fidelity: str = "flow",
                  dynamics_requeue: "bool | None" = None,
                  lcof: bool = True,
                  per_flow_threshold: bool = True,
-                 topology=None) -> tuple:
+                 topology=None,
+                 clairvoyant: "bool | None" = None) -> tuple:
     """The static `(per_flow_wc, with_dynamics, with_ablations,
-    wc_maxmin)` structure switches `_tick` compiles against, derived
+    wc_maxmin, with_sampling)` structure switches `_tick` compiles
+    against, derived
     exactly as `simulate_batch` derives them — shared with the online
     session so an incremental replay runs the same compiled step
     structure. `wc_maxmin` comes from the topology's `wc_fill` knob
-    (LeafSpine only); the big switch always greedy-fills."""
+    (LeafSpine only); the big switch always greedy-fills. The §4.3
+    re-queue splits by clairvoyance: `with_dynamics` builds the exact
+    finished-flow-median machinery (known sizes), `with_sampling` the
+    pilot-estimate machinery (learned sizes)."""
     if fidelity not in ("flow", "coflow"):
         raise ValueError(f"unknown fidelity {fidelity!r}")
+    dyn = (params.dynamics_requeue if dynamics_requeue is None
+           else dynamics_requeue)
+    cl = params.clairvoyant if clairvoyant is None else clairvoyant
     return (fidelity == "flow",
-            params.dynamics_requeue if dynamics_requeue is None
-            else dynamics_requeue,
+            dyn and cl,
             not (lcof and per_flow_threshold),
-            getattr(topology, "wc_fill", "greedy") == "maxmin")
+            getattr(topology, "wc_fill", "greedy") == "maxmin",
+            dyn and not cl)
 
 
 def _session_while(state: EngineState, tb: TraceBatch, ep: EngineParams,
@@ -746,7 +821,8 @@ def _session_while(state: EngineState, tb: TraceBatch, ep: EngineParams,
     sees, so under `pmap` each device terminates independently — a
     shard whose lanes drain early stops stepping without waiting on
     its neighbors."""
-    per_flow_wc, with_dynamics, with_ablations, wc_maxmin = features
+    (per_flow_wc, with_dynamics, with_ablations, wc_maxmin,
+     with_sampling) = _norm_features(features)
 
     def lanes_open(s):
         tickf = s.tick.astype(jnp.float32)
@@ -764,7 +840,7 @@ def _session_while(state: EngineState, tb: TraceBatch, ep: EngineParams,
                 srow, tbrow, eprow, kernel, per_flow_wc=per_flow_wc,
                 with_dynamics=with_dynamics,
                 with_ablations=with_ablations, wc_maxmin=wc_maxmin,
-                n_end=nerow))(
+                with_sampling=with_sampling, n_end=nerow))(
                     s, tb, n_end, ep)
         return s, steps + 1
 
@@ -838,7 +914,7 @@ def _pmapped_session_block(kernel: Optional[str], features: tuple,
 def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
                     *, n_end, chunk: int = 32,
                     kernel: Optional[str] = None,
-                    features: tuple = (True, True, False, False),
+                    features: tuple = (True, True, False, False, False),
                     max_steps: int = 10_000_000, mesh=None,
                     block: bool = True):
     """Re-enter the jitted tick loop on a live session slab until every
@@ -892,7 +968,7 @@ def session_advance(state: EngineState, tb: TraceBatch, ep: EngineParams,
 @functools.partial(jax.jit, static_argnames=("kernel", "features"))
 def session_plan_tick(state: EngineState, tb: TraceBatch,
                       ep: EngineParams, *, kernel: Optional[str] = None,
-                      features: tuple = (True, False, False, False),
+                      features: tuple = (True, False, False, False, False),
                       row_mask: Optional[jax.Array] = None):
     """One coordinator tick on the slab WITHOUT integrating rates: the
     wave-planning mode `runtime.coflow_bridge.plan_waves` uses (a wave =
@@ -904,7 +980,8 @@ def session_plan_tick(state: EngineState, tb: TraceBatch,
     `ep` carries a leading (B,) row axis (per-tenant parameters, like
     `session_advance`). Returns (state with post-tick coordinator
     carry and tick+1, admitted (B, C) bool)."""
-    per_flow_wc, with_dynamics, with_ablations, wc_maxmin = features
+    (per_flow_wc, with_dynamics, with_ablations, wc_maxmin,
+     with_sampling) = _norm_features(features)
 
     def one(s, tb_row, m, ep_row):
         tickf = s.tick.astype(jnp.float32)
@@ -912,7 +989,8 @@ def session_plan_tick(state: EngineState, tb: TraceBatch,
         eps_t = 1e-3 * ep_row.delta
         batch, flows, _, _, _ = _views(
             s, tb_row, now, eps_t, per_flow_wc=per_flow_wc,
-            with_dynamics=with_dynamics, with_ablations=with_ablations)
+            with_dynamics=with_dynamics, with_ablations=with_ablations,
+            with_sampling=with_sampling)
         coord, out = jc.tick_core(
             s.coord, batch, now, ep_row.dp, kernel=kernel, flows=flows,
             wc_fill="maxmin" if wc_maxmin else "greedy")

@@ -32,8 +32,21 @@ def nan_row_mean(x: np.ndarray) -> np.ndarray:
 
 def percentile_speedup(cct_base: np.ndarray, cct_new: np.ndarray,
                        qs=(10, 50, 90)) -> dict:
-    """Per-coflow speedup = CCT_base / CCT_new (Fig. 9's metric)."""
+    """Per-coflow speedup = CCT_base / CCT_new (Fig. 9's metric).
+
+    When no coflow completed in both runs (empty `ok` mask — overload
+    sweeps hit this on hard points) every statistic is NaN with n=0,
+    mirroring the `nan_row_mean` "silently NaN" contract above.
+    """
+    cct_base = np.asarray(cct_base, float)
+    cct_new = np.asarray(cct_new, float)
     ok = np.isfinite(cct_base) & np.isfinite(cct_new) & (cct_new > 0)
+    if not ok.any():
+        out = {f"p{q}": float("nan") for q in qs}
+        out["mean"] = float("nan")
+        out["overall"] = float("nan")
+        out["n"] = 0
+        return out
     s = cct_base[ok] / cct_new[ok]
     out = {f"p{q}": float(np.percentile(s, q)) for q in qs}
     out["mean"] = float(s.mean())
@@ -98,12 +111,16 @@ class RunSummary:
 
     @staticmethod
     def from_result(policy: str, res) -> "RunSummary":
-        cct = res.table.cct
+        # route through nan_row_mean and pre-filter the percentiles so
+        # an all-NaN CCT column (nothing completed) summarizes to NaN
+        # silently instead of tripping numpy's empty-slice warnings
+        cct = np.asarray(res.table.cct, float)
+        fin = cct[np.isfinite(cct)]
         return RunSummary(
             policy=policy,
-            avg_cct=float(np.nanmean(cct)),
-            p50_cct=float(np.nanpercentile(cct, 50)),
-            p90_cct=float(np.nanpercentile(cct, 90)),
+            avg_cct=float(nan_row_mean(cct[None, :])[0]),
+            p50_cct=float(np.percentile(fin, 50)) if fin.size else float("nan"),
+            p90_cct=float(np.percentile(fin, 90)) if fin.size else float("nan"),
             makespan=res.makespan,
             steps=res.steps,
             sched_seconds=res.sched_seconds,

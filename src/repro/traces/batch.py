@@ -83,6 +83,11 @@ class TraceBatch(NamedTuple):
     hi_up: np.ndarray       # (B, C, Lf) int32 group end
     lo_dn: np.ndarray       # (B, C, Lf) int32
     hi_dn: np.ndarray       # (B, C, Lf) int32
+    # non-clairvoyant pilot layout (core.sampling): each coflow's first
+    # K_c flows in slab order are its pilots. None = sampling compiled
+    # out — an empty pytree subtree, so every pre-existing jaxpr is
+    # byte-identical (the Lf=0 leaf-spine pattern).
+    pilot: np.ndarray | None = None  # (B, F) bool
 
     @property
     def num_traces(self) -> int:
@@ -107,13 +112,20 @@ class TraceBatch(NamedTuple):
         jitted tick compiles the link machinery in or out)."""
         return self.bw_up.shape[1]
 
+    @property
+    def has_pilots(self) -> bool:
+        """Sampling layout packed in? (STATIC — compiled in or out.)"""
+        return self.pilot is not None
+
     def row(self, b: int) -> "TraceBatch":
         """Single-trace slice, keeping the (1, ...) batch axis."""
-        return TraceBatch(*(a[b:b + 1] for a in self))
+        return TraceBatch(*(None if a is None else a[b:b + 1]
+                            for a in self))
 
 
 def empty_batch(num_rows: int, *, flow_capacity: int, coflow_capacity: int,
-                port_capacity: int, leaf_links: int = 0) -> TraceBatch:
+                port_capacity: int, leaf_links: int = 0,
+                sampling: bool = False) -> TraceBatch:
     """An all-padding TraceBatch: every row is a blank slab row (no
     valid coflows or flows). This is the `SessionPool`'s backing store —
     rows are written in place with `pack_row` as sessions submit and
@@ -154,6 +166,7 @@ def empty_batch(num_rows: int, *, flow_capacity: int, coflow_capacity: int,
         hi_up=np.zeros((B, C, Lf), np.int32),
         lo_dn=np.zeros((B, C, Lf), np.int32),
         hi_dn=np.zeros((B, C, Lf), np.int32),
+        pilot=np.zeros((B, F), bool) if sampling else None,
     )
 
 
@@ -190,10 +203,13 @@ def blank_row(tb: TraceBatch, b: int) -> None:
     tb.hi_up[b] = 0
     tb.lo_dn[b] = 0
     tb.hi_dn[b] = 0
+    if tb.pilot is not None:
+        tb.pilot[b] = False
 
 
 def pack_row(tb: TraceBatch, b: int, t: FlowTable, *,
-             arrival_rank=None, topology=None) -> None:
+             arrival_rank=None, topology=None,
+             pilot_frac: float = 0.1) -> None:
     """Write one FlowTable into slab row `b` in place (blanking it
     first), recomputing the row's host-side permutations/segment
     layouts. `arrival_rank` overrides the per-row arrival argsort with
@@ -247,6 +263,13 @@ def pack_row(tb: TraceBatch, b: int, t: FlowTable, *,
     # correct segment of real flows in this permutation too.
     tb.perm_size[b] = np.lexsort(
         (tb.size[b], ~tb.flow_valid[b], tb.cid[b])).astype(np.int32)
+    if tb.pilot is not None:
+        # pilot layout (core.sampling): first K_c flows per coflow in
+        # slab order — identical to the numpy SizeEstimator's rule
+        from repro.core.sampling import pilot_mask
+
+        tb.pilot[b, :f] = pilot_mask(t.cid, t.flow_lo, t.width,
+                                     pilot_frac)
     # leaf-spine link layout (blank_row already reset it to "no links")
     Lf = tb.bw_up.shape[1]
     need = 0 if topology is None else topology.leaf_count(t.num_ports)
@@ -281,7 +304,7 @@ def row_of(tb: TraceBatch, b: int) -> tuple:
     `SessionPool`'s dirty-row scatter path stages host-side (pack into a
     1-row scratch with `pack_row`, slice with `row_of`, stack the dirty
     set with `stack_rows`, scatter once)."""
-    return tuple(np.array(a[b]) for a in tb)
+    return tuple(None if a is None else np.array(a[b]) for a in tb)
 
 
 def stack_rows(rows: Sequence[tuple]) -> TraceBatch:
@@ -289,14 +312,16 @@ def stack_rows(rows: Sequence[tuple]) -> TraceBatch:
     (the host-side half of `jax_engine.scatter_rows`)."""
     if not rows:
         raise ValueError("stack_rows needs at least one row")
-    return TraceBatch(*(np.stack(cols) for cols in zip(*rows)))
+    return TraceBatch(*(None if cols[0] is None else np.stack(cols)
+                        for cols in zip(*rows)))
 
 
 def pack(traces: Sequence[Union[Trace, FlowTable]], *,
          port_bw: float = None,
          flow_multiple: int = 64, coflow_multiple: int = 16,
          flow_capacity: int = 0, coflow_capacity: int = 0,
-         port_capacity: int = 0, topology=None) -> TraceBatch:
+         port_capacity: int = 0, topology=None,
+         sampling: bool = False, pilot_frac: float = 0.1) -> TraceBatch:
     """Pad/pack traces (or FlowTables) into one TraceBatch.
 
     `port_bw` is required when packing `Trace` objects (FlowTables carry
@@ -343,9 +368,9 @@ def pack(traces: Sequence[Union[Trace, FlowTable]], *,
             topo = None      # BigSwitch: no link leaves at all
 
     tb = empty_batch(B, flow_capacity=F, coflow_capacity=C,
-                     port_capacity=P, leaf_links=Lf)
+                     port_capacity=P, leaf_links=Lf, sampling=sampling)
     for b, t in enumerate(tables):
-        pack_row(tb, b, t, topology=topo)
+        pack_row(tb, b, t, topology=topo, pilot_frac=pilot_frac)
     return tb
 
 

@@ -24,6 +24,35 @@ from repro.core.coflow import Coflow, Flow, Trace
 MB = 1024.0 * 1024.0
 GBPS = 1e9 / 8.0
 
+_FLOW_FLOOR = 1024.0
+
+
+def _floor_preserving_total(per: np.ndarray, total: float) -> np.ndarray:
+    """Apply the 1 KB per-flow floor WITHOUT inflating the coflow total.
+
+    Clamping after normalization (`np.maximum(per, 1024.0)`) silently
+    adds bytes on skewed coflows and drifts the Table-1 size bins.
+    Instead, flows at the floor are fixed and the remainder is
+    renormalized into the leftover budget, iterating until no flow
+    falls below the floor. When the floor is infeasible
+    (total < w * 1KB) the bytes are split equally. Deterministic —
+    pure arithmetic on `per`, no RNG draws."""
+    per = np.asarray(per, float).copy()
+    w = per.size
+    if total <= _FLOW_FLOOR * w:
+        return np.full(w, total / w)
+    fixed = np.zeros(w, bool)
+    for _ in range(w):
+        budget = total - _FLOW_FLOOR * fixed.sum()
+        free = ~fixed
+        per[free] *= budget / per[free].sum()
+        low = free & (per < _FLOW_FLOOR)
+        if not low.any():
+            break
+        fixed |= low
+        per[fixed] = _FLOW_FLOOR
+    return per
+
 
 def fb_like_trace(num_coflows: int = 526, num_ports: int = 150, *,
                   seed: int = 0, load: float = 0.9,
@@ -77,7 +106,7 @@ def fb_like_trace(num_coflows: int = 526, num_ports: int = 150, *,
             else:
                 skew = np.exp(rng.normal(0.0, 1.0, w))
                 per = total * skew / skew.sum()
-            per = np.maximum(per, 1024.0)
+            per = _floor_preserving_total(per, total)
             flows = []
             i = 0
             for s in senders:

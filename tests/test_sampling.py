@@ -1,0 +1,296 @@
+"""Non-clairvoyant Saath (ISSUE 10): pilot-flow size learning.
+
+* `core.sampling`: pilot layout (first K flows of a coflow in slab
+  order) and the `SizeEstimator` update rule — mean finished-pilot
+  size, falling back to bytes-sent-so-far before the first pilot
+  completes, converging to the exact coflow size as pilots finish.
+* clairvoyant=True must be semantics-FREE: the default engine call is
+  byte-identical to the pre-PR program (the sampling machinery is an
+  empty pytree subtree — the dispatch audit pins the jaxprs), and a
+  mixed sweep that compiles sampling IN must leave its clairvoyant
+  rows bitwise unchanged (the traced switch only masks).
+* learned mode agrees across planes (numpy reference vs XLA engine)
+  and actually changes the schedule versus known sizes.
+* serving plane: a learned-mode tenant joining a pinned sampling pool
+  never recompiles; a pool pinned WITHOUT sampling refuses one.
+
+Plus the ISSUE-10 bugfix-sweep regressions (metrics empty-mask /
+all-NaN summaries, synth 1KB-floor byte conservation).
+"""
+import dataclasses
+import types
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.coflow import Coflow, Flow, Trace
+from repro.core.params import SchedulerParams
+from repro.core.policies import make_policy
+from repro.core.sampling import SizeEstimator, pilot_count, pilot_mask
+from repro.fabric import jax_engine
+from repro.fabric.engine import Simulator
+from repro.fabric.metrics import RunSummary, percentile_speedup
+from repro.fabric.state import FlowTable
+from repro.traces.synth import fb_like_trace, tiny_trace
+
+PORTS = 12
+# toy-scale params for the hand-built shuffles below (unit sizes);
+# tiny_trace emits FB-scale byte counts, so the engine/pool tests run
+# under the DEFAULT params (Gbps ports) with the §4.3 re-queue on
+FULL = SchedulerParams(port_bw=1.0, delta=1e-2, start_threshold=4.0,
+                       growth=4.0, num_queues=5, dynamics_requeue=True)
+DYN = SchedulerParams(dynamics_requeue=True)
+
+
+def _shuffle(widths, sizes=None, seed=0):
+    """One coflow per width, all flows port-disjoint per coflow."""
+    rng = np.random.default_rng(seed)
+    coflows, fid = [], 0
+    for c, w in enumerate(widths):
+        per = np.full(w, 6.0) if sizes is None else np.asarray(sizes[c])
+        flows = [Flow(fid + i, int(rng.integers(0, PORTS)),
+                      int(rng.integers(0, PORTS)), float(per[i]))
+                 for i in range(w)]
+        fid += w
+        coflows.append(Coflow(c, 0.4 * c, flows))
+    return Trace(num_ports=PORTS, coflows=coflows)
+
+
+# ---- pilot layout + estimator ----------------------------------------
+
+
+def test_pilot_count_and_mask_layout():
+    w = np.array([1, 4, 10, 40])
+    k = pilot_count(w, 0.1)
+    # K = min(width, max(1, ceil(frac * width))): every coflow pilots
+    # at least one flow, never more than it has
+    assert k.tolist() == [1, 1, 1, 4]
+    assert pilot_count(w, 0.5).tolist() == [1, 2, 5, 20]
+    cid = np.array([0, 0, 0, 1, 1, 1, 1])
+    lo = np.array([0, 3])
+    m = pilot_mask(cid, lo, np.array([3, 4]), 0.5)
+    # pilots are the FIRST K flows of each coflow in layout order
+    assert m.tolist() == [True, True, False, True, True, False, False]
+
+
+def test_estimator_converges_as_pilots_finish():
+    p = dataclasses.replace(FULL, clairvoyant=False, pilot_frac=0.5)
+    tr = _shuffle([6])                      # 6 equal flows of 6.0
+    table = FlowTable.from_trace(tr, p.port_bw)
+    est = SizeEstimator(p)
+    pm = est.pilot_mask(table)
+    assert pm.sum() == 3                    # ceil(0.5 * 6)
+
+    # before the first pilot completes: fall back to bytes sent so far
+    table.sent[:] = 1.5
+    ef, et, learned = est.estimates(table)
+    assert not learned[0]
+    assert et[0] == pytest.approx(9.0)      # 6 x 1.5 bytes in flight
+    assert ef[0] == pytest.approx(1.5)      # max flow bytes sent
+
+    # pilots finish one by one: the estimate is exact (equal flows)
+    for npilots in (1, 2, 3):
+        table.done[:] = False
+        table.done[:npilots] = True
+        table.sent[:npilots] = 6.0
+        ef, et, learned = est.estimates(table)
+        assert learned[0]
+        assert ef[0] == pytest.approx(6.0)
+        assert et[0] == pytest.approx(36.0)  # the exact coflow total
+
+
+def test_estimator_unequal_pilots_use_the_mean():
+    p = dataclasses.replace(FULL, clairvoyant=False, pilot_frac=0.5)
+    tr = _shuffle([4], sizes=[[2.0, 10.0, 7.0, 5.0]])
+    table = FlowTable.from_trace(tr, p.port_bw)
+    table.done[:2] = True
+    table.sent[:2] = [2.0, 10.0]
+    ef, et, learned = SizeEstimator(p).estimates(table)
+    assert learned[0]
+    assert ef[0] == pytest.approx(6.0)      # mean(2, 10)
+    assert et[0] == pytest.approx(24.0)     # f_hat * width
+
+
+# ---- clairvoyant=True is the pre-PR engine ---------------------------
+
+
+def test_clairvoyant_explicit_bitwise_equals_default():
+    traces = [tiny_trace(8, PORTS, seed=s, load=1.2) for s in (0, 1)]
+    base = jax_engine.simulate_batch(traces, DYN)
+    expl = jax_engine.simulate_batch(traces, DYN, clairvoyant=True)
+    np.testing.assert_array_equal(np.asarray(base.cct),
+                                  np.asarray(expl.cct))
+    np.testing.assert_array_equal(np.asarray(base.fct),
+                                  np.asarray(expl.fct))
+
+
+def test_mixed_sweep_keeps_clairvoyant_rows_bitwise():
+    """Compiling the sampling machinery IN (a learned row in the
+    sweep) must not perturb a clairvoyant row by a single bit: the
+    traced switch only masks the estimator's queue choice."""
+    tr = tiny_trace(10, PORTS, seed=3, load=1.2)
+    solo = jax_engine.simulate_batch([tr], DYN)
+    learned = dataclasses.replace(DYN, clairvoyant=False)
+    sweep = jax_engine.simulate_sweep(tr, [DYN, learned])
+    np.testing.assert_array_equal(np.asarray(sweep.cct[0]),
+                                  np.asarray(solo.cct[0]))
+    # ...and the learned row is a genuinely different schedule
+    a = np.asarray(sweep.cct[1])
+    assert not np.array_equal(a, np.asarray(solo.cct[0]))
+    assert np.isfinite(a).any()
+
+
+def test_numpy_clairvoyant_skips_the_estimator():
+    pol = make_policy("saath", FULL)
+    assert pol.estimator is None            # estimator never allocated
+    learned = make_policy(
+        "saath", dataclasses.replace(FULL, clairvoyant=False))
+    assert learned.estimator is not None
+
+
+# ---- learned-mode cross-plane agreement ------------------------------
+
+
+def test_learned_mode_matches_numpy_reference():
+    p = dataclasses.replace(DYN, clairvoyant=False)
+    traces = [tiny_trace(10, PORTS, seed=s, load=1.2) for s in (5, 6)]
+    res = jax_engine.simulate_batch(traces, p)
+    for b, tr in enumerate(traces):
+        table = FlowTable.from_trace(tr, p.port_bw)
+        Simulator(p).run(table, make_policy("saath", p))
+        got = res.cct[b, :len(tr.coflows)]
+        assert res.finished[b].all()
+        np.testing.assert_allclose(got, table.cct, rtol=1e-2,
+                                   atol=2 * p.delta)
+
+
+def test_learned_mode_changes_the_schedule():
+    tr = tiny_trace(12, PORTS, seed=7, load=2.0)
+    known = jax_engine.simulate_batch([tr], DYN)
+    p = dataclasses.replace(DYN, clairvoyant=False)
+    learned = jax_engine.simulate_batch([tr], p)
+    assert not np.array_equal(np.asarray(known.cct),
+                              np.asarray(learned.cct))
+
+
+# ---- serving plane ---------------------------------------------------
+
+
+def test_pool_learned_tenant_join_never_recompiles():
+    """A pool pinned with sampling compiled in admits a learned-mode
+    tenant mid-flight as pure data movement: the pilot leaf and the
+    traced clairvoyant parameter row are already part of the warm
+    executables."""
+    from repro.analysis.sanitize import assert_no_recompiles
+    from repro.api.pool import SessionPool
+
+    pool = SessionPool(DYN, num_ports=PORTS, max_sessions=4,
+                       min_flow_capacity=256,
+                       features=(True, True, False, False, True))
+    a = pool.session()
+    a.submit(tiny_trace(4, PORTS, seed=3, load=1.5).coflows)
+    pool.advance(0.5)                      # compile the fleet programs
+    b = pool.session()                     # warm the join path too
+    b.submit(tiny_trace(4, PORTS, seed=4, load=1.5).coflows)
+    pool.advance(0.5)
+    pool.poll()
+    with assert_no_recompiles():
+        c = pool.session(mechanisms={"clairvoyant": False})
+        c.submit(tiny_trace(4, PORTS, seed=5, load=1.5).coflows)
+        pool.advance(0.5)
+    pool.poll()                            # gather idx shape varies —
+    pool.advance(60.0)                     # correctness stays outside
+    assert {s for s, _ in pool.poll()} <= {a, b, c}
+
+
+def test_pool_without_sampling_pin_rejects_learned_tenant():
+    from repro.api.pool import SessionPool
+
+    pool = SessionPool(DYN, num_ports=PORTS, max_sessions=2,
+                       features=(True, True, False, False))
+    pool.session()                         # clairvoyant default is fine
+    with pytest.raises(ValueError, match="with_sampling"):
+        pool.session(mechanisms={"clairvoyant": False})
+
+
+def test_session_learned_mode_cross_backend():
+    p = dataclasses.replace(DYN, clairvoyant=False)
+    from repro.api.session import SaathSession
+
+    ccts = {}
+    for backend in ("jax", "numpy"):
+        s = SaathSession(p, num_ports=PORTS, backend=backend)
+        s.submit(tiny_trace(8, PORTS, seed=9, load=1.5).coflows)
+        done = {}
+        for _ in range(4000):
+            s.advance(0.05)
+            for d in s.poll():
+                done[d.handle] = d.cct
+            if len(done) == 8:
+                break
+        assert len(done) == 8
+        ccts[backend] = np.array([done[h] for h in sorted(done)])
+    np.testing.assert_allclose(ccts["jax"], ccts["numpy"], rtol=1e-2)
+
+
+# ---- ISSUE-10 bugfix sweep regressions -------------------------------
+
+
+def test_percentile_speedup_empty_ok_mask():
+    # pre-PR: IndexError on np.percentile of an empty speedup vector
+    nan = np.full(4, np.nan)
+    out = percentile_speedup(nan, nan)
+    assert out["n"] == 0
+    for k in ("p10", "p50", "p90", "mean", "overall"):
+        assert np.isnan(out[k])
+    out = percentile_speedup(np.array([]), np.array([]))
+    assert out["n"] == 0 and np.isnan(out["p50"])
+
+
+def test_run_summary_all_nan_cct_is_silent():
+    # pre-PR: "Mean of empty slice" RuntimeWarning from np.nanmean
+    res = types.SimpleNamespace(
+        table=types.SimpleNamespace(cct=np.full(3, np.nan)),
+        makespan=0.0, steps=0, sched_seconds=0.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s = RunSummary.from_result("saath", res)
+    assert np.isnan(s.avg_cct) and np.isnan(s.p50_cct) \
+        and np.isnan(s.p90_cct)
+
+
+def test_fb_like_floor_conserves_coflow_totals():
+    """The 1KB per-flow floor must renormalize INSIDE the drawn coflow
+    total, not inflate it (pre-PR: `np.maximum(per, 1024)` after
+    normalization added bytes on every skewed wide coflow). The drawn
+    totals are reconstructible because they come off the RNG stream
+    before any per-coflow draws."""
+    seed, n = 11, 60
+    MB = 1024.0 * 1024.0
+    rng = np.random.default_rng(seed)
+    rng.uniform(size=n)                     # kind draws
+    want = np.clip(np.exp(rng.normal(np.log(30 * MB), 2.3, n)),
+                   64 * 1024, 4e12)
+    tr = fb_like_trace(n, 40, seed=seed, frac_equal_of_multi=0.0)
+    for c in tr.coflows:
+        got = sum(f.size for f in c.flows)
+        assert got == pytest.approx(want[c.cid], rel=1e-9), \
+            f"coflow {c.cid} ({len(c.flows)} flows) inflated its total"
+
+
+def test_floor_helper_edge_cases():
+    from repro.traces.synth import _FLOW_FLOOR, _floor_preserving_total
+
+    # heavy skew: floored flows pinned, remainder renormalized
+    per = np.array([1e8, 10.0, 20.0, 5e7])
+    out = _floor_preserving_total(per.copy(), per.sum())
+    assert out.sum() == pytest.approx(per.sum())
+    assert (out >= _FLOW_FLOOR - 1e-9).all()
+    # infeasible floor (total < w * 1KB): equal split, still conserved
+    out = _floor_preserving_total(np.array([900.0, 100.0]), 1000.0)
+    np.testing.assert_allclose(out, [500.0, 500.0])
+    # deterministic: same input, same output
+    a = _floor_preserving_total(per.copy(), per.sum())
+    b = _floor_preserving_total(per.copy(), per.sum())
+    np.testing.assert_array_equal(a, b)
